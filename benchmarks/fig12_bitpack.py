@@ -1,0 +1,50 @@
+"""Paper Fig. 12: bit-packing (Fully-Parallel) decompression throughput vs bit width.
+
+ZipFlow (fused, native geometry) vs the baseline backend (fixed library geometry, the
+nvCOMP role).  The dashed-line theoretical max of the paper (Eq. 1) is reported as the
+derived column.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import gbps, modeled_tpu_throughput_gbps, row, time_fn
+from repro.core import plan as P
+from repro.core.compiler import compile_decoder, device_buffers
+from repro.core.geometry import CHIPS, Geometry, analytic_cost_ns, native_config
+
+N = 1 << 21  # 8 MiB of int32 per point (CPU-sized; paper used 4 GB on A100)
+
+
+def tpu_model_ms(pattern: str, n: int, native: bool) -> float:
+    """Modeled v5e kernel time: native geometry vs the fixed library config --
+    the hardware-aware-scheduling differentiator the CPU wall clock cannot show."""
+    spec = CHIPS["v5e"]
+    g = native_config(pattern, spec) if native else Geometry(1, 8, 128)
+    return analytic_cost_ns(pattern, g, n, 4, spec) * 1e-6
+
+
+def main(quick: bool = False) -> list[str]:
+    rng = np.random.default_rng(0)
+    rows = []
+    widths = [4, 13, 25] if quick else [1, 4, 8, 13, 17, 21, 25, 29, 32]
+    for bw in widths:
+        hi = 2**bw - 1 if bw < 32 else 2**31 - 1
+        arr = rng.integers(0, hi, N, dtype=np.int64).astype(np.int32)
+        enc = P.encode(P.Plan("bitpack", params={"bit_width": bw}), arr)
+        bufs = device_buffers(enc)
+        for label, backend in (("zipflow", "jnp"), ("baseline", "baseline")):
+            dec = compile_decoder(enc, backend=backend)
+            t = time_fn(dec, bufs)
+            theo = modeled_tpu_throughput_gbps(enc.plain_nbytes,
+                                               enc.compressed_nbytes)
+            rows.append(row(
+                f"fig12/bitpack_bw{bw}_{label}", t,
+                f"cpu_gbps={gbps(enc.plain_nbytes, t):.2f};"
+                f"ratio={enc.ratio:.2f};tpu_eq1_gbps={theo:.0f};"
+                f"tpu_model_ms={tpu_model_ms('fp', N, label == 'zipflow'):.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Paper Fig. 13: RLE (Group-Parallel) decompression under group-size distributions
+(even / random / outlier / mixed).  The balanced output-centric kernel's throughput
+should be insensitive to skew; the baseline materializes more and has fixed geometry.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import gbps, modeled_tpu_throughput_gbps, row, time_fn
+from benchmarks.fig12_bitpack import tpu_model_ms
+from repro.core import plan as P
+from repro.core.compiler import compile_decoder, device_buffers
+
+N = 1 << 21
+
+
+def _counts(dist: str, rng) -> np.ndarray:
+    if dist.startswith("even"):
+        k = int(dist[4:])
+        return np.full(N // k, k)
+    if dist == "random":
+        c = rng.integers(1, 256, N // 96)
+        return c
+    if dist == "outlier":
+        c = np.where(rng.random(N // 8) < 0.004, 1024, 1)
+        return c
+    if dist == "mixed":
+        return np.concatenate([np.full(N // 8, 4),
+                               np.where(rng.random(N // 16) < 0.01, 2048, 1)])
+    raise ValueError(dist)
+
+
+def main(quick: bool = False) -> list[str]:
+    rng = np.random.default_rng(1)
+    rows = []
+    dists = ["even4", "outlier"] if quick else \
+        ["even2", "even16", "even256", "random", "outlier", "mixed"]
+    for dist in dists:
+        counts = _counts(dist, rng)
+        csum = np.cumsum(counts)
+        counts = counts[: int(np.searchsorted(csum, N)) + 1]
+        values = rng.integers(0, 4096, counts.size).astype(np.int32)
+        arr = np.repeat(values, counts).astype(np.int32)
+        enc = P.encode(P.Plan("rle", children={"counts": P.make_plan("bitpack"),
+                                               "values": P.make_plan("bitpack")}),
+                       arr)
+        bufs = device_buffers(enc)
+        for label, backend in (("zipflow", "jnp"), ("baseline", "baseline")):
+            dec = compile_decoder(enc, backend=backend)
+            t = time_fn(dec, bufs)
+            theo = modeled_tpu_throughput_gbps(enc.plain_nbytes,
+                                               enc.compressed_nbytes)
+            rows.append(row(
+                f"fig13/rle_{dist}_{label}", t,
+                f"cpu_gbps={gbps(enc.plain_nbytes, t):.2f};"
+                f"ratio={enc.ratio:.2f};tpu_eq1_gbps={theo:.0f};"
+                f"tpu_model_ms={tpu_model_ms('gp', N, label == 'zipflow'):.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Paper Fig. 14: ANS (Non-Parallel) throughput vs compression ratio (left) and vs
+frequency skew (right).  ZipFlow's lockstep decode does constant work per symbol, so
+throughput tracks the ratio and ignores skew."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import gbps, row, time_fn
+from repro.core import plan as P
+from repro.core.compiler import compile_decoder, device_buffers
+
+N = 1 << 21
+
+
+def main(quick: bool = False) -> list[str]:
+    rng = np.random.default_rng(2)
+    rows = []
+    # left: sweep alphabet size -> compression ratio
+    alphabet = [2, 16] if quick else [2, 4, 16, 64, 192]
+    for a in alphabet:
+        arr = rng.integers(0, a, N).astype(np.uint8)
+        enc = P.encode(P.Plan("ans", params={"chunk_size": 4096}), arr)
+        dec = compile_decoder(enc)
+        t = time_fn(dec, device_buffers(enc))
+        rows.append(row(f"fig14/ans_alpha{a}", t,
+                        f"cpu_gbps={gbps(N, t):.3f};ratio={enc.ratio:.2f}"))
+    # right: fixed alphabet, sweep skew
+    skews = [0.34, 0.95] if quick else [0.34, 0.6, 0.8, 0.95]
+    for s in skews:
+        arr = rng.choice(np.arange(3, dtype=np.uint8) + 65, N,
+                         p=[s, (1 - s) / 2, (1 - s) / 2]).astype(np.uint8)
+        enc = P.encode(P.Plan("ans", params={"chunk_size": 4096}), arr)
+        dec = compile_decoder(enc)
+        t = time_fn(dec, device_buffers(enc))
+        rows.append(row(f"fig14/ans_skew{int(s * 100)}", t,
+                        f"cpu_gbps={gbps(N, t):.3f};ratio={enc.ratio:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Paper Fig. 15: ANS chunk-size sweep x input size -- the ratio/parallelism
+trade-off.  Larger chunks amortize per-chunk state+padding (better ratio); smaller
+chunks give more lockstep lanes (throughput on wide machines)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import gbps, row, time_fn
+from repro.core import plan as P
+from repro.core.compiler import compile_decoder, device_buffers
+
+
+def main(quick: bool = False) -> list[str]:
+    rng = np.random.default_rng(3)
+    rows = []
+    sizes = [1 << 18] if quick else [1 << 18, 1 << 21, 1 << 23]
+    chunks = [1024, 8192] if quick else [512, 1024, 4096, 16384, 65536]
+    for n in sizes:
+        arr = rng.choice(np.arange(4, dtype=np.uint8) + 60, n,
+                         p=[.55, .25, .15, .05]).astype(np.uint8)
+        for cs in chunks:
+            if cs > n:
+                continue
+            enc = P.encode(P.Plan("ans", params={"chunk_size": cs}), arr)
+            dec = compile_decoder(enc)
+            t = time_fn(dec, device_buffers(enc), iters=3)
+            rows.append(row(
+                f"fig15/ans_n{n >> 10}k_cs{cs}", t,
+                f"cpu_gbps={gbps(n, t):.3f};ratio={enc.ratio:.2f};"
+                f"lanes={enc.meta['n_chunks']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

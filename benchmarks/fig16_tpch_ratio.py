@@ -1,0 +1,69 @@
+"""Paper Fig. 16 + Table 2: per-column compression ratios on TPC-H.
+
+ZipFlow custom nestings (Table 2) vs:
+  * "cascaded" -- nvCOMP-Cascaded role: best of {RLE, delta, bitpack} nestings only
+    (no dictionary / Float2Int / String-dictionary support, per paper Table 1);
+  * zstd -- general-purpose CPU baseline (the Parquet+zstd role).
+"""
+from __future__ import annotations
+
+import numpy as np
+import zstandard
+
+from benchmarks.common import row
+from repro.core import plan as P
+from repro.data.columns import TABLE2_PLANS
+from repro.data.tpch import generate
+
+CASCADED = [
+    P.make_plan("bitpack"),
+    P.Plan("delta", children={"deltas": P.make_plan("bitpack")}),
+    P.Plan("rle", children={"counts": P.make_plan("bitpack"),
+                            "values": P.make_plan("bitpack")}),
+    P.Plan("rle", children={
+        "counts": P.make_plan("bitpack"),
+        "values": P.Plan("delta", children={"deltas": P.make_plan("bitpack")})}),
+]
+
+
+def best_cascaded(arr: np.ndarray) -> float:
+    best = 1.0
+    for pl in CASCADED:
+        try:
+            best = max(best, P.encode(pl, arr).ratio)
+        except (TypeError, ValueError):
+            continue
+    return best
+
+
+def main(quick: bool = False) -> list[str]:
+    cols = generate(scale=0.002 if quick else 0.01, seed=0)
+    rows = []
+    agg = {"zipflow": [0, 0], "cascaded": [0, 0], "zstd": [0, 0]}
+    for name, pl in TABLE2_PLANS.items():
+        arr = cols[name]
+        enc = P.encode(pl, arr)
+        z = zstandard.ZstdCompressor(level=6).compress(
+            np.ascontiguousarray(arr).tobytes())
+        r_zstd = arr.nbytes / max(len(z), 1)
+        # the cascaded framework has no string/float support (paper Table 1):
+        # such columns move uncompressed under that baseline
+        r_casc = best_cascaded(arr) if arr.dtype.kind in "iu" \
+            and arr.dtype != np.uint8 else 1.0
+        agg["zipflow"][0] += enc.plain_nbytes
+        agg["zipflow"][1] += enc.compressed_nbytes
+        agg["cascaded"][0] += arr.nbytes
+        agg["cascaded"][1] += arr.nbytes / max(r_casc, 1.0)
+        agg["zstd"][0] += arr.nbytes
+        agg["zstd"][1] += len(z)
+        rows.append(row(
+            f"fig16/{name}", 0.0,
+            f"plan={pl.describe()};zipflow={enc.ratio:.2f};"
+            f"cascaded={r_casc:.2f};zstd={r_zstd:.2f}"))
+    for k, (p, c) in agg.items():
+        rows.append(row(f"fig16/TOTAL_{k}", 0.0, f"ratio={p / max(c, 1):.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

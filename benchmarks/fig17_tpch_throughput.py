@@ -1,0 +1,35 @@
+"""Paper Fig. 17: per-column decompression throughput on TPC-H (ZipFlow vs the
+unfused fixed-geometry baseline), with the compression-ratio advantage as the
+derived column."""
+from __future__ import annotations
+
+from benchmarks.common import gbps, row, time_fn
+from repro.core import plan as P
+from repro.core.compiler import compile_decoder, device_buffers
+from repro.data.columns import TABLE2_PLANS
+from repro.data.tpch import generate
+
+QUICK_COLS = ["L_PARTKEY", "L_SHIPDATE", "L_EXTENDEDPRICE", "L_ORDERKEY",
+              "L_RETURNFLAG", "O_COMMENT"]
+
+
+def main(quick: bool = False) -> list[str]:
+    cols = generate(scale=0.002 if quick else 0.005, seed=0)
+    rows = []
+    names = QUICK_COLS if quick else list(TABLE2_PLANS)
+    for name in names:
+        enc = P.encode(TABLE2_PLANS[name], cols[name])
+        bufs = device_buffers(enc)
+        t_zip = time_fn(compile_decoder(enc, backend="jnp", fuse=True), bufs,
+                        iters=3)
+        t_base = time_fn(compile_decoder(enc, backend="baseline"), bufs, iters=3)
+        rows.append(row(
+            f"fig17/{name}", t_zip,
+            f"cpu_gbps={gbps(enc.plain_nbytes, t_zip):.2f};"
+            f"baseline_gbps={gbps(enc.plain_nbytes, t_base):.2f};"
+            f"speedup={t_base / t_zip:.2f};ratio={enc.ratio:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Paper Fig. 18 + Eq. 2: kernel-fusion ablation on the three nested functions
+(Float2Int+BP on L_EXTENDEDPRICE, Dictionary+BP on L_SHIPDATE, RLE+BP on
+L_ORDERKEY).  Reports measured CPU speedup, stage counts, and the Eq.-2 modeled
+HBM-traffic ratio."""
+from __future__ import annotations
+
+from benchmarks.common import row, time_fn
+from repro.core import plan as P
+from repro.core.compiler import compile_decoder, device_buffers
+from repro.core.fusion import fuse, hbm_traffic_bytes
+from repro.core.plan import lower
+from repro.data.columns import TABLE2_PLANS
+from repro.data.tpch import generate
+
+CASES = {"f2i+bp": "L_EXTENDEDPRICE", "dict+bp": "L_SHIPDATE",
+         "rle+bp": "L_ORDERKEY"}
+
+
+def main(quick: bool = False) -> list[str]:
+    cols = generate(scale=0.002 if quick else 0.01, seed=0)
+    rows = []
+    for label, col in CASES.items():
+        enc = P.encode(TABLE2_PLANS[col], cols[col])
+        bufs = device_buffers(enc)
+        dec_f = compile_decoder(enc, fuse=True)
+        dec_u = compile_decoder(enc, fuse=False)
+        t_f = time_fn(dec_f, bufs, iters=3)
+        t_u = time_fn(dec_u, bufs, iters=3)
+        unfused = lower(enc)
+        traffic_ratio = hbm_traffic_bytes(unfused, bufs) / \
+            max(hbm_traffic_bytes(fuse(list(unfused)), bufs), 1)
+        rows.append(row(
+            f"fig18/{label}", t_f,
+            f"speedup={t_u / t_f:.2f};kernels={dec_u.n_kernels}->"
+            f"{dec_f.n_kernels};eq2_traffic_ratio={traffic_ratio:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

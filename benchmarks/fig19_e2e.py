@@ -1,0 +1,108 @@
+"""Paper Fig. 19/20/21: end-to-end TPC-H query latency.
+
+Per query: move the query's columns host->device and decompress, then run query
+processing (a JAX mini-engine executes Q1 and Q6 fully; other queries report the
+data-movement phase, the paper's dominant term -- 91.3% of noCOMP latency).
+
+Configurations (paper Fig. 20 labels):
+  noCOMP -- raw column transfer;
+  N      -- cascaded-only compression, no fusion, fixed geometry (nvCOMP role);
+  C      -- ZipFlow compression, no transfer/decode pipelining;
+  Z      -- full ZipFlow incl. Johnson-ordered pipelining.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import plan as P, scheduler
+from repro.core.compiler import compile_decoder, device_buffers
+from repro.data.columns import TABLE2_PLANS
+from repro.data.loader import ColumnPipeline
+from repro.data.tpch import QUERY_COLUMNS, generate
+from benchmarks.fig16_tpch_ratio import CASCADED
+
+
+from repro.data.queries import ENGINES, q1_engine, q6_engine  # noqa: E402
+
+
+def best_cascaded_plan(arr):
+    best, br = None, 0.0
+    for pl in CASCADED:
+        if arr.dtype.kind not in "iu" or arr.dtype == np.uint8:
+            continue
+        try:
+            r = P.encode(pl, arr).ratio
+        except (TypeError, ValueError):
+            continue
+        if r > br:
+            best, br = pl, r
+    return best
+
+
+def _move_raw(cols):
+    t0 = time.perf_counter()
+    out = {k: jax.device_put(v) for k, v in cols.items()}
+    jax.block_until_ready(list(out.values()))
+    return out, time.perf_counter() - t0
+
+
+def main(quick: bool = False) -> list[str]:
+    cols = generate(scale=0.002 if quick else 0.01, seed=0)
+    rows = []
+    queries = [1, 6, 13] if quick else sorted(QUERY_COLUMNS)
+    speedups = []
+    for q in queries:
+        names = QUERY_COLUMNS[q]
+        qcols = {n: cols[n] for n in names}
+        # --- noCOMP ---
+        moved, t_raw = _move_raw(qcols)
+        # --- N: cascaded-only, unfused ---
+        t_casc = 0.0
+        for n, arr in qcols.items():
+            pl = best_cascaded_plan(arr)
+            if pl is None:
+                _, dt = _move_raw({n: arr})
+                t_casc += dt
+                continue
+            enc = P.encode(pl, arr)
+            dec = compile_decoder(enc, backend="baseline")
+            t0 = time.perf_counter()
+            bufs = device_buffers(enc)
+            jax.block_until_ready(list(bufs.values()))
+            jax.block_until_ready(dec(bufs))
+            t_casc += time.perf_counter() - t0
+        # --- C / Z: ZipFlow without / with pipelining ---
+        pipe = ColumnPipeline({n: TABLE2_PLANS[n] for n in names})
+        pipe.compress(qcols)
+        t_c = pipe.modeled_makespan(pipeline=False)
+        t_z = pipe.modeled_makespan(pipeline=True, johnson=True)
+        # --- query execution phase (engine, identical across configs) ---
+        t_engine = 0.0
+        if q in ENGINES:
+            eng = jax.jit(ENGINES[q])
+            jax.block_until_ready(eng(
+                {k: jnp.asarray(v) for k, v in qcols.items()}))
+            t0 = time.perf_counter()
+            jax.block_until_ready(eng(
+                {k: jnp.asarray(v) for k, v in qcols.items()}))
+            t_engine = time.perf_counter() - t0
+        total_z = t_z + t_engine
+        total_n = t_casc + t_engine
+        speedups.append(total_n / max(total_z, 1e-9))
+        rows.append(row(
+            f"fig19/q{q}", total_z,
+            f"noCOMP={t_raw + t_engine:.4f}s;N={total_n:.4f}s;"
+            f"C={t_c + t_engine:.4f}s;Z={total_z:.4f}s;"
+            f"engine={t_engine:.4f}s;zipflow_vs_cascaded={speedups[-1]:.2f}x"))
+    rows.append(row("fig19/MEAN_speedup_vs_cascaded", 0.0,
+                    f"x{float(np.mean(speedups)):.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

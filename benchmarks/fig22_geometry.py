@@ -1,0 +1,44 @@
+"""Paper Fig. 22 + Table 3: native-vs-shared geometry configs across 4 chips, and
+the cost of finding them (brute force vs monotonicity-pruned search)."""
+from __future__ import annotations
+
+from benchmarks.common import row
+from repro.core.autotune import analytic_measure, brute_force, pruned_search
+from repro.core.geometry import CHIPS, analytic_cost_ns, native_config
+
+
+def main(quick: bool = False) -> list[str]:
+    rows = []
+    chips = ["v5e", "v6e"] if quick else ["v4", "v5e", "v5p", "v6e"]
+    patterns = ["fp", "gp"] if quick else ["fp", "gp", "np"]
+    # Fig 22: shared-config degradation matrix
+    for pattern in patterns:
+        for target in chips:
+            native = native_config(pattern, CHIPS[target])
+            c_nat = analytic_cost_ns(pattern, native, 1 << 24, 4, CHIPS[target])
+            worst = 1.0
+            for src in chips:
+                if src == target:
+                    continue
+                shared = native_config(pattern, CHIPS[src])
+                c_sh = analytic_cost_ns(pattern, shared, 1 << 24, 4,
+                                        CHIPS[target])
+                worst = max(worst, c_sh / c_nat)
+            rows.append(row(f"fig22/{pattern}_{target}", c_nat * 1e-9,
+                            f"native={native};worst_shared_degradation="
+                            f"{(worst - 1) * 100:.1f}%"))
+    # Table 3: search cost
+    for pattern in patterns:
+        spec = CHIPS["v5e"]
+        measure = analytic_measure(pattern, spec)
+        bf = brute_force(pattern, spec, measure)
+        pr = pruned_search(pattern, spec, measure)
+        rows.append(row(
+            f"table3/{pattern}_search", 0.0,
+            f"bruteforce_probes={bf.probes};pruned_probes={pr.probes};"
+            f"same_optimum={pr.cost <= bf.cost * 1.001}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""§Roofline table generator: reads the dry-run JSON records and emits the per-cell
+three-term roofline rows (also used to refresh EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import row
+
+
+def load_records(out_dir: str = "experiments/dryrun") -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def main(quick: bool = False) -> list[str]:
+    rows = []
+    recs = load_records()
+    if not recs:
+        rows.append(row("roofline/NO_DRYRUN_DATA", 0.0,
+                        "run: python -m repro.launch.dryrun --all --mesh both"))
+        return rows
+    for r in recs:
+        tag = f"{r['arch']}/{r['shape']}/{'mp' if 'multi' in r.get('mesh', '') else 'sp'}"
+        if r.get("status") != "ok":
+            rows.append(row(f"roofline/{tag}", 0.0,
+                            f"status={str(r.get('status'))[:60]}"))
+            continue
+        rf = r["roofline"]
+        rows.append(row(
+            f"roofline/{tag}", rf["step_time"],
+            f"bottleneck={rf['bottleneck']};t_c={rf['t_compute'] * 1e3:.1f}ms;"
+            f"t_m={rf['t_memory'] * 1e3:.1f}ms;"
+            f"t_coll={rf['t_collective'] * 1e3:.1f}ms;"
+            f"useful_flops={rf['useful_flops_frac'] * 100:.0f}%;"
+            f"bw_frac={rf.get('bw_frac', 0) * 100:.0f}%;"
+            f"roofline_frac={rf['roofline_frac'] * 100:.2f}%;"
+            f"mem_gib={r['memory']['per_device_live'] / 2**30:.1f};"
+            f"fits={r['memory']['fits_16g_hbm']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Generate EXPERIMENTS.md from the dry-run record directories."""
+import glob, json, os, sys
+
+def load(d):
+    recs = {}
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        r = json.load(open(f))
+        recs[(r["arch"], r["shape"], "mp" if "multi" in str(r.get("mesh","")) else "sp")] = r
+    return recs
+
+base = load("experiments/baseline")
+opt = load("experiments/optimized")
+
+rows = []
+for key in sorted(base):
+    b = base[key]
+    tag = f"| {key[0]} | {key[1]} | {key[2]} "
+    if b.get("status") != "ok":
+        rows.append(tag + f"| — | — | — | *{str(b.get('status'))[:58]}* | — | — | — |")
+        continue
+    r = b["roofline"]
+    rows.append(tag + f"| {r['t_compute']*1e3:,.0f} | {r['t_memory']*1e3:,.0f} | {r['t_collective']*1e3:,.0f} "
+                f"| {r['bottleneck']} | {r['useful_flops_frac']*100:.0f}% | {r['roofline_frac']*100:.2f}% "
+                f"| {b['memory']['per_device_live']/2**30:.1f} {'OK' if b['memory']['fits_16g_hbm'] else 'OVER'} |")
+table = ("| arch | shape | mesh | t_compute (ms) | t_memory (ms) | t_collective (ms) | bottleneck "
+         "| MODEL/HLO flops | roofline frac | mem GiB/dev |\n|---|---|---|---|---|---|---|---|---|---|\n"
+         + "\n".join(rows))
+open("/tmp/roofline_table.md","w").write(table)
+print("baseline cells:", len(base), "ok:", sum(1 for r in base.values() if r.get('status')=='ok'))
+
+# optimized deltas for the hillclimbed cells
+print("\n== optimized vs baseline (available so far) ==")
+for key in sorted(opt):
+    if key not in base: continue
+    b, o = base[key], opt[key]
+    if b.get("status") != "ok" or o.get("status") != "ok": continue
+    rb, ro = b["roofline"], o["roofline"]
+    d_step = rb["step_time"]/max(ro["step_time"],1e-12)
+    if abs(d_step-1) > 0.03:
+        print(f"{key}: step {rb['step_time']:.2f}->{ro['step_time']:.2f}s ({d_step:.2f}x) "
+              f"frac {rb['roofline_frac']*100:.2f}->{ro['roofline_frac']*100:.2f}% "
+              f"mem {b['memory']['per_device_live']/2**30:.1f}->{o['memory']['per_device_live']/2**30:.1f}G")

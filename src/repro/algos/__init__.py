@@ -1,0 +1,4 @@
+"""Algorithm Layer (paper §3.2): primitive (de)compression codecs built on the three
+patterns.  Importing this package registers every codec."""
+from repro.algos import (ans, bitpack, delta, deltastride, dictionary,  # noqa: F401
+                         float2int, rle, stringdict)

@@ -1,0 +1,106 @@
+"""Bit-packing + Frame-of-Reference (paper §2.1, Fully-Parallel family).
+
+Encode: subtract the column minimum (FOR), pack each value into ``bit_width`` bits,
+little-endian within a stream of uint32 words.  ``bit_width`` <= 32.
+
+Decode (Fully-Parallel): out[i] spans at most two words:
+    bitpos = i*bw;  w = bitpos >> 5;  off = bitpos & 31
+    v = (word[w] >> off | word[w+1] << (32-off)) & mask;  out = v + base
+The closure is gather-capable (evaluable at arbitrary i) so fusion can absorb it into
+Group-Parallel value gathers -- the paper's Fig. 7(c).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.patterns import BufSpec, Ctx, FullyParallel
+from repro.core.registry import register
+
+
+def required_bits(span: int) -> int:
+    return max(1, int(span).bit_length()) if span > 0 else 0
+
+
+def pack_np(values: np.ndarray, bit_width: int) -> np.ndarray:
+    """Pack non-negative ints < 2^bit_width into uint32 words (+1 guard word)."""
+    n = values.size
+    v = values.astype(np.uint64)
+    n_words = (n * bit_width + 31) // 32 + 1  # +1 guard for the cross-word read
+    packed = np.zeros(n_words, dtype=np.uint64)
+    bitpos = np.arange(n, dtype=np.uint64) * np.uint64(bit_width)
+    w = (bitpos >> np.uint64(5)).astype(np.int64)
+    off = bitpos & np.uint64(31)
+    np.bitwise_or.at(packed, w, (v << off) & np.uint64(0xFFFFFFFF))
+    np.bitwise_or.at(packed, w + 1, v >> (np.uint64(32) - off))
+    return packed.astype(np.uint32)
+
+
+def unpack_np(packed: np.ndarray, n: int, bit_width: int) -> np.ndarray:
+    p = packed.astype(np.uint64)
+    bitpos = np.arange(n, dtype=np.uint64) * np.uint64(bit_width)
+    w = (bitpos >> np.uint64(5)).astype(np.int64)
+    off = bitpos & np.uint64(31)
+    both = p[w] | (p[w + 1] << np.uint64(32))
+    mask = np.uint64((1 << bit_width) - 1)
+    return ((both >> off) & mask).astype(np.int64)
+
+
+class BitpackCodec:
+    name = "bitpack"
+    pattern = "fp"
+
+    def encode(self, arr: np.ndarray, bit_width: int | None = None,
+               **_: Any) -> tuple[dict[str, np.ndarray], dict]:
+        flat = np.asarray(arr).reshape(-1)
+        if np.issubdtype(flat.dtype, np.floating):
+            raise TypeError("bitpack expects integers (use float2int first)")
+        base = int(flat.min()) if flat.size else 0
+        shifted = (flat.astype(np.int64) - base)
+        bw = bit_width if bit_width is not None else required_bits(int(shifted.max())
+                                                                   if flat.size else 0)
+        bw = max(1, min(32, bw))
+        if shifted.size and int(shifted.max()) >= (1 << bw):
+            raise ValueError(f"bit_width {bw} too small for span {int(shifted.max())}")
+        return ({"packed": pack_np(shifted, bw)},
+                {"bit_width": bw, "base": base})
+
+    def decode_np(self, bufs: dict[str, np.ndarray], meta: dict, n: int,
+                  dtype: Any) -> np.ndarray:
+        vals = unpack_np(bufs["packed"], n, meta["bit_width"]) + meta["base"]
+        return vals.astype(dtype)
+
+    def stages(self, enc, buf_names: dict[str, str], out_name: str) -> list:
+        bw = int(enc.meta["bit_width"])
+        # wrap to int32: zigzag payloads can have 32-bit bases; consumers of such
+        # payloads (delta) work mod 2^32 by construction
+        base = int(np.int64(enc.meta["base"]).astype(np.int32))
+        mask = np.uint32((1 << bw) - 1) if bw < 32 else np.uint32(0xFFFFFFFF)
+        out_dt = jnp.dtype(enc.dtype) if np.dtype(enc.dtype).itemsize <= 4 else jnp.int32
+
+        def fn(ctx: Ctx, packed: jnp.ndarray) -> jnp.ndarray:
+            i = ctx.out_idx
+            start = ctx.starts[0] if ctx.starts and ctx.starts[0] is not None else 0
+            # overflow-safe split of bitpos = i*bw (i*bw would wrap int32 for large n):
+            # w = (i>>5)*bw + ((i&31)*bw)>>5,  off = ((i&31)*bw) & 31
+            frac = (i & 31) * bw
+            w = (i >> 5) * bw + (frac >> 5) - start
+            off = (frac & 31).astype(jnp.uint32)
+            last = packed.shape[0] - 1
+            lo = packed[w] >> off
+            hi_shift = (jnp.uint32(32) - off) & jnp.uint32(31)
+            hi = jnp.where(off == 0, jnp.uint32(0),
+                           packed[jnp.minimum(w + 1, last)] << hi_shift)
+            v = (lo | hi) & mask
+            return (v.astype(jnp.int32) + base).astype(out_dt)
+
+        return [FullyParallel(
+            fn=fn, inputs=(buf_names["packed"],),
+            specs=(BufSpec("tile", num=bw, den=32),),
+            out=out_name, n_out=enc.n, out_dtype=out_dt,
+            elementwise=False, name="bitpack")]
+
+
+register(BitpackCodec())

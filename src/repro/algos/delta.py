@@ -1,0 +1,75 @@
+"""Delta encoding (paper §2.1, Fully-Parallel family + cumsum auxiliary).
+
+Encode: d[i] = arr[i] - arr[i-1] (d[0] = 0, base = arr[0]); deltas are zigzag-mapped to
+non-negative ints so a child bit-packing plan applies (the Parquet-style
+delta|bit-packing nesting).  Decode: un-zigzag (F.P.) -> prefix sum + base (Aux; the
+paper uses PyTorch's cumsum for exactly this role, Fig. 7(a)).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.patterns import Aux, BufSpec, Ctx, FullyParallel, primary
+from repro.core.registry import register
+
+
+_MASK32 = np.int64(0xFFFFFFFF)
+
+
+def zigzag32_np(d: np.ndarray) -> np.ndarray:
+    """32-bit zigzag of *wrapped* int32 deltas -> values in [0, 2^32).
+
+    Deltas of int32 data can span 33 bits; working mod 2^32 keeps every delta a
+    32-bit word and the mod-2^32 prefix sum still reconstructs exactly."""
+    d32 = (d.astype(np.int64) & _MASK32).astype(np.uint32).astype(np.int32) \
+        .astype(np.int64)
+    return ((d32 << 1) ^ (d32 >> 63)) & _MASK32
+
+
+def unzigzag32_np(z: np.ndarray) -> np.ndarray:
+    z = z.astype(np.uint64)
+    return ((z >> np.uint64(1)) ^ (np.uint64(0) - (z & np.uint64(1)))) \
+        .astype(np.uint32).astype(np.int64)
+
+
+class DeltaCodec:
+    name = "delta"
+    pattern = "fp"
+
+    def encode(self, arr: np.ndarray, **_: Any) -> tuple[dict[str, np.ndarray], dict]:
+        flat = np.asarray(arr).reshape(-1).astype(np.int64)
+        base = int(flat[0]) if flat.size else 0
+        d = np.diff(flat, prepend=flat[:1] if flat.size else np.zeros(1, np.int64))
+        return {"deltas": zigzag32_np(d)}, {"base": base}
+
+    def decode_np(self, bufs: dict[str, np.ndarray], meta: dict, n: int,
+                  dtype: Any) -> np.ndarray:
+        d = unzigzag32_np(np.asarray(bufs["deltas"]))
+        vals = (np.cumsum(d) + meta["base"]) & _MASK32
+        return vals.astype(np.uint32).astype(np.int32).astype(dtype)
+
+    def stages(self, enc, buf_names: dict[str, str], out_name: str) -> list:
+        base = int(enc.meta["base"])
+        out_dt = jnp.dtype(enc.dtype) if np.dtype(enc.dtype).itemsize <= 4 else jnp.int32
+        mid = f"{out_name}.unzig"
+
+        def unzig(ctx: Ctx, z: jnp.ndarray) -> jnp.ndarray:
+            zu = primary(ctx, z).astype(jnp.uint32)
+            return ((zu >> 1) ^ (jnp.uint32(0) - (zu & 1))).astype(jnp.int32)
+
+        def prefix(d: jnp.ndarray) -> jnp.ndarray:
+            return jnp.cumsum(d) + jnp.int32(np.int64(base).astype(np.int32))
+
+        return [
+            FullyParallel(fn=unzig, inputs=(buf_names["deltas"],),
+                          specs=(BufSpec("tile"),), out=mid, n_out=enc.n,
+                          out_dtype=jnp.int32, elementwise=True, name="unzigzag"),
+            Aux(fn=prefix, inputs=(mid,), out=out_name, n_out=enc.n,
+                out_dtype=out_dt, name="delta-cumsum"),
+        ]
+
+
+register(DeltaCodec())

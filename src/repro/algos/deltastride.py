@@ -1,0 +1,103 @@
+"""DeltaStride (paper §5.3: an RLE variant for monotone sequences; Group-Parallel).
+
+Encode: maximal runs of constant stride -> (start, stride, count) triples.  A sorted
+primary-key column becomes a handful of triples.  Decode: out[i] = start[g] +
+stride[g] * pos, a Group-Parallel expansion with an affine map function.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.patterns import Aux, BufSpec, Ctx, GroupParallel, primary
+from repro.core.registry import register
+
+
+def deltastride_encode_np(flat: np.ndarray):
+    """Greedy maximal constant-stride runs, vectorized.
+
+    Let d = diff(flat) and rb = [0, c_1, ..., c_k, len(d)] the boundaries of maximal
+    equal-value runs of d.  The first diff-run claims elements [0, rb[1]]; every later
+    diff-run [rb[k], rb[k+1]) claims elements [rb[k]+1, rb[k+1]] (its boundary element
+    already belongs to the previous run).  Counts therefore telescope to n exactly.
+    """
+    n = flat.size
+    flat64 = flat.astype(np.int64)
+    if n == 0:
+        z = np.zeros(0, np.int64)
+        return z, z, z
+    if n == 1:
+        return flat64[:1], np.zeros(1, np.int64), np.ones(1, np.int64)
+    d = np.diff(flat64)
+    change = np.flatnonzero(np.diff(d) != 0) + 1
+    rb = np.concatenate([[0], change, [d.size]])  # diff-run boundaries, len k+2
+    k = rb.size - 1                               # number of diff-runs
+    counts = np.empty(k, np.int64)
+    counts[0] = rb[1] + 1
+    counts[1:] = np.diff(rb)[1:]
+    first_elem = np.empty(k, np.int64)
+    first_elem[0] = 0
+    first_elem[1:] = rb[1:-1] + 1
+    starts = flat64[first_elem]
+    strides = d[rb[:-1]]
+    return starts, strides, counts
+
+
+class DeltaStrideCodec:
+    name = "deltastride"
+    pattern = "gp"
+
+    def encode(self, arr: np.ndarray, **_: Any) -> tuple[dict[str, np.ndarray], dict]:
+        flat = np.asarray(arr).reshape(-1)
+        starts, strides, counts = deltastride_encode_np(flat)
+        return ({"starts": starts.astype(np.int32),
+                 "strides": strides.astype(np.int32),
+                 "counts": counts.astype(np.int32)},
+                {"n_groups": int(counts.size)})
+
+    def decode_np(self, bufs: dict[str, np.ndarray], meta: dict, n: int,
+                  dtype: Any) -> np.ndarray:
+        starts = np.asarray(bufs["starts"]).astype(np.int64)
+        strides = np.asarray(bufs["strides"]).astype(np.int64)
+        counts = np.asarray(bufs["counts"]).astype(np.int64)
+        g = np.repeat(np.arange(counts.size), counts)
+        presum = np.concatenate([[0], np.cumsum(counts)])
+        pos = np.arange(g.size) - presum[g]
+        return (starts[g] + strides[g] * pos)[:n].astype(dtype)
+
+    def stages(self, enc, buf_names: dict[str, str], out_name: str) -> list:
+        out_dt = jnp.dtype(enc.dtype) if np.dtype(enc.dtype).itemsize <= 4 else jnp.int32
+        presum_name = f"{out_name}.presum"
+
+        def presum(counts: jnp.ndarray) -> jnp.ndarray:
+            z = jnp.zeros((1,), jnp.int32)
+            return jnp.concatenate([z, jnp.cumsum(counts.astype(jnp.int32))])
+
+        def value_fn(ctx: Ctx, g, starts, strides):
+            c = Ctx(out_idx=g, starts=ctx.starts[:1])
+            c2 = Ctx(out_idx=g, starts=ctx.starts[1:2])
+            return primary(c, starts), primary(c2, strides)
+
+        def map_fn(ctx: Ctx, gval, pos, g):
+            start, stride = gval
+            return start.astype(jnp.int32) + stride.astype(jnp.int32) * pos
+
+        gp = GroupParallel(
+            presum=presum_name,
+            value_inputs=(buf_names["starts"], buf_names["strides"]),
+            value_specs=(BufSpec("tile"), BufSpec("tile")),
+            value_fn=value_fn, map_fn=map_fn,
+            out=out_name, n_out=enc.n, out_dtype=out_dt,
+            n_groups=int(enc.meta["n_groups"]), name="deltastride-expand")
+        gp._identity_values = False  # type: ignore[attr-defined]
+        return [
+            Aux(fn=presum, inputs=(buf_names["counts"],), out=presum_name,
+                n_out=int(enc.meta["n_groups"]) + 1, out_dtype=jnp.int32,
+                name="ds-presum"),
+            gp,
+        ]
+
+
+register(DeltaStrideCodec())

@@ -1,0 +1,48 @@
+"""Dictionary encoding (paper §2.1/Fig. 6(a), Fully-Parallel family).
+
+Encode: unique values -> dictionary; data -> indices.  Decode is a parallel table
+lookup with the dictionary resident in VMEM ("the Dictionary is provided as
+metadata").  The index buffer is the natural child-plan slot (dictionary|bit-packing,
+paper Table 2's date columns).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.patterns import BufSpec, Ctx, FullyParallel, primary
+from repro.core.registry import register
+
+
+class DictionaryCodec:
+    name = "dictionary"
+    pattern = "fp"
+
+    def encode(self, arr: np.ndarray, **_: Any) -> tuple[dict[str, np.ndarray], dict]:
+        flat = np.asarray(arr).reshape(-1)
+        dictionary, index = np.unique(flat, return_inverse=True)
+        return ({"index": index.astype(np.int32), "dictionary": dictionary},
+                {"n_dict": int(dictionary.size)})
+
+    def decode_np(self, bufs: dict[str, np.ndarray], meta: dict, n: int,
+                  dtype: Any) -> np.ndarray:
+        return np.asarray(bufs["dictionary"])[
+            np.asarray(bufs["index"]).astype(np.int64)].astype(dtype)
+
+    def stages(self, enc, buf_names: dict[str, str], out_name: str) -> list:
+        out_dt = jnp.dtype(enc.dtype) if np.dtype(enc.dtype).itemsize <= 4 else jnp.int32
+
+        def fn(ctx: Ctx, index: jnp.ndarray, dictionary: jnp.ndarray) -> jnp.ndarray:
+            idx = primary(ctx, index)
+            return dictionary[idx]
+
+        return [FullyParallel(
+            fn=fn, inputs=(buf_names["index"], buf_names["dictionary"]),
+            specs=(BufSpec("tile"), BufSpec("full")),
+            out=out_name, n_out=enc.n, out_dtype=out_dt,
+            elementwise=True, name="dict-lookup")]
+
+
+register(DictionaryCodec())

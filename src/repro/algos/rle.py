@@ -1,0 +1,70 @@
+"""Run-Length Encoding (paper §2.1/§3.1, the Group-Parallel exemplar).
+
+Encode: maximal runs -> (values, counts).  Decode: presum = exclusive-prefix-sum of
+counts (the one-time data scan), then the balanced Group-Parallel expansion replicates
+values[g] across out[presum[g] : presum[g+1]].
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.patterns import Aux, BufSpec, Ctx, GroupParallel, primary
+from repro.core.registry import register
+
+
+def rle_encode_np(flat: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    if flat.size == 0:
+        return flat[:0], np.zeros(0, np.int64)
+    change = np.flatnonzero(np.diff(flat) != 0) + 1
+    starts = np.concatenate([[0], change])
+    counts = np.diff(np.concatenate([starts, [flat.size]]))
+    return flat[starts], counts.astype(np.int64)
+
+
+class RleCodec:
+    name = "rle"
+    pattern = "gp"
+
+    def encode(self, arr: np.ndarray, **_: Any) -> tuple[dict[str, np.ndarray], dict]:
+        flat = np.asarray(arr).reshape(-1)
+        values, counts = rle_encode_np(flat)
+        return ({"values": values, "counts": counts.astype(np.int32)},
+                {"n_groups": int(values.size)})
+
+    def decode_np(self, bufs: dict[str, np.ndarray], meta: dict, n: int,
+                  dtype: Any) -> np.ndarray:
+        return np.repeat(np.asarray(bufs["values"]),
+                         np.asarray(bufs["counts"]).astype(np.int64))[:n].astype(dtype)
+
+    def stages(self, enc, buf_names: dict[str, str], out_name: str) -> list:
+        out_dt = jnp.dtype(enc.dtype) if np.dtype(enc.dtype).itemsize <= 4 else jnp.int32
+        presum_name = f"{out_name}.presum"
+
+        def presum(counts: jnp.ndarray) -> jnp.ndarray:
+            z = jnp.zeros((1,), jnp.int32)
+            return jnp.concatenate([z, jnp.cumsum(counts.astype(jnp.int32))])
+
+        def value_fn(ctx: Ctx, g: jnp.ndarray, values: jnp.ndarray) -> jnp.ndarray:
+            return primary(Ctx(out_idx=g, starts=ctx.starts), values)
+
+        def map_fn(ctx: Ctx, gval, pos, g):
+            return gval
+
+        gp = GroupParallel(
+            presum=presum_name, value_inputs=(buf_names["values"],),
+            value_specs=(BufSpec("tile"),), value_fn=value_fn, map_fn=map_fn,
+            out=out_name, n_out=enc.n, out_dtype=out_dt,
+            n_groups=int(enc.meta["n_groups"]), name="rle-expand")
+        gp._identity_values = True  # type: ignore[attr-defined]
+        return [
+            Aux(fn=presum, inputs=(buf_names["counts"],), out=presum_name,
+                n_out=int(enc.meta["n_groups"]) + 1, out_dtype=jnp.int32,
+                name="rle-presum"),
+            gp,
+        ]
+
+
+register(RleCodec())

@@ -1,0 +1,11 @@
+"""ZipFlow core: patterns, plans, fusion, geometry scheduling, pipelining."""
+from repro.core.compiler import compile_decoder, decode_on_device, device_buffers
+from repro.core.geometry import CHIPS, Geometry, chip, native_config
+from repro.core.plan import Encoded, Plan, decode_np, encode, flat_buffers, lower, make_plan
+from repro.core.scheduler import Job, johnson_order, makespan, schedule
+
+__all__ = [
+    "CHIPS", "Encoded", "Geometry", "Job", "Plan", "chip", "compile_decoder",
+    "decode_np", "decode_on_device", "device_buffers", "encode", "flat_buffers",
+    "johnson_order", "lower", "make_plan", "makespan", "native_config", "schedule",
+]

@@ -1,0 +1,94 @@
+"""ZipFlow compiler driver: compressed blob -> executable on-device decoder.
+
+``compile_decoder`` lowers a blob's plan tree to pattern stages, runs the fusion pass,
+binds a device geometry per stage (native config of the target chip unless overridden),
+and returns a jitted function ``bufs -> decoded array``.
+
+Backends:
+  * "jnp"      -- pure jax.numpy stages (reference semantics; fast on CPU; also what a
+                  TPU falls back to when a shape is hostile to the Pallas kernels).
+  * "pallas"   -- the Pallas TPU kernels of ``repro.kernels`` (interpret=True off-TPU).
+  * "baseline" -- the nvCOMP role: fixed geometry, **no fusion**, every stage
+                  materializes its output (paper §5.2/§5.3 baseline behaviour).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fusion as fusion_mod
+from repro.core import plan as plan_mod
+from repro.core.geometry import DEFAULT_CHIP, Geometry, chip as chip_spec, native_config
+from repro.core.patterns import Aux, FullyParallel, GroupParallel, NonParallel, Stage
+
+
+@dataclasses.dataclass
+class CompiledDecoder:
+    fn: Callable[[dict[str, jnp.ndarray]], jnp.ndarray]
+    stages: list[Stage]
+    backend: str
+    n_kernels: int
+
+    def __call__(self, bufs: dict[str, jnp.ndarray]) -> jnp.ndarray:
+        return self.fn(bufs)
+
+
+def _run_stage(st: Stage, bufs: dict[str, jnp.ndarray], backend: str,
+               geoms: dict[str, Geometry], interpret: bool) -> jnp.ndarray:
+    if backend == "pallas" and not isinstance(st, Aux):
+        from repro.kernels import ops
+
+        return ops.run_stage(st, bufs, geoms, interpret=interpret)
+    return st.run_jnp(bufs)
+
+
+def compile_decoder(enc: plan_mod.Encoded, backend: str = "jnp", fuse: bool = True,
+                    chip: str = DEFAULT_CHIP,
+                    geometry: dict[str, Geometry] | None = None,
+                    interpret: bool | None = None,
+                    jit: bool = True) -> CompiledDecoder:
+    if backend == "baseline":
+        fuse = False
+    stages = plan_mod.lower(enc)
+    final_out = stages[-1].out
+    if fuse:
+        stages = fusion_mod.fuse(stages, final_out=final_out)
+    spec = chip_spec(chip)
+    geoms = geometry or {p: native_config(p, spec) for p in ("fp", "gp", "np")}
+    if backend == "baseline":
+        # fixed library geometry, deliberately not adapted to the chip (paper §5.2)
+        geoms = {"fp": Geometry(1, 8, 128), "gp": Geometry(1, 8, 128),
+                 "np": Geometry(1, 8, 128)}
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    def decode(bufs: dict[str, jnp.ndarray]) -> jnp.ndarray:
+        env = dict(bufs)
+        out = None
+        for st in stages:
+            out = _run_stage(st, env, backend, geoms, interpret)
+            env[st.out] = out
+        return out
+
+    fn = jax.jit(decode) if jit else decode
+    return CompiledDecoder(fn=fn, stages=stages, backend=backend,
+                           n_kernels=len(stages))
+
+
+def device_buffers(enc: plan_mod.Encoded, device=None,
+                   sharding=None) -> dict[str, jnp.ndarray]:
+    """Move a blob's leaf buffers host->device (the compressed transfer itself)."""
+    flat = plan_mod.flat_buffers(enc)
+    put = functools.partial(jax.device_put, device=sharding or device)
+    return {k: put(v) for k, v in flat.items()}
+
+
+def decode_on_device(enc: plan_mod.Encoded, backend: str = "jnp",
+                     **kw: Any) -> jnp.ndarray:
+    """One-shot helper: transfer + decode."""
+    dec = compile_decoder(enc, backend=backend, **kw)
+    return dec(device_buffers(enc))

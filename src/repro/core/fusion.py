@@ -1,0 +1,175 @@
+"""Plan-level kernel fusion (paper §3.2 Fig. 7(c), §4 'Scheduling Fully-Parallel with
+Fusion', and the §5.3.3 ablation).
+
+Rules, applied to a lowered stage list until fixpoint:
+
+  1. FP -> FP        : compose map closures (single kernel, no intermediate round-trip).
+  2. FP -> GP.values : absorb the producer into the Group-Parallel kernel's value
+                       gather (the paper's "bit-packing that generates the value tensor
+                       is fused with the Group-Parallel kernel inside RLE").
+  3. GP -> FP        : absorb an elementwise consumer into the expansion kernel's
+                       output map (e.g. type casts, dictionary lookups after RLE).
+  4. NP -> FP        : absorb an elementwise consumer into the chunked decoder's
+                       output map.
+  5. FP -> Aux       : inline the producer into the auxiliary whole-array op (the
+                       cumsum that computes `presum` consumes bit-packed counts without
+                       materializing them; cheap on-the-fly in XLA).
+
+A buffer may only be fused away if it has exactly one consumer and is not the plan's
+final output.  Memory-traffic accounting for each rule follows the paper's Eq. 2: every
+avoided materialization saves one write + one read of the intermediate at HBM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro.core.patterns import (Aux, Ctx, FullyParallel, GroupParallel, NonParallel,
+                                 Stage, compose_fp)
+
+
+def _use_counts(stages: Sequence[Stage]) -> dict[str, int]:
+    uses: dict[str, int] = {}
+    for st in stages:
+        ins: tuple[str, ...] = ()
+        if isinstance(st, FullyParallel):
+            ins = st.inputs
+        elif isinstance(st, GroupParallel):
+            ins = (st.presum,) + st.value_inputs + st.extra_inputs
+        elif isinstance(st, NonParallel):
+            ins = (st.streams, st.states, st.sym_tab, st.freq_tab, st.cum_tab)
+        elif isinstance(st, Aux):
+            ins = st.inputs
+        for name in ins:
+            uses[name] = uses.get(name, 0) + 1
+    return uses
+
+
+def fuse(stages: list[Stage], final_out: str | None = None) -> list[Stage]:
+    """Run fusion to fixpoint; returns a new stage list."""
+    stages = list(stages)
+    final_out = final_out or (stages[-1].out if stages else None)
+    changed = True
+    while changed:
+        changed = False
+        uses = _use_counts(stages)
+        producer = {st.out: i for i, st in enumerate(stages)}
+        for ci, cons in enumerate(stages):
+            # --- rule 1: FP -> FP -------------------------------------------------
+            if isinstance(cons, FullyParallel) and cons.elementwise and cons.inputs:
+                pi = producer.get(cons.inputs[0])
+                if pi is not None and isinstance(stages[pi], FullyParallel):
+                    prod = stages[pi]
+                    if uses.get(prod.out, 0) == 1 and prod.out != final_out:
+                        fused = compose_fp(prod, cons)
+                        stages[ci] = fused
+                        del stages[pi]
+                        changed = True
+                        break
+            # --- rule 2: FP -> GP.values -----------------------------------------
+            if isinstance(cons, GroupParallel) and cons.value_inputs:
+                pi = producer.get(cons.value_inputs[0])
+                if (pi is not None and isinstance(stages[pi], FullyParallel)
+                        and len(cons.value_inputs) == 1
+                        and getattr(cons, "_identity_values", True)
+                        and uses.get(cons.value_inputs[0], 0) == 1
+                        and cons.value_inputs[0] != final_out):
+                    prod = stages[pi]
+                    p_fn, p_nin = prod.fn, len(prod.inputs)
+
+                    def value_fn(ctx: Ctx, g, *blocks, _fn=p_fn, _n=p_nin):
+                        return _fn(Ctx(out_idx=g, starts=ctx.starts[:_n]), *blocks[:_n])
+
+                    new = dataclasses.replace(
+                        cons, value_inputs=prod.inputs, value_specs=prod.specs,
+                        value_fn=value_fn, name=f"{prod.name}>{cons.name}")
+                    new._identity_values = False  # type: ignore[attr-defined]
+                    stages[ci] = new
+                    del stages[pi]
+                    changed = True
+                    break
+            # --- rules 3/4: GP|NP -> FP ------------------------------------------
+            if isinstance(cons, FullyParallel) and cons.elementwise and cons.inputs:
+                pi = producer.get(cons.inputs[0])
+                if pi is not None and isinstance(stages[pi], (GroupParallel, NonParallel)):
+                    prod = stages[pi]
+                    if (uses.get(prod.out, 0) == 1 and prod.out != final_out
+                            and len(cons.inputs) == 1):  # extra inputs need VMEM plumbing
+                        c_fn = cons.fn
+                        if isinstance(prod, GroupParallel):
+                            old_map = prod.map_fn
+
+                            def map_fn(ctx, gval, pos, g, *extras, _old=old_map, _c=c_fn):
+                                mid = _old(ctx, gval, pos, g, *extras)
+                                return _c(Ctx(out_idx=ctx.out_idx, starts=(None,)), mid)
+
+                            new = dataclasses.replace(
+                                prod, map_fn=map_fn, out=cons.out, n_out=cons.n_out,
+                                out_dtype=cons.out_dtype,
+                                name=f"{prod.name}>{cons.name}")
+                            new._identity_values = getattr(prod, "_identity_values", True)  # type: ignore[attr-defined]
+                        else:
+                            old_map = prod.out_map
+
+                            def out_map(ctx, syms, _old=old_map, _c=c_fn):
+                                mid = syms if _old is None else _old(ctx, syms)
+                                return _c(Ctx(out_idx=ctx.out_idx, starts=(None,)), mid)
+
+                            new = dataclasses.replace(
+                                prod, out_map=out_map, out=cons.out, n_out=cons.n_out,
+                                out_dtype=cons.out_dtype,
+                                name=f"{prod.name}>{cons.name}")
+                        stages[ci] = new
+                        del stages[pi]
+                        changed = True
+                        break
+            # --- rule 5: FP -> Aux -----------------------------------------------
+            if isinstance(cons, Aux) and cons.inputs:
+                pi = producer.get(cons.inputs[0])
+                if pi is not None and isinstance(stages[pi], FullyParallel):
+                    prod = stages[pi]
+                    if (uses.get(prod.out, 0) == 1 and prod.out != final_out
+                            and len(cons.inputs) == 1):
+                        a_fn, p_stage = cons.fn, prod
+
+                        def aux_fn(*bufs, _a=a_fn, _p=p_stage):
+                            return _a(_p.run_jnp(dict(zip(_p.inputs, bufs))))
+
+                        new = dataclasses.replace(
+                            cons, fn=aux_fn, inputs=prod.inputs,
+                            name=f"{prod.name}>{cons.name}")
+                        stages[ci] = new
+                        del stages[pi]
+                        changed = True
+                        break
+        # (loop restarts after each rewrite: indices shifted)
+    return stages
+
+
+def kernel_count(stages: Sequence[Stage]) -> int:
+    """Number of device kernels a stage list launches (Aux ops count: they
+    materialize)."""
+    return len(stages)
+
+
+def hbm_traffic_bytes(stages: Sequence[Stage], bufs: dict[str, "object"]) -> int:
+    """Eq.-2-style traffic model: every stage reads its inputs and writes its output
+    once at HBM.  Used by the fusion ablation benchmark."""
+    import numpy as np
+
+    sizes = {k: int(getattr(v, "nbytes", 0)) for k, v in bufs.items()}
+    total = 0
+    for st in stages:
+        if isinstance(st, FullyParallel):
+            ins = st.inputs
+        elif isinstance(st, GroupParallel):
+            ins = (st.presum,) + st.value_inputs
+        elif isinstance(st, NonParallel):
+            ins = (st.streams, st.states)
+        else:
+            ins = st.inputs
+        total += sum(sizes.get(k, 0) for k in ins)
+        out_bytes = st.n_out * np.dtype(st.out_dtype).itemsize
+        sizes[st.out] = out_bytes
+        total += out_bytes
+    return total

@@ -1,0 +1,230 @@
+"""The three ZipFlow parallel patterns (paper §3.1) as a small stage IR.
+
+A decompression *plan* lowers to a list of stages over named buffers:
+
+  * ``FullyParallel`` -- out[i] = fn(i, inputs...), no cross-element dependency.
+  * ``GroupParallel`` -- variable-sized groups expand 1->N; out[i] is produced from the
+    group g owning position i and the within-group offset pos = i - presum[g].
+  * ``NonParallel``   -- chunked serial decode (ANS): lanes decode independent chunks in
+    lockstep; see ``repro.algos.ans``.
+  * ``Aux``           -- whole-array auxiliary ops (cumsum, exception scatter), the
+    paper's "PyTorch out-of-the-box operations" escape hatch (§3.2, Fig. 7).
+
+Each stage can be executed by three backends (``repro.core.compiler``): pure-jnp
+(reference), Pallas TPU kernels (production; interpret=True on CPU), and an unfused
+"baseline" emulating a fixed-schedule library (the nvCOMP role in the paper).
+
+The per-element functions (``fn``, ``map_fn``) are jnp-traceable closures over *vectors*
+of elements, so the very same closure is inlined into Pallas kernel bodies by the fusion
+pass -- this is the TPU analogue of the paper's kernel fusion (§3.2, Fig. 7(c)).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class BufSpec:
+    """How an input buffer is tiled relative to the output tile.
+
+    kind="tile": the block covering output range [o0, o1) is input range
+                 [o0*num//den, o1*num//den) (+pad guard words); bitpack uses num=bw,
+                 den=32 on uint32 words.  kind="full": whole buffer resident in VMEM
+                 (small metadata: dictionaries, tables).
+    """
+
+    kind: str = "tile"  # "tile" | "full"
+    num: int = 1
+    den: int = 1
+    pad: int = 0        # extra trailing elements fetched (cross-word guard)
+
+
+@dataclasses.dataclass
+class Ctx:
+    """Execution context handed to per-element closures.
+
+    out_idx: global output indices of the elements being produced (int32 vector).
+    starts:  global start offset of each input block (0 for the jnp backend, the block
+             origin inside Pallas kernels).
+    """
+
+    out_idx: jnp.ndarray
+    starts: tuple[Any, ...] = ()
+
+
+class Stage:
+    out: str
+    n_out: int
+    out_dtype: Any
+
+
+def primary(ctx: Ctx, block: jnp.ndarray) -> jnp.ndarray:
+    """Fetch a stage's primary input for the elements at ``ctx.out_idx``.
+
+    ``starts[0] is None`` means the block is already positionally aligned with
+    ``out_idx`` (it is an in-register intermediate from a fused producer); otherwise
+    gather at the block-local offsets.  Writing codec closures through this helper is
+    what makes every Fully-Parallel stage *gather-capable*, i.e. evaluable at arbitrary
+    indices -- the property fusion rule 2 (absorb into Group-Parallel values) relies on.
+    """
+    s = ctx.starts[0] if ctx.starts else 0
+    if s is None:
+        return block
+    return block[ctx.out_idx - s]
+
+
+@dataclasses.dataclass
+class FullyParallel(Stage):
+    """out[i] = fn(ctx, *blocks);   inputs[k] tiled per specs[k]."""
+
+    fn: Callable[..., jnp.ndarray]
+    inputs: tuple[str, ...]
+    specs: tuple[BufSpec, ...]
+    out: str = "out"
+    n_out: int = 0
+    out_dtype: Any = jnp.int32
+    elementwise: bool = True   # True iff fn reads inputs[0] only at position ctx.out_idx
+    name: str = "fp"
+
+    def run_jnp(self, bufs: dict[str, jnp.ndarray]) -> jnp.ndarray:
+        ctx = Ctx(out_idx=jnp.arange(self.n_out, dtype=jnp.int32),
+                  starts=tuple(0 for _ in self.inputs))
+        return self.fn(ctx, *[bufs[k] for k in self.inputs]).astype(self.out_dtype)
+
+
+@dataclasses.dataclass
+class GroupParallel(Stage):
+    """Balanced 1->N expansion (paper §4 'Scheduling Group-Parallel for Load Balance').
+
+    out[i]:  g   = searchsorted(presum, i, side='right') - 1
+             pos = i - presum[g]
+             out[i] = map_fn(ctx, value_fn(g, value-blocks...), pos, g)
+
+    ``presum`` is the inclusive-prefix-sum of group counts with a leading 0
+    (len n_groups+1) -- the paper's "one-time data scan".  ``value_fn`` materializes the
+    per-group payload; absorbing a preceding Fully-Parallel stage here is exactly the
+    paper's Fig. 7(c) fusion of bit-packing into the RLE kernel.
+    """
+
+    presum: str
+    value_inputs: tuple[str, ...]
+    value_specs: tuple[BufSpec, ...]
+    # value_fn(ctx, g_idx, *value_blocks) -> per-group payload for group ids g_idx
+    value_fn: Callable[..., jnp.ndarray]
+    # map_fn(ctx, gval, pos, g, *extra_blocks) -> output elements
+    map_fn: Callable[..., jnp.ndarray]
+    out: str = "out"
+    n_out: int = 0
+    out_dtype: Any = jnp.int32
+    n_groups: int = 0
+    extra_inputs: tuple[str, ...] = ()  # whole-buffer metadata (dictionaries, offsets)
+    name: str = "gp"
+
+    def run_jnp(self, bufs: dict[str, jnp.ndarray]) -> jnp.ndarray:
+        presum = bufs[self.presum]
+        i = jnp.arange(self.n_out, dtype=jnp.int32)
+        g = jnp.searchsorted(presum, i, side="right").astype(jnp.int32) - 1
+        pos = i - presum[g]
+        ctx = Ctx(out_idx=i, starts=tuple(0 for _ in self.value_inputs))
+        gval = self.value_fn(ctx, g, *[bufs[k] for k in self.value_inputs])
+        extras = [bufs[k] for k in self.extra_inputs]
+        return self.map_fn(ctx, gval, pos, g, *extras).astype(self.out_dtype)
+
+
+@dataclasses.dataclass
+class NonParallel(Stage):
+    """Chunked serial decode executed lane-lockstep (paper §4 'towards SIMT').
+
+    Specialized to interleaved rANS (the paper's N.P. exemplar).  Buffers:
+      streams: (max_words, n_chunks) uint16 striped words (chunk-transposed layout),
+      states:  (n_chunks,) uint32 initial decoder states,
+      tables:  (sym, freq, cum) alphabet tables, each (4096,) int32.
+    Decodes n_chunks * chunk_size symbols; chunk c owns out[c*chunk_size:(c+1)*chunk_size].
+    ``out_map`` post-maps decoded symbols (fusion target).
+    """
+
+    streams: str
+    states: str
+    sym_tab: str
+    freq_tab: str
+    cum_tab: str
+    chunk_size: int
+    n_chunks: int
+    # out_map(ctx, syms) -> output elements; identity by default
+    out_map: Callable[..., jnp.ndarray] | None = None
+    out: str = "out"
+    n_out: int = 0
+    out_dtype: Any = jnp.uint8
+    name: str = "np"
+
+    def run_jnp(self, bufs: dict[str, jnp.ndarray]) -> jnp.ndarray:
+        from repro.algos.ans import decode_chunks_jnp  # avoids import cycle
+
+        syms = decode_chunks_jnp(
+            bufs[self.streams], bufs[self.states], bufs[self.sym_tab],
+            bufs[self.freq_tab], bufs[self.cum_tab], self.chunk_size)
+        flat = syms.reshape(-1)[: self.n_out]
+        if self.out_map is not None:
+            ctx = Ctx(out_idx=jnp.arange(self.n_out, dtype=jnp.int32))
+            flat = self.out_map(ctx, flat)
+        return flat.astype(self.out_dtype)
+
+
+@dataclasses.dataclass
+class Aux(Stage):
+    """Whole-array auxiliary op (cumsum, scatter-patch).  Fusion barrier."""
+
+    fn: Callable[..., jnp.ndarray]
+    inputs: tuple[str, ...]
+    out: str = "out"
+    n_out: int = 0
+    out_dtype: Any = jnp.int32
+    name: str = "aux"
+
+    def run_jnp(self, bufs: dict[str, jnp.ndarray]) -> jnp.ndarray:
+        return self.fn(*[bufs[k] for k in self.inputs]).astype(self.out_dtype)
+
+
+# --------------------------------------------------------------------------- helpers
+def compose_fp(first: FullyParallel, second: FullyParallel) -> FullyParallel:
+    """Fuse two Fully-Parallel stages: second(first(x)).  Requires the second stage to
+    be elementwise in its primary input (out[i] reads first_out[i])."""
+    assert second.elementwise, "cannot compose into a non-elementwise consumer"
+    assert second.inputs[0] == first.out
+    f_fn, s_fn = first.fn, second.fn
+    n_first = len(first.inputs)
+
+    def fused(ctx: Ctx, *blocks):
+        f_ctx = Ctx(out_idx=ctx.out_idx, starts=ctx.starts[:n_first])
+        mid = f_fn(f_ctx, *blocks[:n_first]).astype(first.out_dtype)
+        # None start: `mid` is an in-register intermediate positionally aligned with
+        # out_idx -- the consumer must not gather it by global index
+        s_ctx = Ctx(out_idx=ctx.out_idx, starts=(None,) + ctx.starts[n_first:])
+        return s_fn(s_ctx, mid, *blocks[n_first:])
+
+    return FullyParallel(
+        fn=fused,
+        inputs=first.inputs + second.inputs[1:],
+        specs=first.specs + second.specs[1:],
+        out=second.out, n_out=second.n_out, out_dtype=second.out_dtype,
+        elementwise=first.elementwise,
+        name=f"{first.name}+{second.name}")
+
+
+def identity_value_fn(ctx: Ctx, g: jnp.ndarray, values: jnp.ndarray) -> jnp.ndarray:
+    start = ctx.starts[0] if ctx.starts else 0
+    return values[g - start] if not isinstance(start, int) or start != 0 else values[g]
+
+
+def run_stages_jnp(stages: Sequence[Stage], bufs: dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """Reference executor: run every stage with the pure-jnp backend."""
+    bufs = dict(bufs)
+    out = None
+    for st in stages:
+        out = st.run_jnp(bufs)
+        bufs[st.out] = out
+    return out

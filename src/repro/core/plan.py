@@ -1,0 +1,109 @@
+"""Nesting Layer (paper §3.2): compression-plan trees and compressed blobs.
+
+A ``Plan`` is a tree: a codec plus child plans attached to named output buffers of that
+codec's encoder (paper Table 2, e.g. ``RLE[DeltaStride[...], Bit-packing]``).  Encoding
+recursively compresses the designated buffers; the remaining *leaf* buffers are what
+actually moves host->device.  Decoding lowers the tree post-order into a stage list
+(``repro.core.patterns``) which the fusion pass then optimizes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from repro.core import registry
+from repro.core.patterns import Stage
+
+
+@dataclasses.dataclass
+class Plan:
+    codec: str
+    params: dict[str, Any] = dataclasses.field(default_factory=dict)
+    children: dict[str, "Plan"] = dataclasses.field(default_factory=dict)
+
+    def describe(self) -> str:
+        """Human-readable nesting string in the paper's Table-2 notation."""
+        base = self.codec
+        if not self.children:
+            return base
+        inner = ", ".join(f"{k}={v.describe()}" for k, v in self.children.items())
+        return f"{base}[{inner}]"
+
+
+def make_plan(codec: str, /, **children: "Plan | None") -> Plan:
+    """Convenience constructor: ``make_plan('rle', counts=make_plan('bitpack'))``."""
+    kids = {k: v for k, v in children.items() if v is not None}
+    return Plan(codec, children=kids)
+
+
+@dataclasses.dataclass
+class Encoded:
+    """A compressed blob: leaf buffers (transferred) + static metadata + children."""
+
+    codec: str
+    meta: dict[str, Any]
+    buffers: dict[str, np.ndarray]
+    children: dict[str, "Encoded"]
+    n: int
+    dtype: Any
+
+    @property
+    def compressed_nbytes(self) -> int:
+        total = sum(int(b.nbytes) for b in self.buffers.values())
+        return total + sum(c.compressed_nbytes for c in self.children.values())
+
+    @property
+    def plain_nbytes(self) -> int:
+        return int(self.n) * int(np.dtype(self.dtype).itemsize)
+
+    @property
+    def ratio(self) -> float:
+        """Compression ratio = plain / compressed (larger is better)."""
+        c = self.compressed_nbytes
+        return float("inf") if c == 0 else self.plain_nbytes / c
+
+
+def encode(p: Plan, arr: np.ndarray) -> Encoded:
+    codec = registry.get(p.codec)
+    bufs, meta = codec.encode(np.asarray(arr), **p.params)
+    children = {}
+    for slot, sub in p.children.items():
+        if slot not in bufs:
+            raise KeyError(f"{p.codec} has no buffer slot '{slot}' "
+                           f"(has {sorted(bufs)})")
+        children[slot] = encode(sub, bufs.pop(slot))
+    return Encoded(codec=p.codec, meta=meta, buffers=bufs, children=children,
+                   n=int(arr.size), dtype=arr.dtype)
+
+
+def decode_np(enc: Encoded) -> np.ndarray:
+    """Pure-numpy recursive oracle (independent of the jnp/Pallas executors)."""
+    codec = registry.get(enc.codec)
+    bufs = dict(enc.buffers)
+    for slot, child in enc.children.items():
+        bufs[slot] = decode_np(child)
+    return codec.decode_np(bufs, enc.meta, enc.n, enc.dtype)
+
+
+def flat_buffers(enc: Encoded, prefix: str = "root") -> dict[str, np.ndarray]:
+    """Leaf buffers under hierarchical names -- the arrays that move host->device."""
+    out = {f"{prefix}.{k}": v for k, v in enc.buffers.items()}
+    for slot, child in enc.children.items():
+        out.update(flat_buffers(child, f"{prefix}/{slot}"))
+    return out
+
+
+def lower(enc: Encoded, prefix: str = "root", out_name: str | None = None) -> list[Stage]:
+    """Lower a compressed blob to a stage list (children first, post-order)."""
+    codec = registry.get(enc.codec)
+    stages: list[Stage] = []
+    buf_names: dict[str, str] = {k: f"{prefix}.{k}" for k in enc.buffers}
+    for slot, child in enc.children.items():
+        child_out = f"{prefix}/{slot}.decoded"
+        stages.extend(lower(child, f"{prefix}/{slot}", out_name=child_out))
+        buf_names[slot] = child_out
+    out = out_name or f"{prefix}.decoded"
+    stages.extend(codec.stages(enc, buf_names, out))
+    return stages

@@ -1,0 +1,54 @@
+"""Algorithm registry (paper Fig. 4, Algorithm Layer).
+
+Codecs self-register at import; ``repro.algos`` imports them all.  The registry is what
+makes the algorithm pool user-extensible ("Algorithm extensibility" row of Table 1):
+a new codec only has to provide host-side ``encode``, a numpy ``decode_np`` oracle and
+a ``stages`` lowering onto the three patterns.
+"""
+from __future__ import annotations
+
+from typing import Any, Protocol, runtime_checkable
+
+import numpy as np
+
+
+@runtime_checkable
+class Codec(Protocol):
+    name: str
+    pattern: str  # "fp" | "gp" | "np" | "aux" -- dominant pattern family (Table 1)
+
+    def encode(self, arr: np.ndarray, **params) -> tuple[dict[str, np.ndarray], dict]:
+        """-> (buffers, meta).  Buffers may be re-compressed by child plans."""
+        ...
+
+    def decode_np(self, bufs: dict[str, np.ndarray], meta: dict, n: int,
+                  dtype: Any) -> np.ndarray:
+        """Pure-numpy decode given already-decoded child buffers."""
+        ...
+
+    def stages(self, enc, buf_names: dict[str, str], out_name: str) -> list:
+        """Lower decode onto pattern stages (repro.core.patterns)."""
+        ...
+
+
+_REGISTRY: dict[str, Codec] = {}
+
+
+def register(codec: Codec) -> Codec:
+    _REGISTRY[codec.name] = codec
+    return codec
+
+
+def get(name: str) -> Codec:
+    if name not in _REGISTRY:
+        import repro.algos  # noqa: F401  -- trigger codec registration
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown codec '{name}'; known: {sorted(_REGISTRY)}") from None
+
+
+def names() -> list[str]:
+    import repro.algos  # noqa: F401
+
+    return sorted(_REGISTRY)

@@ -1,0 +1,33 @@
+"""Mini analytical query engine (the TQP role): JAX scan-filter-aggregate
+implementations of TPC-H Q1 and Q6 used by the end-to-end benchmarks/examples."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def q1_engine(c):
+    """TPC-H Q1: filtered group-by aggregates over lineitem."""
+    sel = c["L_SHIPDATE"] <= jnp.int32(10000)
+    # RETURNFLAG is the raw character stream ('N'/'A'/'R'); fold to a group code
+    flag = (c["L_RETURNFLAG"].astype(jnp.int32) - 65) % 4
+    key = flag * 2 + c["L_LINESTATUS"]
+    disc_price = c["L_EXTENDEDPRICE"] * (1 - c["L_DISCOUNT"])
+    charge = disc_price * (1 + c["L_TAX"])
+    w = sel.astype(jnp.float32)
+    out = []
+    for v in (c["L_QUANTITY"].astype(jnp.float32), c["L_EXTENDEDPRICE"],
+              disc_price, charge, w):
+        out.append(jax.ops.segment_sum(v * w, key, num_segments=8))
+    return jnp.stack(out)
+
+
+def q6_engine(c):
+    """TPC-H Q6: predicated revenue sum."""
+    sel = ((c["L_SHIPDATE"] >= 8766) & (c["L_SHIPDATE"] < 9131)
+           & (c["L_DISCOUNT"] >= 0.05) & (c["L_DISCOUNT"] <= 0.07)
+           & (c["L_QUANTITY"] < 24))
+    return jnp.sum(jnp.where(sel, c["L_EXTENDEDPRICE"] * c["L_DISCOUNT"], 0.0))
+
+
+ENGINES = {1: q1_engine, 6: q6_engine}

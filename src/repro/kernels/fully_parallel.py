@@ -1,0 +1,73 @@
+"""Fully-Parallel Pallas TPU kernel (paper §4, Fig. 9).
+
+One ``pallas_call`` executes an arbitrary fused chain of Fully-Parallel map closures.
+Geometry <L,S,C> picks the VMEM tile: each grid step owns an (L*S, C) block of the
+output; ``L`` amortizes grid overhead (the paper's thread main loop), ``S``/``C`` align
+the tile to the VPU's (8, 128) register shape.
+
+Input blocks follow the stage's BufSpecs:
+  * "tile"  -- a proportional slice (num/den elements per output element); bit-packing
+               fetches exactly tile*bw/32 words because tiles are multiples of 32.
+  * "full"  -- whole buffer resident in VMEM (dictionaries, scale scalars).
+
+The map closure receives a Ctx with the *global* output indices of the tile and the
+block origins, so the same closure runs unchanged under the pure-jnp executor -- one
+definition, two backends, zero divergence (tested).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+
+from repro.core.geometry import Geometry
+from repro.core.patterns import BufSpec, Ctx, FullyParallel
+
+
+def _out_index_grid(i, rows: int, cols: int) -> jnp.ndarray:
+    r = jax.lax.broadcasted_iota(jnp.int32, (rows, cols), 0)
+    c = jax.lax.broadcasted_iota(jnp.int32, (rows, cols), 1)
+    return (i * rows + r) * cols + c
+
+
+def fully_parallel_call(stage: FullyParallel, bufs: dict[str, jnp.ndarray],
+                        geom: Geometry, interpret: bool = False) -> jnp.ndarray:
+    n = stage.n_out
+    rows, cols = geom.L * geom.S, geom.C
+    tile = rows * cols
+    n_tiles = max(1, math.ceil(n / tile))
+    arrays = [bufs[k] for k in stage.inputs]
+
+    in_specs = []
+    tile_sizes: list[int | None] = []
+    for spec, arr in zip(stage.specs, arrays):
+        if spec.kind == "full":
+            in_specs.append(pl.BlockSpec(arr.shape,
+                                         lambda i, _nd=arr.ndim: (0,) * _nd))
+            tile_sizes.append(None)
+        else:
+            assert (tile * spec.num) % spec.den == 0, (tile, spec)
+            bin_ = tile * spec.num // spec.den
+            in_specs.append(pl.BlockSpec((bin_,), lambda i: (i,)))
+            tile_sizes.append(bin_)
+
+    def kernel(*refs):
+        o_ref = refs[-1]
+        i = pl.program_id(0)
+        out_idx = _out_index_grid(i, rows, cols)
+        starts = tuple(None if b is None else i * b for b in tile_sizes)
+        blocks = [r[...] for r in refs[:-1]]
+        vals = stage.fn(Ctx(out_idx=out_idx, starts=starts), *blocks)
+        o_ref[...] = jnp.where(out_idx < n, vals, 0).astype(o_ref.dtype)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((rows, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_tiles * rows, cols), stage.out_dtype),
+        interpret=interpret,
+    )(*arrays)
+    return out.reshape(-1)[:n]

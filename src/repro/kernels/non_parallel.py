@@ -1,0 +1,94 @@
+"""Non-Parallel Pallas TPU kernel: lane-lockstep interleaved rANS decode
+(paper §4, Fig. 11).
+
+On a GPU the paper assigns one chunk per thread and relies on warp lockstep.  The TPU
+VPU *is* a lockstep machine: a (S, C) register of decoder states advances S*C chunks
+per step under a single program counter; ``lax.fori_loop`` is the shared instruction
+stream.  The <L,S,C> geometry means: S*C chunks in flight per grid step, L grid steps'
+worth of chunk batches... i.e. each kernel invocation decodes G = S*C chunks, and the
+grid covers ceil(n_chunks / G) batches.
+
+Streams are chunk-transposed ("striped"): ``streams[t, c]`` is word t of chunk c, so a
+renormalization step gathers one VMEM row -- the paper's "consistency of I/O and cache
+accesses across chunks".  The <=1-word-per-symbol renorm bound (see repro.algos.ans)
+makes the loop body branch-free: every lane executes identical selects.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+
+from repro.core.geometry import Geometry
+from repro.core.patterns import Ctx, NonParallel
+from repro.algos.ans import L as ANS_L, M as ANS_M, SCALE_BITS
+
+
+def non_parallel_call(stage: NonParallel, bufs: dict[str, jnp.ndarray],
+                      geom: Geometry, interpret: bool = False) -> jnp.ndarray:
+    cs = stage.chunk_size
+    n_chunks = stage.n_chunks
+    G = geom.S * geom.C  # chunks in lockstep per grid step
+    n_batches = max(1, math.ceil(n_chunks / G))
+    pad_chunks = n_batches * G
+
+    streams = bufs[stage.streams]
+    states = bufs[stage.states].astype(jnp.uint32)
+    max_words = streams.shape[0]
+    if pad_chunks != n_chunks:
+        streams = jnp.pad(streams, ((0, 0), (0, pad_chunks - n_chunks)))
+        states = jnp.pad(states, (0, pad_chunks - n_chunks),
+                         constant_values=jnp.uint32(ANS_L))
+    sym = bufs[stage.sym_tab].astype(jnp.int32)
+    freq = bufs[stage.freq_tab].astype(jnp.uint32)
+    cum = bufs[stage.cum_tab].astype(jnp.uint32)
+
+    # if an elementwise consumer was fused in (rule 4), it runs inside the kernel
+    out_dtype = stage.out_dtype if stage.out_map is not None else jnp.uint8
+
+    def kernel(stream_ref, state_ref, sym_ref, freq_ref, cum_ref, o_ref):
+        i = pl.program_id(0)
+        lanes = jax.lax.broadcasted_iota(jnp.int32, (1, G), 1)
+        sym_t = sym_ref[...]
+        freq_t = freq_ref[...]
+        cum_t = cum_ref[...]
+        x0 = state_ref[...].reshape(1, G)
+        cur0 = jnp.zeros((1, G), jnp.int32)
+        cap = max_words - 1
+
+        def body(t, carry):
+            x, cur = carry
+            slot = (x & jnp.uint32(ANS_M - 1)).astype(jnp.int32)
+            s = sym_t[slot]
+            x = freq_t[s] * (x >> SCALE_BITS) + slot.astype(jnp.uint32) - cum_t[s]
+            need = x < jnp.uint32(ANS_L)
+            w = stream_ref[jnp.clip(cur, 0, cap), lanes].astype(jnp.uint32)
+            x = jnp.where(need, (x << 16) | w, x)
+            cur = cur + need.astype(jnp.int32)
+            vals = s
+            if stage.out_map is not None:
+                out_idx = ((i * G + lanes) * cs + t)
+                vals = stage.out_map(Ctx(out_idx=out_idx, starts=(None,)), s)
+            o_ref[:, pl.ds(t, 1)] = vals.astype(o_ref.dtype).reshape(G, 1)
+            return (x, cur)
+
+        jax.lax.fori_loop(0, cs, body, (x0, cur0))
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_batches,),
+        in_specs=[
+            pl.BlockSpec((max_words, G), lambda i: (0, i)),
+            pl.BlockSpec((G,), lambda i: (i,)),
+            pl.BlockSpec(sym.shape, lambda i: (0,)),
+            pl.BlockSpec(freq.shape, lambda i: (0,)),
+            pl.BlockSpec(cum.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((G, cs), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((pad_chunks, cs), out_dtype),
+        interpret=interpret,
+    )(streams, states, sym, freq, cum)
+
+    return out.reshape(-1)[: stage.n_out].astype(stage.out_dtype)

@@ -1,0 +1,29 @@
+"""Jitted dispatch from pattern stages to the Pallas TPU kernels.
+
+``run_stage`` is the "pallas" backend of ``repro.core.compiler``: it routes each stage
+kind to its kernel with the geometry chosen for the pattern (native config of the
+target chip, or an explicit override from the autotuner / perf loop).  Aux stages have
+no kernel -- they are whole-array XLA ops by design (paper Fig. 7's PyTorch auxiliaries).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.geometry import Geometry
+from repro.core.patterns import Aux, FullyParallel, GroupParallel, NonParallel, Stage
+from repro.kernels.fully_parallel import fully_parallel_call
+from repro.kernels.group_parallel import group_parallel_call
+from repro.kernels.non_parallel import non_parallel_call
+
+
+def run_stage(stage: Stage, bufs: dict[str, jnp.ndarray],
+              geoms: dict[str, Geometry], interpret: bool = True) -> jnp.ndarray:
+    if isinstance(stage, FullyParallel):
+        return fully_parallel_call(stage, bufs, geoms["fp"], interpret=interpret)
+    if isinstance(stage, GroupParallel):
+        return group_parallel_call(stage, bufs, geoms["gp"], interpret=interpret)
+    if isinstance(stage, NonParallel):
+        return non_parallel_call(stage, bufs, geoms["np"], interpret=interpret)
+    if isinstance(stage, Aux):
+        return stage.run_jnp(bufs)
+    raise TypeError(f"unknown stage type {type(stage)}")

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+Each kernel's reference is the stage's ``run_jnp`` (identical closures, whole-array
+execution) -- one semantic definition shared by both backends.  The named helpers below
+exist so kernel tests can sweep shapes/dtypes directly without building plan trees.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.patterns import Stage
+
+
+def ref_stage(stage: Stage, bufs: dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """The oracle: run the stage with the pure-jnp executor."""
+    return stage.run_jnp(bufs)
+
+
+def unpack_bits_ref(packed: jnp.ndarray, n: int, bit_width: int,
+                    base: int = 0) -> jnp.ndarray:
+    """Standalone bit-unpack oracle (mirrors repro.algos.bitpack)."""
+    i = jnp.arange(n, dtype=jnp.int32)
+    frac = (i & 31) * bit_width
+    w = (i >> 5) * bit_width + (frac >> 5)
+    off = (frac & 31).astype(jnp.uint32)
+    mask = jnp.uint32((1 << bit_width) - 1) if bit_width < 32 \
+        else jnp.uint32(0xFFFFFFFF)
+    last = packed.shape[0] - 1
+    lo = packed[w] >> off
+    hi = jnp.where(off == 0, jnp.uint32(0),
+                   packed[jnp.minimum(w + 1, last)] << ((32 - off) & 31))
+    return ((lo | hi) & mask).astype(jnp.int32) + base
+
+
+def expand_ref(presum: jnp.ndarray, values: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Standalone Group-Parallel expansion oracle (RLE semantics)."""
+    i = jnp.arange(n, dtype=jnp.int32)
+    g = jnp.searchsorted(presum, i, side="right").astype(jnp.int32) - 1
+    return values[g]
+
+
+def ans_ref(streams, states, sym, freq, cum, chunk_size: int) -> jnp.ndarray:
+    from repro.algos.ans import decode_chunks_jnp
+
+    return decode_chunks_jnp(streams, states, sym, freq, cum, chunk_size)

@@ -1,0 +1,83 @@
+"""Elastic scaling: re-mesh and reshard after node failure (1000+-node posture).
+
+On a real cluster the coordinator detects a dead host (heartbeat timeout or the
+straggler signal from train/loop.py), evicts its slice, and restarts the job on the
+survivors.  The pieces implemented here:
+
+  * ``plan_remesh`` -- given the old mesh axes and the surviving chip count, pick the
+    largest valid (data', model) mesh that preserves the TP axis (model-parallel
+    groups must stay intact; only data-parallel replicas are elastic).
+  * ``reshard`` -- move a checkpointed pytree onto the new mesh's shardings
+    (device_put against newly resolved NamedShardings; on a cluster this is the
+    restore path reading the compressed shards of checkpoint.py).
+  * ``ElasticCoordinator`` -- restart loop glue: on failure, re-mesh, reshard from
+    the latest checkpoint, continue at the recorded step with the *same* global
+    batch (deterministic batch_fn(step) keeps the data order identical, so the
+    replacement run recomputes exactly the lost steps).
+
+Tested by simulation in tests/test_elastic.py (subprocess with forced host devices).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.launch.mesh import shard_tree
+
+
+@dataclasses.dataclass
+class RemeshPlan:
+    data: int
+    model: int
+    dropped_chips: int
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.data, self.model)
+
+
+def plan_remesh(surviving_chips: int, model_size: int = 16) -> RemeshPlan:
+    """Largest (data', model) grid on the survivors, TP groups intact."""
+    if surviving_chips < model_size:
+        raise RuntimeError(
+            f"cannot keep {model_size}-way TP with {surviving_chips} chips")
+    data = surviving_chips // model_size
+    used = data * model_size
+    return RemeshPlan(data=data, model=model_size,
+                      dropped_chips=surviving_chips - used)
+
+
+def make_mesh_from_plan(plan: RemeshPlan, devices=None):
+    devices = devices if devices is not None else jax.devices()
+    n = plan.data * plan.model
+    grid = np.asarray(devices[:n]).reshape(plan.shape)
+    return jax.sharding.Mesh(grid, ("data", "model"))
+
+
+def reshard(tree, logical_specs, new_mesh):
+    """Place a (host or old-mesh) pytree onto the new mesh."""
+    shapes = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    shardings = shard_tree(shapes, logical_specs, new_mesh)
+    flat_x, tdef = jax.tree_util.tree_flatten(tree)
+    flat_s = jax.tree_util.tree_flatten(shardings)[0]
+    return tdef.unflatten([jax.device_put(np.asarray(x), s)
+                           for x, s in zip(flat_x, flat_s)])
+
+
+class ElasticCoordinator:
+    """Failure -> re-mesh -> reshard -> resume, preserving data order."""
+
+    def __init__(self, model_size: int, ckpt_dir: str):
+        self.model_size = model_size
+        self.ckpt_dir = ckpt_dir
+
+    def recover(self, tree_like, logical_specs, surviving_devices):
+        from repro.train import checkpoint as ckpt
+
+        plan = plan_remesh(len(surviving_devices), self.model_size)
+        mesh = make_mesh_from_plan(plan, surviving_devices)
+        tree, step, _extra = ckpt.restore(self.ckpt_dir, tree_like)
+        placed = reshard(tree, logical_specs, mesh)
+        return placed, mesh, step

@@ -1,0 +1,96 @@
+"""Production mesh + sharding resolution.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches jax
+device state):  single pod = (16, 16) ("data", "model") = 256 chips;
+multi-pod = (2, 16, 16) ("pod", "data", "model") = 512 chips across the DCN.
+
+``shard_tree`` resolves the models' *logical* specs ("fsdp"/"tp" tuples, see
+repro.models.layers) into NamedShardings against actual array shapes, replicating any
+dimension whose size does not divide the mesh axis (small archs on big meshes, B=1
+long-context decode, odd vocabs).
+
+XLA flags for real-TPU runs (latency-hiding overlap of the collectives this mesh
+generates) are recorded in ``TPU_PERF_FLAGS`` and set by launch/train.py.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+TPU_PERF_FLAGS = (
+    "--xla_enable_async_collective_permute=true "
+    "--xla_tpu_enable_data_parallel_all_reduce_opt=true "
+    "--xla_tpu_data_parallel_opt_different_sized_ops=true "
+    "--xla_tpu_enable_async_collective_fusion=true "
+    "--xla_tpu_overlap_compute_collective_tc=true "
+    "--xla_enable_async_all_gather=true "
+)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def mesh_axes(mesh) -> tuple[tuple[str, ...], str]:
+    """-> (fsdp axis names, tp axis name)."""
+    names = mesh.axis_names
+    fsdp = tuple(n for n in names if n != "model")
+    return fsdp, "model"
+
+
+def _axis_size(mesh, names) -> int:
+    if isinstance(names, str):
+        names = (names,)
+    return int(np.prod([mesh.shape[n] for n in names]))
+
+
+def resolve_entry(entry, dim: int, mesh, fsdp, tp):
+    """Logical spec entry -> mesh axis (or None), honoring divisibility."""
+    if entry is None:
+        return None
+    if entry == "fsdp" or (isinstance(entry, tuple) and entry[0] == "fsdp"):
+        name = fsdp if len(fsdp) > 1 else fsdp[0]
+        return name if dim % _axis_size(mesh, fsdp) == 0 else None
+    if entry == "tp" or (isinstance(entry, tuple) and entry[0] == "tp"):
+        return tp if dim % _axis_size(mesh, tp) == 0 else None
+    raise ValueError(f"bad logical spec entry {entry!r}")
+
+
+def shard_tree(shapes, logical_specs, mesh) -> "jax.tree":
+    """Resolve a logical-spec tree against a ShapeDtypeStruct tree.
+
+    Handles ("stacked", subtree) / ("stacked2", subtree) markers by left-padding the
+    spec with None dims.
+    """
+    fsdp, tp = mesh_axes(mesh)
+
+    def walk(shape_t, spec_t, lead):
+        if (isinstance(spec_t, tuple) and len(spec_t) == 2
+                and spec_t[0] in ("stacked", "stacked2")
+                and isinstance(spec_t[1], dict)):
+            return walk(shape_t, spec_t[1],
+                        lead + (1 if spec_t[0] == "stacked" else 2))
+        if isinstance(spec_t, dict):
+            return {k: walk(shape_t[k], spec_t[k], lead) for k in spec_t}
+        if spec_t is None:
+            return NamedSharding(mesh, P())
+        if isinstance(spec_t, P):
+            return NamedSharding(mesh, spec_t)
+        shp = tuple(shape_t.shape)
+        entries = tuple(spec_t)
+        assert len(entries) + lead == len(shp), (shp, spec_t, lead)
+        resolved = (None,) * lead + tuple(
+            resolve_entry(e, d, mesh, fsdp, tp)
+            for e, d in zip(entries, shp[lead:]))
+        return NamedSharding(mesh, P(*resolved))
+
+    return walk(shapes, logical_specs, 0)
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,4 @@
+"""Model substrate: layers + family programs + the uniform Model API."""
+from repro.models.model import Model, cell_status, get_model
+
+__all__ = ["Model", "cell_status", "get_model"]

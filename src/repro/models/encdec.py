@@ -1,0 +1,209 @@
+"""Seamless-M4T-style encoder-decoder backbone (audio family).
+
+The audio frontend is a STUB per the assignment: ``input_specs`` provides precomputed
+frame embeddings (B, S_src, D).  Shape conventions (recorded in DESIGN.md):
+  train_4k / prefill_32k -- encoder consumes seq_len frames; decoder runs seq_len // 8
+  target tokens (speech-to-text length ratio).
+  decode shapes -- one decoder token against a self-KV cache of seq_len and a cross
+  memory of seq_len // 8 encoder states.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+SRC_RATIO = 8  # decoder length = encoder length // SRC_RATIO for train/prefill
+
+
+def enc_layer_init(key, cfg: ModelConfig):
+    ka, km = jax.random.split(key)
+    attn_p, attn_s = L.attention_init(ka, cfg)
+    mlp_p, mlp_s = L.mlp_init(km, cfg)
+    return ({"attn": attn_p, "mlp": mlp_p, "norm1": L.oinit(None, (cfg.d_model,)),
+             "norm2": L.oinit(None, (cfg.d_model,))},
+            {"attn": attn_s, "mlp": mlp_s, "norm1": (None,), "norm2": (None,)})
+
+
+def dec_layer_init(key, cfg: ModelConfig):
+    ks, kc, km = jax.random.split(key, 3)
+    self_p, self_s = L.attention_init(ks, cfg)
+    cross_p, cross_s = L.attention_init(kc, cfg)
+    mlp_p, mlp_s = L.mlp_init(km, cfg)
+    return ({"self": self_p, "cross": cross_p, "mlp": mlp_p,
+             "norm1": L.oinit(None, (cfg.d_model,)),
+             "norm2": L.oinit(None, (cfg.d_model,)),
+             "norm3": L.oinit(None, (cfg.d_model,))},
+            {"self": self_s, "cross": cross_s, "mlp": mlp_s,
+             "norm1": (None,), "norm2": (None,), "norm3": (None,)})
+
+
+def init(cfg: ModelConfig, key):
+    ke, k1, k2 = jax.random.split(key, 3)
+    emb_p, emb_s = L.embed_init(ke, cfg)
+    enc = jax.vmap(lambda k: enc_layer_init(k, cfg)[0])(
+        jax.random.split(k1, cfg.enc_layers))
+    dec = jax.vmap(lambda k: dec_layer_init(k, cfg)[0])(
+        jax.random.split(k2, cfg.dec_layers))
+    _, enc_s = enc_layer_init(k1, cfg)
+    _, dec_s = dec_layer_init(k2, cfg)
+    params = {"embed": emb_p, "enc": enc, "dec": dec,
+              "enc_norm": L.oinit(None, (cfg.d_model,)),
+              "final_norm": L.oinit(None, (cfg.d_model,))}
+    specs = {"embed": emb_s, "enc": ("stacked", enc_s), "dec": ("stacked", dec_s),
+             "enc_norm": (None,), "final_norm": (None,)}
+    return params, specs
+
+
+def encode(params, cfg: ModelConfig, frames, remat_policy=None):
+    """frames: (B, S_src, D) stub frontend embeddings -> encoder memory."""
+    x = frames.astype(cfg.dtype)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(x, lp):
+        h = L.rms_norm(x, lp["norm1"], cfg.norm_eps)
+        q, k, v = L.attention_qkv(lp["attn"], h, cfg)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        attn = L.flash_attention(q, k, v, causal=False)
+        x = x + attn.reshape(B, S, -1) @ lp["attn"]["wo"].astype(x.dtype)
+        h = L.rms_norm(x, lp["norm2"], cfg.norm_eps)
+        return x + L.mlp_apply(lp["mlp"], h, cfg), None
+
+    body_fn = body if remat_policy is None else jax.checkpoint(
+        body, policy=remat_policy)
+    x, _ = jax.lax.scan(body_fn, x, params["enc"])
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_attn(cfg, lp, x, memory):
+    B, S, _ = x.shape
+    h = L.rms_norm(x, lp["norm2"], cfg.norm_eps)
+    hd, H, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    dt = x.dtype
+    q = (h @ lp["cross"]["wq"].astype(dt)).reshape(B, S, H, hd)
+    k = (memory @ lp["cross"]["wk"].astype(dt)).reshape(B, -1, Hkv, hd)
+    v = (memory @ lp["cross"]["wv"].astype(dt)).reshape(B, -1, Hkv, hd)
+    attn = L.flash_attention(q, k, v, causal=False)
+    return x + attn.reshape(B, S, -1) @ lp["cross"]["wo"].astype(dt)
+
+
+def decode_train(params, cfg: ModelConfig, tokens, memory, remat_policy=None):
+    x = L.embed_lookup(params["embed"], tokens, cfg)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(x, lp):
+        h = L.rms_norm(x, lp["norm1"], cfg.norm_eps)
+        q, k, v = L.attention_qkv(lp["self"], h, cfg)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        attn = L.flash_attention(q, k, v, causal=True)
+        x = x + attn.reshape(B, S, -1) @ lp["self"]["wo"].astype(x.dtype)
+        x = _cross_attn(cfg, lp, x, memory)
+        h = L.rms_norm(x, lp["norm3"], cfg.norm_eps)
+        return x + L.mlp_apply(lp["mlp"], h, cfg), None
+
+    body_fn = body if remat_policy is None else jax.checkpoint(
+        body, policy=remat_policy)
+    x, _ = jax.lax.scan(body_fn, x, params["dec"])
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def train_loss(params, cfg: ModelConfig, batch, remat_policy=None):
+    memory = encode(params, cfg, batch["frames"], remat_policy)
+    x = decode_train(params, cfg, batch["tokens"], memory, remat_policy)
+    logits = L.lm_logits(params["embed"], x, cfg)
+    return L.cross_entropy(logits, batch["labels"])
+
+
+# ----------------------------------------------------------------------- serving
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, src_len: int,
+               dtype=None):
+    dtype = dtype or cfg.dtype
+    Lyr = cfg.dec_layers
+    kv = (Lyr, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    ckv = (Lyr, batch, src_len, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype),
+            "ck": jnp.zeros(ckv, dtype), "cv": jnp.zeros(ckv, dtype),
+            "len": jnp.zeros((), jnp.int32)}
+
+
+def cache_specs(cfg: ModelConfig, tp_size: int = 16):
+    if cfg.n_kv_heads % tp_size == 0:
+        kv = (None, "fsdp", None, "tp", None)
+    else:
+        kv = (None, "fsdp", "tp", None, None)
+    return {"k": kv, "v": kv, "ck": kv, "cv": kv, "len": ()}
+
+
+def prefill(params, cfg: ModelConfig, frames, tokens, cache):
+    """Encode source frames, project cross-KV per layer, prefill decoder prompt."""
+    memory = encode(params, cfg, frames)
+    B, S = tokens.shape
+    x = L.embed_lookup(params["embed"], tokens, cfg)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    hd, Hkv = cfg.hd, cfg.n_kv_heads
+    dt = x.dtype
+
+    def body(x, lp):
+        h = L.rms_norm(x, lp["norm1"], cfg.norm_eps)
+        q, k, v = L.attention_qkv(lp["self"], h, cfg)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        attn = L.flash_attention(q, k, v, causal=True)
+        x = x + attn.reshape(B, S, -1) @ lp["self"]["wo"].astype(dt)
+        ck = (memory @ lp["cross"]["wk"].astype(dt)).reshape(B, -1, Hkv, hd)
+        cv = (memory @ lp["cross"]["wv"].astype(dt)).reshape(B, -1, Hkv, hd)
+        x = _cross_attn(cfg, lp, x, memory)
+        h = L.rms_norm(x, lp["norm3"], cfg.norm_eps)
+        return x + L.mlp_apply(lp["mlp"], h, cfg), (k, v, ck, cv)
+
+    x, (ks, vs, cks, cvs) = jax.lax.scan(body, x, params["dec"])
+    cache = {"k": jax.lax.dynamic_update_slice(cache["k"], ks.astype(dt),
+                                               (0, 0, 0, 0, 0)),
+             "v": jax.lax.dynamic_update_slice(cache["v"], vs.astype(dt),
+                                               (0, 0, 0, 0, 0)),
+             "ck": cks.astype(dt), "cv": cvs.astype(dt), "len": jnp.int32(S)}
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return L.lm_logits(params["embed"], x[:, -1:], cfg), cache
+
+
+def decode_step(params, cfg: ModelConfig, token, cache):
+    B = token.shape[0]
+    pos = cache["len"]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    x = L.embed_lookup(params["embed"], token, cfg)
+    src_len = cache["ck"].shape[3 - 1]
+
+    def body(x, inp):
+        lp, kc, vc, ck, cv = inp
+        h = L.rms_norm(x, lp["norm1"], cfg.norm_eps)
+        q, k, v = L.attention_qkv(lp["self"], h, cfg)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        k = k.astype(kc.dtype)
+        v = v.astype(vc.dtype)
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, pos, 0, 0))
+        attn = L.attention_decode(q, kc, vc, pos + 1)
+        x = x + attn.reshape(B, 1, -1) @ lp["self"]["wo"].astype(x.dtype)
+        h = L.rms_norm(x, lp["norm2"], cfg.norm_eps)
+        hd, H = cfg.hd, cfg.n_heads
+        qc = (h @ lp["cross"]["wq"].astype(x.dtype)).reshape(B, 1, H, hd)
+        cattn = L.attention_decode(qc, ck, cv, jnp.int32(src_len))
+        x = x + cattn.reshape(B, 1, -1) @ lp["cross"]["wo"].astype(x.dtype)
+        h = L.rms_norm(x, lp["norm3"], cfg.norm_eps)
+        return x + L.mlp_apply(lp["mlp"], h, cfg), (k, v)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["dec"], cache["k"], cache["v"], cache["ck"], cache["cv"]))
+    k_new = jax.lax.dynamic_update_slice(cache["k"], ks, (0, 0, pos, 0, 0))
+    v_new = jax.lax.dynamic_update_slice(cache["v"], vs, (0, 0, pos, 0, 0))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    new_cache = dict(cache, k=k_new, v=v_new, len=pos + 1)
+    return L.lm_logits(params["embed"], x, cfg), new_cache

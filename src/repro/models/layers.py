@@ -1,0 +1,428 @@
+"""Shared model building blocks (raw JAX, functional pytrees).
+
+Conventions:
+  * params are nested dicts of f32 arrays; compute casts to cfg.dtype (bf16).
+  * init fns return (params, specs) where specs is a matching pytree of
+    PartitionSpecs expressed with logical axis names "fsdp" (-> ("pod","data") /
+    ("data",)) and "tp" (-> "model"); resolution happens in launch/mesh.py.
+  * a dimension is sharded only if divisible by the mesh axis size -- otherwise the
+    spec builder falls back to replication (small archs on a big mesh).
+  * attention is chunked flash-style (online softmax) so 32k-token prefill never
+    materializes an (S, S) score tensor.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.sharding_ctx import get_mesh, shard, tp_divides
+
+# --------------------------------------------------------------------- init helpers
+
+Spec = tuple  # logical spec: tuple of None | "fsdp" | "tp"
+
+
+def ninit(key, shape, scale=None, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(shape[0]) if scale is None else scale
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+def zinit(_key, shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+def oinit(_key, shape, dtype=jnp.float32):
+    return jnp.ones(shape, dtype)
+
+
+# ------------------------------------------------------------------------ norms
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+# ------------------------------------------------------------------------- RoPE
+
+def rope_freqs(hd: int, theta: float) -> np.ndarray:
+    return 1.0 / theta ** (np.arange(0, hd, 2, dtype=np.float32) / hd)
+
+
+def apply_rope(x: jnp.ndarray, pos: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd), pos: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))                 # (hd/2,)
+    ang = pos[..., None].astype(jnp.float32) * freqs           # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, pos3: jnp.ndarray, theta: float,
+                sections: tuple[int, int, int]) -> jnp.ndarray:
+    """Multimodal RoPE (Qwen2-VL): pos3 (..., 3, S) are (t, h, w) position ids;
+    the hd/2 frequency bands are split into |sections| groups, each rotated by its
+    own position stream."""
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    freqs = jnp.asarray(rope_freqs(hd, theta))                 # (hd/2,)
+    # angle per band: pick the position stream for each band
+    band_src = np.concatenate([np.full(s, i) for i, s in enumerate(sections)])
+    pos_sel = jnp.take(pos3, jnp.asarray(band_src), axis=-2)   # (..., hd/2, S)
+    ang = jnp.moveaxis(pos_sel, -2, -1).astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------------- attention
+
+def _repeat_kv(k: jnp.ndarray, groups: int) -> jnp.ndarray:
+    if groups == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, groups, d)) \
+        .reshape(b, s, h * groups, d)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, q_chunk: int = 1024,
+                    kv_chunk: int = 1024,
+                    kv_offset: int = 0) -> jnp.ndarray:
+    """Chunked online-softmax attention; never materializes (Sq, Sk) scores.
+
+    q: (B, Sq, H, hd); k/v: (B, Sk, Hkv, hd).  GQA handled by head repetition.
+    kv_offset: absolute position of k[0] relative to q[0] (for cross-chunk decode).
+    """
+    B, Sq, H, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    k = _repeat_kv(k, H // Hkv)
+    v = _repeat_kv(v, H // Hkv)
+    # head padding: when H does not divide the TP axis, pad with zero heads so the
+    # attention shards instead of replicating 16x per TP rank.  Padded outputs are
+    # sliced off, so the math is exact and padded projections get zero gradients
+    # (6.7% extra compute for smollm's 15 heads vs 1600% replication -- §Perf).
+    H_orig = H
+    mesh = get_mesh()
+    if mesh is not None and H % mesh.shape.get("model", 1):
+        tp_size = mesh.shape["model"]
+        H_pad = -(-H // tp_size) * tp_size
+        zeros = jnp.zeros((B, Sq, H_pad - H, hd), q.dtype)
+        q = jnp.concatenate([q, zeros], axis=2)
+        zk = jnp.zeros((B, Sk, H_pad - H, hd), k.dtype)
+        k = jnp.concatenate([k, zk], axis=2)
+        v = jnp.concatenate([v, zk], axis=2)
+        H = H_pad
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+    assert Sq % q_chunk == 0 and Sk % kv_chunk == 0, (Sq, q_chunk, Sk, kv_chunk)
+    scale = 1.0 / math.sqrt(hd)
+
+    qb = q.reshape(B, nq, q_chunk, H, hd).astype(jnp.float32)
+    kb = k.reshape(B, nk, kv_chunk, H, hd).astype(jnp.float32)
+    vb = v.reshape(B, nk, kv_chunk, H, hd).astype(jnp.float32)
+    qb = shard(qb, "fsdp", None, None, "tp", None)
+    kb = shard(kb, "fsdp", None, None, "tp", None)
+    vb = shard(vb, "fsdp", None, None, "tp", None)
+
+    def per_qblock(qi, qblk):
+        q_pos = qi * q_chunk + jnp.arange(q_chunk) + kv_offset
+
+        @jax.checkpoint  # recompute p-blocks in the backward: never materialize
+        def body(carry, inp):  # the (nq, nk, qc, kc) residual stacks (= S^2)
+            acc, m, l = carry
+            ki, kblk, vblk = inp
+            s = jnp.einsum("bqhd,bkhd->bhqk", qblk, kblk) * scale
+            if causal:
+                k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+                mask = q_pos[:, None] >= k_pos[None, :]
+                s = jnp.where(mask[None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, vblk)
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((B, H, q_chunk, hd), jnp.float32)
+        m0 = jnp.full((B, H, q_chunk), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, H, q_chunk), jnp.float32)
+        (acc, _, l), _ = jax.lax.scan(
+            body, (acc0, m0, l0),
+            (jnp.arange(nk), jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0)))
+        return acc / jnp.maximum(l[..., None], 1e-30)
+
+    out = jax.lax.map(lambda args: per_qblock(*args),
+                      (jnp.arange(nq), jnp.moveaxis(qb, 1, 0)))
+    out = jnp.moveaxis(out, 0, 1)                      # (B, nq, H, q_chunk, hd)
+    out = jnp.moveaxis(out, 2, 3).reshape(B, Sq, H, hd)
+    if H != H_orig:
+        out = out[:, :, :H_orig]
+    return out.astype(q.dtype)
+
+
+def attention_decode(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     cache_len: jnp.ndarray) -> jnp.ndarray:
+    """Single-token attention against a cache.
+
+    q: (B, 1, H, hd); caches: (B, S, Hkv, hd); cache_len: () or (B,) valid length."""
+    B, _, H, hd = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    g = H // Hkv
+    # caches stay in their storage dtype; accumulate in f32 via the MXU --
+    # casting a 32k-500k cache to f32 would double decode HBM (measured in the
+    # dry-run before this change)
+    qg = q.reshape(B, Hkv, g, hd)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) / math.sqrt(hd)
+    pos = jnp.arange(S)
+    valid = pos[None, :] < jnp.reshape(cache_len, (-1, 1))
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(k_cache.dtype)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def attention_init(key, cfg: ModelConfig, d_model: int | None = None):
+    D = d_model or cfg.d_model
+    hd, H, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    params = {
+        "wq": ninit(ks[0], (D, H * hd)),
+        "wk": ninit(ks[1], (D, Hkv * hd)),
+        "wv": ninit(ks[2], (D, Hkv * hd)),
+        "wo": ninit(ks[3], (H * hd, D), scale=1.0 / math.sqrt(H * hd)),
+    }
+    specs = {
+        "wq": ("fsdp", ("tp", H * hd)),
+        "wk": ("fsdp", ("tp", Hkv * hd)),
+        "wv": ("fsdp", ("tp", Hkv * hd)),
+        "wo": (("tp", H * hd), "fsdp"),
+    }
+    if cfg.qkv_bias:
+        params |= {"bq": zinit(None, (H * hd,)), "bk": zinit(None, (Hkv * hd,)),
+                   "bv": zinit(None, (Hkv * hd,))}
+        specs |= {"bq": (("tp", H * hd),), "bk": (("tp", Hkv * hd),),
+                  "bv": (("tp", Hkv * hd),)}
+    return params, specs
+
+
+def attention_qkv(p, x, cfg: ModelConfig):
+    """Project to (q, k, v) with head reshape; x (B, S, D)."""
+    B, S, _ = x.shape
+    hd, H, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    dt = x.dtype
+    q = x @ wcast(p["wq"], dt, "fsdp", "tp")
+    k = x @ wcast(p["wk"], dt, "fsdp", "tp")
+    v = x @ wcast(p["wv"], dt, "fsdp", "tp")
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    return (shard(q.reshape(B, S, H, hd), "fsdp", None, "tp", None),
+            shard(k.reshape(B, S, Hkv, hd), "fsdp", None, "tp", None),
+            shard(v.reshape(B, S, Hkv, hd), "fsdp", None, "tp", None))
+
+
+# ------------------------------------------------------------------------- MLPs
+
+def mlp_init(key, cfg: ModelConfig, d_ff: int | None = None):
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp == "swiglu":
+        params = {"w_gate": ninit(ks[0], (D, F)), "w_up": ninit(ks[1], (D, F)),
+                  "w_down": ninit(ks[2], (F, D), scale=1.0 / math.sqrt(F))}
+        specs = {"w_gate": ("fsdp", ("tp", F)), "w_up": ("fsdp", ("tp", F)),
+                 "w_down": (("tp", F), "fsdp")}
+    else:
+        params = {"w_up": ninit(ks[0], (D, F)),
+                  "w_down": ninit(ks[1], (F, D), scale=1.0 / math.sqrt(F))}
+        specs = {"w_up": ("fsdp", ("tp", F)), "w_down": (("tp", F), "fsdp")}
+    return params, specs
+
+
+def wcast(w, dt, *entries):
+    """Cast a stored-f32 weight to compute dtype *keeping its sharding*, so any
+    FSDP all-gather at the use site moves bf16 wire bytes, not f32 (measured 2x
+    collective reduction on dbrx, EXPERIMENTS.md §Perf)."""
+    return shard(w.astype(dt), *entries)
+
+
+def mlp_apply(p, x, cfg: ModelConfig):
+    dt = x.dtype
+    if cfg.mlp == "swiglu":
+        g = jax.nn.silu(shard(x @ wcast(p["w_gate"], dt, "fsdp", "tp"),
+                              "fsdp", None, "tp"))
+        return (g * (x @ wcast(p["w_up"], dt, "fsdp", "tp"))) \
+            @ wcast(p["w_down"], dt, "tp", "fsdp")
+    h = shard(x @ wcast(p["w_up"], dt, "fsdp", "tp"), "fsdp", None, "tp")
+    h = jnp.square(jax.nn.relu(h)) if cfg.mlp == "relu2" else jax.nn.gelu(h)
+    return h @ wcast(p["w_down"], dt, "tp", "fsdp")
+
+
+# -------------------------------------------------------------------------- MoE
+
+def moe_init(key, cfg: ModelConfig):
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    params = {
+        "router": ninit(ks[0], (D, E)),
+        "experts_gate": ninit(ks[1], (E, D, F)),
+        "experts_up": ninit(ks[2], (E, D, F)),
+        "experts_down": ninit(ks[3], (E, F, D), scale=1.0 / math.sqrt(F)),
+    }
+    specs = {
+        "router": ("fsdp", None),
+        "experts_gate": (("tp", E), "fsdp", None),
+        "experts_up": (("tp", E), "fsdp", None),
+        "experts_down": (("tp", E), None, "fsdp"),
+    }
+    return params, specs
+
+
+def moe_apply(p, x, cfg: ModelConfig):
+    """GShard-style top-k dispatch with per-group capacity (paper-standard einsum
+    formulation; XLA SPMD turns the expert dim sharding into all-to-alls)."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    dt = x.dtype
+    n = B * S
+    g = min(cfg.moe_group_size, n)
+    assert n % g == 0, (n, g)
+    G = n // g
+    cap = max(1, int(math.ceil(g * k * cfg.capacity_factor / E)))
+    xg = shard(x.reshape(G, g, D), "fsdp", None, None)
+    logits = (xg @ p["router"].astype(dt)).astype(jnp.float32)    # (G, g, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_v, gate_i = jax.lax.top_k(probs, k)                      # (G, g, k)
+    gate_v = gate_v / jnp.maximum(gate_v.sum(-1, keepdims=True), 1e-9)
+    # position of each (token, slot) within its expert queue
+    onehot = jax.nn.one_hot(gate_i, E, dtype=jnp.float32)         # (G, g, k, E)
+    slot_flat = onehot.reshape(G, g * k, E)
+    pos = jnp.cumsum(slot_flat, axis=1) - slot_flat               # (G, g*k, E)
+    pos = pos.reshape(G, g, k, E)
+    keep = (pos < cap) & (onehot > 0)
+    pos_c = jnp.clip(pos.astype(jnp.int32), 0, cap - 1)
+    cap_oh = jax.nn.one_hot(pos_c, cap, dtype=jnp.float32) * keep[..., None]
+    # dispatch (G,g,E,cap) / combine weighted by gate
+    dispatch = cap_oh.sum(2)                                      # (G, g, E, cap)
+    combine = (cap_oh * gate_v[..., None, None]).sum(2)           # (G, g, E, cap)
+    xe = jnp.einsum("Ggec,Ggd->eGcd", dispatch.astype(dt), xg)    # (E, G, cap, D)
+    xe = shard(xe, "tp", "fsdp", None, None)
+    h = jax.nn.silu(jnp.einsum("eGcd,edf->eGcf", xe,
+                               wcast(p["experts_gate"], dt, "tp", "fsdp", None)))
+    h = h * jnp.einsum("eGcd,edf->eGcf", xe,
+                       wcast(p["experts_up"], dt, "tp", "fsdp", None))
+    h = shard(h, "tp", "fsdp", None, None)
+    ye = jnp.einsum("eGcf,efd->eGcd", h,
+                    wcast(p["experts_down"], dt, "tp", None, "fsdp"))
+    y = jnp.einsum("Ggec,eGcd->Ggd", combine.astype(dt), ye)
+    aux = _load_balance_loss(probs, onehot)
+    return y.reshape(B, S, D), aux
+
+
+def _load_balance_loss(probs: jnp.ndarray, onehot: jnp.ndarray) -> jnp.ndarray:
+    """Switch-style auxiliary load-balancing loss."""
+    E = probs.shape[-1]
+    frac_tokens = onehot.sum(2).mean(axis=(0, 1))    # (E,)
+    frac_probs = probs.mean(axis=(0, 1))
+    return E * jnp.sum(frac_tokens * frac_probs)
+
+
+# -------------------------------------------------------------------- embedding
+
+VOCAB_PAD = 16  # pad the embedding vocab dim to a TP multiple (odd vocabs would
+                # otherwise replicate the logits -- 16x memory on seamless-m4t)
+
+
+def padded_vocab(v: int) -> int:
+    return -(-v // VOCAB_PAD) * VOCAB_PAD
+
+
+def embed_init(key, cfg: ModelConfig):
+    V, D = padded_vocab(cfg.vocab), cfg.d_model
+    params = {"embedding": ninit(key, (V, D), scale=1.0)}
+    specs = {"embedding": (("tp", V), "fsdp")}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = ninit(jax.random.fold_in(key, 1), (D, V))
+        specs["lm_head"] = ("fsdp", ("tp", V))
+    return params, specs
+
+
+def embed_lookup(p, tokens: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    x = p["embedding"].astype(cfg.dtype)[tokens]
+    return shard(x, *("fsdp",) + (None,) * (x.ndim - 1))
+
+
+def lm_logits(p, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    w = p["embedding"].T if cfg.tie_embeddings else p["lm_head"]
+    logits = shard(x @ w.astype(x.dtype), "fsdp", None, "tp")
+    if logits.shape[-1] != cfg.vocab:  # mask the vocab padding
+        pad_id = jnp.arange(logits.shape[-1]) >= cfg.vocab
+        logits = jnp.where(pad_id, jnp.asarray(-1e30, logits.dtype), logits)
+    return logits
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  z_loss: float = 1e-4) -> jnp.ndarray:
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    return loss.mean()
+
+
+# -------------------------------------------------------- logical spec resolution
+
+def resolve_specs(spec_tree, axes: dict[str, int], fsdp: tuple[str, ...],
+                  tp: str, extra_leading: int = 0):
+    """Turn logical spec tuples into PartitionSpecs.
+
+    Logical entries: None | "fsdp" | "tp" | ("tp"|"fsdp", dim_size) -- the sized form
+    shards only if dim_size divides the axis size (small archs replicate instead).
+    Subtrees wrapped as ("stacked", subtree) / ("stacked2", subtree) get one / two
+    leading None dims (lax.scan-stacked layer parameters).
+    """
+    fsdp_size = int(np.prod([axes[a] for a in fsdp])) if fsdp else 1
+    tp_size = axes[tp]
+    fsdp_name = fsdp if len(fsdp) > 1 else fsdp[0]
+
+    def one(entry):
+        if entry is None:
+            return None
+        if entry == "fsdp":
+            return fsdp_name
+        if entry == "tp":
+            return tp
+        kind, dim = entry
+        size = fsdp_size if kind == "fsdp" else tp_size
+        axis = fsdp_name if kind == "fsdp" else tp
+        return axis if dim % size == 0 else None
+
+    def walk(t, lead):
+        if (isinstance(t, tuple) and len(t) == 2
+                and t[0] in ("stacked", "stacked2") and isinstance(t[1], dict)):
+            return walk(t[1], lead + (1 if t[0] == "stacked" else 2))
+        if isinstance(t, dict):
+            return {k: walk(v, lead) for k, v in t.items()}
+        if isinstance(t, tuple):
+            return P(*(None,) * lead, *(one(e) for e in t))
+        raise TypeError(f"bad spec entry {t!r}")
+
+    return walk(spec_tree, extra_leading)

@@ -1,0 +1,153 @@
+"""Uniform model API over all 10 assigned architectures.
+
+``get_model(cfg)`` returns a ``Model`` whose members close over the config:
+  init(key) -> (params, logical_specs)
+  train_loss(params, batch, remat_policy)       -- next-token loss
+  prefill(params, batch, state) -> (logits, state)
+  decode_step(params, token_batch, state) -> (logits, state)
+  make_state(batch, max_len) / state_specs()    -- KV cache or recurrent state
+  input_specs(shape) -> (tree of ShapeDtypeStruct, tree of logical specs)
+
+``input_specs`` provides the assignment-mandated ShapeDtypeStruct stand-ins: tokens
+for LMs, stub frame embeddings for [audio], stub patch embeddings + M-RoPE ids for
+[vlm] -- shardable, weak-type-correct, no allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, rwkv, transformer, zamba
+from repro.models.encdec import SRC_RATIO
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    train_loss: Callable
+    prefill: Callable
+    decode_step: Callable
+    make_state: Callable        # (batch, max_len) -> cache/recurrent state
+    state_specs: Callable       # (batch=None) -> logical specs for the state
+    input_specs: Callable       # (ShapeConfig) -> (shapes, logical specs)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _lm_inputs(cfg: ModelConfig, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        shapes = {"token": _sds((B, 1), jnp.int32)}
+        specs = {"token": ("fsdp", None)}
+        return shapes, specs
+    shapes = {"tokens": _sds((B, S), jnp.int32),
+              "labels": _sds((B, S), jnp.int32)}
+    specs = {"tokens": ("fsdp", None), "labels": ("fsdp", None)}
+    return shapes, specs
+
+
+def _vlm_inputs(cfg: ModelConfig, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return ({"token": _sds((B, 1), jnp.int32)}, {"token": ("fsdp", None)})
+    s_img = int(S * cfg.image_frac) // 256 * 256
+    s_txt = S - s_img
+    shapes = {"tokens": _sds((B, s_txt), jnp.int32),
+              "labels": _sds((B, s_txt), jnp.int32),
+              "patch_embeds": _sds((B, s_img, cfg.d_model), cfg.dtype),
+              "pos3": _sds((B, 3, S), jnp.int32)}
+    specs = {"tokens": ("fsdp", None), "labels": ("fsdp", None),
+             "patch_embeds": ("fsdp", None, None), "pos3": ("fsdp", None, None)}
+    return shapes, specs
+
+
+def _encdec_inputs(cfg: ModelConfig, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    s_tgt = max(S // SRC_RATIO, 128)
+    if shape.kind == "decode":
+        return ({"token": _sds((B, 1), jnp.int32)}, {"token": ("fsdp", None)})
+    shapes = {"frames": _sds((B, S, cfg.d_model), cfg.dtype),
+              "tokens": _sds((B, s_tgt), jnp.int32),
+              "labels": _sds((B, s_tgt), jnp.int32)}
+    specs = {"frames": ("fsdp", None, None), "tokens": ("fsdp", None),
+             "labels": ("fsdp", None)}
+    return shapes, specs
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        def prefill_fn(params, batch, state):
+            return transformer.prefill(
+                params, cfg, batch["tokens"], state,
+                pos3=batch.get("pos3"), prefix_embeds=batch.get("patch_embeds"))
+
+        return Model(
+            cfg=cfg,
+            init=lambda key: transformer.init(cfg, key),
+            train_loss=lambda p, b, rp=None: transformer.train_loss(p, cfg, b, rp),
+            prefill=prefill_fn,
+            decode_step=lambda p, t, st: transformer.decode_step(p, cfg, t, st),
+            make_state=lambda b, m: transformer.init_cache(cfg, b, m),
+            state_specs=lambda b=None: transformer.cache_specs(cfg),
+            input_specs=(lambda s: _vlm_inputs(cfg, s)) if fam == "vlm"
+            else (lambda s: _lm_inputs(cfg, s)),
+        )
+    if fam == "ssm":
+        return Model(
+            cfg=cfg,
+            init=lambda key: rwkv.init(cfg, key),
+            train_loss=lambda p, b, rp=None: rwkv.train_loss(p, cfg, b, rp),
+            prefill=lambda p, b, st: rwkv.prefill(p, cfg, b["tokens"], st),
+            decode_step=lambda p, t, st: rwkv.decode_step(p, cfg, t, st),
+            make_state=lambda b, m: rwkv.init_state(cfg, b),
+            state_specs=lambda b=None: rwkv.state_specs(cfg),
+            input_specs=lambda s: _lm_inputs(cfg, s),
+        )
+    if fam == "hybrid":
+        return Model(
+            cfg=cfg,
+            init=lambda key: zamba.init(cfg, key),
+            train_loss=lambda p, b, rp=None: zamba.train_loss(p, cfg, b, rp),
+            prefill=lambda p, b, st: zamba.prefill(p, cfg, b["tokens"], st),
+            decode_step=lambda p, t, st: zamba.decode_step(p, cfg, t, st),
+            make_state=lambda b, m: zamba.init_state(cfg, b, m),
+            state_specs=lambda b=None: zamba.state_specs(cfg, batch=b),
+            input_specs=lambda s: _lm_inputs(cfg, s),
+        )
+    if fam == "encdec":
+        def prefill_fn(params, batch, state):
+            return encdec.prefill(params, cfg, batch["frames"], batch["tokens"],
+                                  state)
+
+        def make_state(b, m):
+            return encdec.init_cache(cfg, b, m, max(m // SRC_RATIO, 128))
+
+        return Model(
+            cfg=cfg,
+            init=lambda key: encdec.init(cfg, key),
+            train_loss=lambda p, b, rp=None: encdec.train_loss(p, cfg, b, rp),
+            prefill=prefill_fn,
+            decode_step=lambda p, t, st: encdec.decode_step(p, cfg, t, st),
+            make_state=make_state,
+            state_specs=lambda b=None: encdec.cache_specs(cfg),
+            input_specs=lambda s: _encdec_inputs(cfg, s),
+        )
+    raise ValueError(f"unknown family {fam}")
+
+
+# --------------------------------------------------------------- shape skip rules
+
+def cell_status(cfg: ModelConfig, shape: ShapeConfig) -> str:
+    """'run' or a recorded skip reason (DESIGN.md shape-applicability)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return ("skip: pure full-attention arch -- O(S^2) prefill and a >TB KV cache "
+                "at 524k tokens are not deployable (DESIGN.md)")
+    return "run"

@@ -1,0 +1,79 @@
+"""RWKV6 (Finch) full model program: attention-free LM, O(1)-state decode."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.ssm import rwkv_layer_fwd, rwkv_layer_init
+
+
+def init(cfg: ModelConfig, key):
+    ke, kl = jax.random.split(key)
+    emb_p, emb_s = L.embed_init(ke, cfg)
+    lp = jax.vmap(lambda k: rwkv_layer_init(k, cfg)[0])(
+        jax.random.split(kl, cfg.n_layers))
+    _, ls = rwkv_layer_init(kl, cfg)
+    params = {"embed": emb_p, "layers": lp,
+              "final_norm": L.oinit(None, (cfg.d_model,))}
+    specs = {"embed": emb_s, "layers": ("stacked", ls), "final_norm": (None,)}
+    return params, specs
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    D, H = cfg.d_model, cfg.n_heads
+    hd = D // H
+    Lyr = cfg.n_layers
+    return {"tm_last": jnp.zeros((Lyr, batch, D), dtype),
+            "cm_last": jnp.zeros((Lyr, batch, D), dtype),
+            "wkv": jnp.zeros((Lyr, batch, H, hd, hd), jnp.float32),
+            "len": jnp.zeros((), jnp.int32)}
+
+
+def state_specs(cfg: ModelConfig):
+    return {"tm_last": (None, "fsdp", None), "cm_last": (None, "fsdp", None),
+            "wkv": (None, "fsdp", ("tp", cfg.n_heads), None, None), "len": ()}
+
+
+def forward(params, cfg: ModelConfig, tokens, state=None, remat_policy=None):
+    x = L.embed_lookup(params["embed"], tokens, cfg)
+    B = x.shape[0]
+    st = state or init_state(cfg, B)
+
+    def body(x, inp):
+        lp, tm, cm, wkv = inp
+        x, ns = rwkv_layer_fwd(cfg, lp, x,
+                               {"tm_last": tm, "cm_last": cm, "wkv": wkv})
+        return x, (ns["tm_last"], ns["cm_last"], ns["wkv"])
+
+    body_fn = body if remat_policy is None else jax.checkpoint(
+        body, policy=remat_policy)
+    x, (tm, cm, wkv) = jax.lax.scan(
+        body_fn, x, (params["layers"], st["tm_last"].astype(x.dtype),
+                     st["cm_last"].astype(x.dtype), st["wkv"]))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    new_state = {"tm_last": tm, "cm_last": cm, "wkv": wkv,
+                 "len": st["len"] + tokens.shape[1]}
+    return x, new_state
+
+
+def train_loss(params, cfg: ModelConfig, batch, remat_policy=None):
+    x, _ = forward(params, cfg, batch["tokens"], remat_policy=remat_policy)
+    logits = L.lm_logits(params["embed"], x, cfg)
+    return L.cross_entropy(logits, batch["labels"])
+
+
+def prefill(params, cfg: ModelConfig, tokens, state):
+    x, new_state = forward(params, cfg, tokens, state)
+    logits = L.lm_logits(params["embed"], x[:, -1:], cfg)
+    return logits, new_state
+
+
+def decode_step(params, cfg: ModelConfig, token, state):
+    """token (B, 1).  The recurrent state is the whole 'cache' -- its size is
+    independent of context length, which is why long_500k decode is deployable."""
+    x, new_state = forward(params, cfg, token, state)
+    logits = L.lm_logits(params["embed"], x, cfg)
+    return logits, new_state

@@ -1,0 +1,261 @@
+"""Attention-free / hybrid families: RWKV6 ("Finch") and Mamba2 (for Zamba2).
+
+Both use a *chunked* linear-recurrence formulation for train/prefill -- quadratic only
+within a chunk (ssm_chunk), with an inter-chunk state scan -- and an O(1) recurrent
+step for decode.  All recurrence math runs in f32.
+
+Numerical scheme for the decay products (both models): factor the pairwise decay
+exp(cum_t - cum_s) into exp(cum_t) * exp(-cum_s).  cum is non-increasing, so the first
+factor only underflows (to a correct 0); the second factor's exponent is clamped at 60,
+which only perturbs terms whose first factor already vanished.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.sharding_ctx import shard
+
+_CLAMP = 60.0
+
+
+def _chunk(x, c):  # (B, S, ...) -> (B, nc, c, ...)
+    B, S = x.shape[:2]
+    return x.reshape(B, S // c, c, *x.shape[2:])
+
+
+# =============================================================== RWKV6 (Finch)
+
+def rwkv_layer_init(key, cfg: ModelConfig):
+    D, F = cfg.d_model, cfg.d_ff
+    H, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+    r = 64  # decay-LoRA rank
+    ks = jax.random.split(key, 10)
+    params = {
+        "wr": L.ninit(ks[0], (D, D)), "wk": L.ninit(ks[1], (D, D)),
+        "wv": L.ninit(ks[2], (D, D)), "wg": L.ninit(ks[3], (D, D)),
+        "wo": L.ninit(ks[4], (D, D)),
+        "w0": jnp.full((D,), -1.0, jnp.float32),          # base decay
+        "w_lora_a": L.ninit(ks[5], (D, r)),
+        "w_lora_b": L.zinit(None, (r, D)),
+        "u": L.ninit(ks[6], (H, hd), scale=0.5),           # bonus
+        "mix": jnp.full((5, D), 0.5, jnp.float32),         # token-shift mixes r/k/v/w/g
+        "ln_x": L.oinit(None, (D,)),
+        "cm_wk": L.ninit(ks[7], (D, F)), "cm_wv": L.ninit(ks[8], (F, D),
+                                                          scale=1 / math.sqrt(F)),
+        "cm_wr": L.ninit(ks[9], (D, D)),
+        "cm_mix": jnp.full((2, D), 0.5, jnp.float32),
+        "norm1": L.oinit(None, (D,)), "norm2": L.oinit(None, (D,)),
+    }
+    specs = {
+        "wr": ("fsdp", ("tp", D)), "wk": ("fsdp", ("tp", D)),
+        "wv": ("fsdp", ("tp", D)), "wg": ("fsdp", ("tp", D)),
+        "wo": (("tp", D), "fsdp"),
+        "w0": (("tp", D),), "w_lora_a": ("fsdp", None), "w_lora_b": (None, ("tp", D)),
+        "u": (("tp", H), None), "mix": (None, None), "ln_x": (None,),
+        "cm_wk": ("fsdp", ("tp", F)), "cm_wv": (("tp", F), "fsdp"),
+        "cm_wr": ("fsdp", ("tp", D)), "cm_mix": (None, None),
+        "norm1": (None,), "norm2": (None,),
+    }
+    return params, specs
+
+
+def _token_shift(x, x_last):
+    """x: (B, S, D); x_last: (B, D) hidden from the previous segment."""
+    prev = jnp.concatenate([x_last[:, None], x[:, :-1]], axis=1)
+    return prev
+
+
+def _wkv_chunked(r, k, v, logw, u, s0, chunk: int):
+    """r/k/v/logw: (B, S, H, hd) f32 (logw <= 0); u: (H, hd); s0: (B, H, hd, hd).
+    Returns (y (B,S,H,hd), s_end)."""
+    B, S, H, hd = r.shape
+    c = min(chunk, S)
+    assert S % c == 0
+    rc, kc, vc, wc = (shard(jnp.moveaxis(_chunk(t, c), 3, 2),
+                            "fsdp", None, "tp", None, None)
+                      for t in (r, k, v, logw))
+    # shapes now (B, nc, H, c, hd)
+
+    @jax.checkpoint  # intra-chunk score blocks recompute in the backward
+    def body(s, inp):
+        rb, kb, vb, wb = inp                     # (B, H, c, hd)
+        cum = jnp.cumsum(wb, axis=2)             # inclusive
+        cum_ex = cum - wb                        # exclusive
+        a = rb * jnp.exp(cum_ex)
+        b = kb * jnp.exp(jnp.minimum(-cum, _CLAMP))
+        scores = jnp.einsum("bhti,bhsi->bhts", a, b)
+        t_idx = jnp.arange(c)
+        mask = (t_idx[:, None] > t_idx[None, :]).astype(scores.dtype)
+        y = jnp.einsum("bhts,bhsj->bhtj", scores * mask, vb)
+        diag = jnp.sum(rb * u[None, :, None, :] * kb, axis=-1, keepdims=True)
+        y = y + diag * vb
+        y = y + jnp.einsum("bhti,bhij->bhtj", a, s)
+        decay_all = jnp.exp(cum[:, :, -1:, :])   # (B, H, 1, hd)
+        bs = b * decay_all
+        s_new = jnp.exp(cum[:, :, -1, :])[..., None] * s \
+            + jnp.einsum("bhsi,bhsj->bhij", bs, vb)
+        return s_new, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (rc, kc, vc, wc))
+    s_end, ys = jax.lax.scan(body, s0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                   # (B, nc, H, c, hd)
+    y = jnp.moveaxis(y, 2, 3).reshape(B, S, H, hd)
+    return y, s_end
+
+
+def rwkv_layer_fwd(cfg: ModelConfig, lp, x, state=None):
+    """x: (B, S, D).  state (decode/stream): dict with tm_last, cm_last, wkv."""
+    B, S, D = x.shape
+    H, hd = cfg.n_heads, D // cfg.n_heads
+    dt = x.dtype
+    tm_last = state["tm_last"] if state else jnp.zeros((B, D), dt)
+    cm_last = state["cm_last"] if state else jnp.zeros((B, D), dt)
+    s0 = state["wkv"] if state else jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    # ---- time mix ----
+    x = shard(x, "fsdp", None, None)
+    h = L.rms_norm(x, lp["norm1"], cfg.norm_eps)
+    prev = _token_shift(h, tm_last)
+    mix = lp["mix"].astype(dt)
+    def mx(i):
+        return h * mix[i] + prev * (1 - mix[i])
+    r = (mx(0) @ lp["wr"].astype(dt)).reshape(B, S, H, hd)
+    k = (mx(1) @ lp["wk"].astype(dt)).reshape(B, S, H, hd)
+    v = (mx(2) @ lp["wv"].astype(dt)).reshape(B, S, H, hd)
+    g = mx(4) @ lp["wg"].astype(dt)
+    # data-dependent decay (the Finch contribution)
+    lora = jnp.tanh(mx(3) @ lp["w_lora_a"].astype(dt)) @ lp["w_lora_b"].astype(dt)
+    logw = -jnp.exp(lp["w0"].astype(jnp.float32) + lora.astype(jnp.float32))
+    logw = logw.reshape(B, S, H, hd)
+    y, s_end = _wkv_chunked(r.astype(jnp.float32), k.astype(jnp.float32),
+                            v.astype(jnp.float32), logw,
+                            lp["u"].astype(jnp.float32), s0, cfg.ssm_chunk)
+    y = y.reshape(B, S, D).astype(dt)
+    y = L.rms_norm(y, lp["ln_x"], cfg.norm_eps) * jax.nn.silu(g)
+    x = x + y @ lp["wo"].astype(dt)
+    tm_last_new = h[:, -1]
+
+    # ---- channel mix ----
+    h2 = L.rms_norm(x, lp["norm2"], cfg.norm_eps)
+    prev2 = _token_shift(h2, cm_last)
+    cmix = lp["cm_mix"].astype(dt)
+    xk = h2 * cmix[0] + prev2 * (1 - cmix[0])
+    xr = h2 * cmix[1] + prev2 * (1 - cmix[1])
+    kk = jnp.square(jax.nn.relu(xk @ lp["cm_wk"].astype(dt)))
+    out = jax.nn.sigmoid(xr @ lp["cm_wr"].astype(dt)) * (kk @ lp["cm_wv"].astype(dt))
+    x = x + out
+    new_state = {"tm_last": tm_last_new, "cm_last": h2[:, -1], "wkv": s_end}
+    return x, new_state
+
+
+# ============================================================== Mamba2 (SSD)
+
+def mamba_layer_init(key, cfg: ModelConfig):
+    D = cfg.d_model
+    d_in = 2 * D
+    H, N = cfg.ssm_heads, cfg.ssm_state
+    P = d_in // H
+    ks = jax.random.split(key, 7)
+    params = {
+        "w_z": L.ninit(ks[0], (D, d_in)), "w_x": L.ninit(ks[1], (D, d_in)),
+        "w_B": L.ninit(ks[2], (D, N)), "w_C": L.ninit(ks[3], (D, N)),
+        "w_dt": L.ninit(ks[4], (D, H)),
+        "conv_w": L.ninit(ks[5], (4, d_in), scale=0.5),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "ssm_norm": L.oinit(None, (d_in,)),
+        "w_out": L.ninit(ks[6], (d_in, D), scale=1 / math.sqrt(d_in)),
+        "norm": L.oinit(None, (D,)),
+    }
+    specs = {
+        "w_z": ("fsdp", ("tp", d_in)), "w_x": ("fsdp", ("tp", d_in)),
+        "w_B": ("fsdp", None), "w_C": ("fsdp", None),
+        "w_dt": ("fsdp", ("tp", H)),
+        "conv_w": (None, ("tp", d_in)),
+        "A_log": (("tp", H),), "D_skip": (("tp", H),), "dt_bias": (("tp", H),),
+        "ssm_norm": (None,), "w_out": (("tp", d_in), "fsdp"),
+        "norm": (None,),
+    }
+    return params, specs
+
+
+def _ssd_chunked(x, Bm, Cm, la, h0, chunk: int):
+    """x: (B,S,H,P); Bm/Cm: (B,S,N); la: (B,S,H) log-decay*dt (<=0, already includes
+    dt); x is already dt-scaled.  h0: (B,H,P,N).  Returns (y, h_end)."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    c = min(chunk, S)
+    assert S % c == 0
+    xc = jnp.moveaxis(_chunk(x, c), 3, 2)        # (B,nc,H,c,P)
+    Bc = _chunk(Bm, c)                           # (B,nc,c,N)
+    Cc = _chunk(Cm, c)
+    lc = jnp.moveaxis(_chunk(la, c), 3, 2)       # (B,nc,H,c)
+
+    @jax.checkpoint  # intra-chunk score blocks recompute in the backward
+    def body(h, inp):
+        xb, Bb, Cb, lb = inp                     # (B,H,c,P), (B,c,N), (B,c,N), (B,H,c)
+        cum = jnp.cumsum(lb, axis=2)             # inclusive
+        dplus = jnp.exp(cum)                     # (B,H,c)
+        dminus = jnp.exp(jnp.minimum(-cum, _CLAMP))
+        cb = jnp.einsum("btn,bsn->bts", Cb, Bb)  # (B,c,c)
+        t_idx = jnp.arange(c)
+        mask = (t_idx[:, None] >= t_idx[None, :])
+        scores = cb[:, None] * dplus[..., :, None] * dminus[..., None, :]
+        scores = jnp.where(mask[None, None], scores, 0.0)
+        y = jnp.einsum("bhts,bhsp->bhtp", scores, xb)
+        # contribution of the carried state
+        y = y + jnp.einsum("btn,bhpn->bhtp", Cb, h) * dplus[..., None]
+        # new state
+        xb_dec = xb * (dminus * jnp.exp(cum[:, :, -1:]))[..., None]
+        h_new = jnp.exp(cum[:, :, -1])[..., None, None] * h \
+            + jnp.einsum("bhsp,bsn->bhpn", xb_dec, Bb)
+        return h_new, y
+
+    xs = (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(Bc, 1, 0),
+          jnp.moveaxis(Cc, 1, 0), jnp.moveaxis(lc, 1, 0))
+    h_end, ys = jax.lax.scan(body, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                   # (B,nc,H,c,P)
+    y = jnp.moveaxis(y, 2, 3).reshape(B, S, H, P)
+    return y, h_end
+
+
+def mamba_layer_fwd(cfg: ModelConfig, lp, x, state=None):
+    """Mamba2 block.  state: {"conv": (B,3,d_in), "ssd": (B,H,P,N)}."""
+    B, S, D = x.shape
+    d_in = 2 * D
+    H, N = cfg.ssm_heads, cfg.ssm_state
+    P = d_in // H
+    dt_ = x.dtype
+    x = shard(x, "fsdp", None, None)
+    h = L.rms_norm(x, lp["norm"], cfg.norm_eps)
+    z = shard(h @ lp["w_z"].astype(dt_), "fsdp", None, "tp")
+    xi = shard(h @ lp["w_x"].astype(dt_), "fsdp", None, "tp")
+    conv_state = state["conv"] if state else jnp.zeros((B, 3, d_in), dt_)
+    xi_pad = jnp.concatenate([conv_state, xi], axis=1)
+    # depthwise causal conv, kernel 4
+    conv_w = lp["conv_w"].astype(dt_)
+    xi = sum(xi_pad[:, 3 - j:3 - j + S] * conv_w[3 - j] for j in range(4))
+    xi = jax.nn.silu(xi)
+    new_conv = xi_pad[:, S:S + 3]  # last 3 pre-activation inputs
+    Bm = (h @ lp["w_B"].astype(dt_)).astype(jnp.float32)
+    Cm = (h @ lp["w_C"].astype(dt_)).astype(jnp.float32)
+    dtr = (h @ lp["w_dt"].astype(dt_)).astype(jnp.float32)
+    dt_act = jax.nn.softplus(dtr + lp["dt_bias"])            # (B,S,H)
+    la = -jnp.exp(lp["A_log"]) * dt_act                      # (B,S,H) log decay
+    xh = xi.reshape(B, S, H, P).astype(jnp.float32)
+    x_scaled = xh * dt_act[..., None]
+    h0 = state["ssd"] if state else jnp.zeros((B, H, P, N), jnp.float32)
+    y, h_end = _ssd_chunked(x_scaled, Bm, Cm, la, h0, cfg.ssm_chunk)
+    y = y + lp["D_skip"][None, None, :, None] * xh
+    y = y.reshape(B, S, d_in).astype(dt_)
+    y = L.rms_norm(y * jax.nn.silu(z), lp["ssm_norm"], cfg.norm_eps)
+    out = y @ lp["w_out"].astype(dt_)
+    new_state = {"conv": new_conv, "ssd": h_end}
+    return x + out, new_state

@@ -1,0 +1,210 @@
+"""Decoder-only transformer LM covering the dense, MoE and VLM families.
+
+Layers are scanned (`lax.scan` over stacked params) so full-size configs compile fast;
+remat policy is applied per-layer by the training substrate.  Serving uses an explicit
+KV cache threaded through the same scan.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.sharding_ctx import shard
+
+
+# ------------------------------------------------------------------------ params
+
+def layer_init(key, cfg: ModelConfig):
+    ka, km = jax.random.split(key)
+    attn_p, attn_s = L.attention_init(ka, cfg)
+    if cfg.family == "moe":
+        mlp_p, mlp_s = L.moe_init(km, cfg)
+    else:
+        mlp_p, mlp_s = L.mlp_init(km, cfg)
+    params = {"attn": attn_p, "mlp": mlp_p,
+              "norm1": L.oinit(None, (cfg.d_model,)),
+              "norm2": L.oinit(None, (cfg.d_model,))}
+    specs = {"attn": attn_s, "mlp": mlp_s, "norm1": (None,), "norm2": (None,)}
+    return params, specs
+
+
+def init(cfg: ModelConfig, key) -> tuple[Any, Any]:
+    ke, kl = jax.random.split(key)
+    emb_p, emb_s = L.embed_init(ke, cfg)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    lp = jax.vmap(lambda k: layer_init(k, cfg)[0])(layer_keys)
+    _, ls = layer_init(kl, cfg)
+    params = {"embed": emb_p, "layers": lp,
+              "final_norm": L.oinit(None, (cfg.d_model,))}
+    specs = {"embed": emb_s, "layers": ("stacked", ls), "final_norm": (None,)}
+    return params, specs
+
+
+# ----------------------------------------------------------------------- forward
+
+def _layer_fwd(cfg: ModelConfig, x, lp, positions, pos3=None):
+    x = shard(x, "fsdp", None, None)
+    h = L.rms_norm(x, lp["norm1"], cfg.norm_eps)
+    q, k, v = L.attention_qkv(lp["attn"], h, cfg)
+    if cfg.mrope:
+        q = L.apply_mrope(q, pos3, cfg.rope_theta, cfg.mrope_sections)
+        k = L.apply_mrope(k, pos3, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    attn = L.flash_attention(q, k, v, causal=True)
+    B, S, _, _ = attn.shape
+    x = x + attn.reshape(B, S, -1) @ lp["attn"]["wo"].astype(x.dtype)
+    h = L.rms_norm(x, lp["norm2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        y, aux = L.moe_apply(lp["mlp"], h, cfg)
+    else:
+        y, aux = L.mlp_apply(lp["mlp"], h, cfg), 0.0
+    return x + y, aux
+
+
+def forward(params, cfg: ModelConfig, tokens, positions=None, pos3=None,
+            prefix_embeds=None, remat_policy=None):
+    """-> (hidden (B, S, D), aux_loss).  prefix_embeds (VLM): (B, Sp, D) patch
+    embeddings prepended to the token embeddings."""
+    x = L.embed_lookup(params["embed"], tokens, cfg)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if cfg.mrope and pos3 is None:
+        pos3 = jnp.broadcast_to(positions[:, None, :], (B, 3, S))
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a = _layer_fwd(cfg, x, lp, positions, pos3)
+        return (x, aux + a), None
+
+    body_fn = body if remat_policy is None else jax.checkpoint(
+        body, policy=remat_policy)
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.float32(0.0)), params["layers"])
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+def train_loss(params, cfg: ModelConfig, batch, remat_policy=None):
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    x, aux = forward(params, cfg, tokens,
+                     pos3=batch.get("pos3"),
+                     prefix_embeds=batch.get("patch_embeds"),
+                     remat_policy=remat_policy)
+    if batch.get("patch_embeds") is not None:
+        x = x[:, batch["patch_embeds"].shape[1]:]  # loss over text positions
+    logits = L.lm_logits(params["embed"], x, cfg)
+    return L.cross_entropy(logits, labels) + 0.01 * aux
+
+
+# ----------------------------------------------------------------------- serving
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "len": jnp.zeros((), jnp.int32)}
+
+
+def cache_specs(cfg: ModelConfig, tp_size: int = 16):
+    """Logical partition specs for the KV cache.
+
+    Heads shard over tp when divisible; otherwise the *sequence* dim does --
+    decode attention contracts over S, so XLA reduces partial sums instead of
+    replicating a multi-GB cache per chip."""
+    if cfg.n_kv_heads % tp_size == 0:
+        kv = (None, "fsdp", None, "tp", None)
+    else:
+        kv = (None, "fsdp", "tp", None, None)
+    return {"k": kv, "v": kv, "len": ()}
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache, positions=None, pos3=None,
+            prefix_embeds=None):
+    """Run the full prompt, fill the cache, return logits of the last position."""
+    x = L.embed_lookup(params["embed"], tokens, cfg)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if cfg.mrope and pos3 is None:
+        pos3 = jnp.broadcast_to(positions[:, None, :], (B, 3, S))
+
+    def body(x, inp):
+        lp, = inp
+        h = L.rms_norm(x, lp["norm1"], cfg.norm_eps)
+        q, k, v = L.attention_qkv(lp["attn"], h, cfg)
+        if cfg.mrope:
+            q = L.apply_mrope(q, pos3, cfg.rope_theta, cfg.mrope_sections)
+            k = L.apply_mrope(k, pos3, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            k = L.apply_rope(k, positions, cfg.rope_theta)
+        attn = L.flash_attention(q, k, v, causal=True)
+        x = x + attn.reshape(B, S, -1) @ lp["attn"]["wo"].astype(x.dtype)
+        h = L.rms_norm(x, lp["norm2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            y, _ = L.moe_apply(lp["mlp"], h, cfg)
+        else:
+            y = L.mlp_apply(lp["mlp"], h, cfg)
+        return x + y, (k.astype(cache["k"].dtype), v.astype(cache["v"].dtype))
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"],))
+    k_new = jax.lax.dynamic_update_slice(cache["k"], ks, (0, 0, 0, 0, 0))
+    v_new = jax.lax.dynamic_update_slice(cache["v"], vs, (0, 0, 0, 0, 0))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.lm_logits(params["embed"], x[:, -1:], cfg)
+    return logits, {"k": k_new, "v": v_new, "len": jnp.int32(S)}
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, pos3=None):
+    """One new token against the cache.  token: (B, 1) int32."""
+    B = token.shape[0]
+    pos = cache["len"]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    x = L.embed_lookup(params["embed"], token, cfg)
+    if cfg.mrope and pos3 is None:
+        pos3 = jnp.broadcast_to(positions[:, None, :], (B, 3, 1))
+
+    def body(x, inp):
+        lp, kc, vc = inp
+        h = L.rms_norm(x, lp["norm1"], cfg.norm_eps)
+        q, k, v = L.attention_qkv(lp["attn"], h, cfg)
+        if cfg.mrope:
+            q = L.apply_mrope(q, pos3, cfg.rope_theta, cfg.mrope_sections)
+            k = L.apply_mrope(k, pos3, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            k = L.apply_rope(k, positions, cfg.rope_theta)
+        k = k.astype(kc.dtype)
+        v = v.astype(vc.dtype)
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, pos, 0, 0))
+        attn = L.attention_decode(q, kc, vc, pos + 1)
+        x = x + attn.reshape(B, 1, -1) @ lp["attn"]["wo"].astype(x.dtype)
+        h = L.rms_norm(x, lp["norm2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            y, _ = L.moe_apply(lp["mlp"], h, cfg)
+        else:
+            y = L.mlp_apply(lp["mlp"], h, cfg)
+        # ys carry only the new (B,1,Hkv,hd) slice -- streaming the full cache
+        # through scan stacking costs an extra cache-sized buffer per step
+        return x + y, (k, v)
+
+    x, (ks, vs) = jax.lax.scan(body, x,
+                               (params["layers"], cache["k"], cache["v"]))
+    k_new = jax.lax.dynamic_update_slice(cache["k"], ks, (0, 0, pos, 0, 0))
+    v_new = jax.lax.dynamic_update_slice(cache["v"], vs, (0, 0, pos, 0, 0))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.lm_logits(params["embed"], x, cfg)
+    new_cache = {"k": k_new, "v": v_new, "len": pos + 1}
+    return logits, new_cache

@@ -1,0 +1,190 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* (weight-tied) attention+MLP
+block interposed every ``attn_every`` inner layers.
+
+Layer layout for n_layers=81, attn_every=6: 13 super-blocks of (6 mamba layers +
+shared attention), then 3 tail mamba layers.  The shared block's KV cache therefore
+has 13 entries (one per application) -- attention cost at decode is O(S) per token
+while the mamba state is O(1), so 500k-context serving remains deployable
+(DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.ssm import mamba_layer_fwd, mamba_layer_init
+
+
+def _split(cfg: ModelConfig) -> tuple[int, int, int]:
+    k = cfg.attn_every
+    n_super = cfg.n_layers // k
+    tail = cfg.n_layers - n_super * k
+    return n_super, k, tail
+
+
+def shared_block_init(key, cfg: ModelConfig):
+    ka, km = jax.random.split(key)
+    attn_p, attn_s = L.attention_init(ka, cfg)
+    mlp_p, mlp_s = L.mlp_init(km, cfg)
+    params = {"attn": attn_p, "mlp": mlp_p,
+              "norm1": L.oinit(None, (cfg.d_model,)),
+              "norm2": L.oinit(None, (cfg.d_model,))}
+    specs = {"attn": attn_s, "mlp": mlp_s, "norm1": (None,), "norm2": (None,)}
+    return params, specs
+
+
+def init(cfg: ModelConfig, key):
+    n_super, k, tail = _split(cfg)
+    ke, km, kt, ks = jax.random.split(key, 4)
+    emb_p, emb_s = L.embed_init(ke, cfg)
+    main = jax.vmap(lambda kk: jax.vmap(
+        lambda k2: mamba_layer_init(k2, cfg)[0])(jax.random.split(kk, k)))(
+        jax.random.split(km, n_super))
+    tail_p = jax.vmap(lambda k2: mamba_layer_init(k2, cfg)[0])(
+        jax.random.split(kt, max(tail, 1)))
+    _, mspec = mamba_layer_init(km, cfg)
+    sh_p, sh_s = shared_block_init(ks, cfg)
+    params = {"embed": emb_p, "mamba_main": main, "mamba_tail": tail_p,
+              "shared": sh_p, "final_norm": L.oinit(None, (cfg.d_model,))}
+    specs = {"embed": emb_s, "mamba_main": ("stacked2", mspec),
+             "mamba_tail": ("stacked", mspec), "shared": sh_s,
+             "final_norm": (None,)}
+    return params, specs
+
+
+def init_state(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    """Mamba states for all layers + shared-attention KV cache (n_super entries)."""
+    dtype = dtype or cfg.dtype
+    n_super, k, tail = _split(cfg)
+    d_in = 2 * cfg.d_model
+    H, N = cfg.ssm_heads, cfg.ssm_state
+    P = d_in // H
+    nl = cfg.n_layers
+    return {
+        "conv": jnp.zeros((nl, batch, 3, d_in), dtype),
+        "ssd": jnp.zeros((nl, batch, H, P, N), jnp.float32),
+        "k": jnp.zeros((n_super, batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((n_super, batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def state_specs(cfg: ModelConfig, tp_size: int = 16, batch: int | None = None,
+                fsdp_size: int = 16):
+    heads_ok = cfg.n_kv_heads % tp_size == 0
+    batch_ok = batch is None or batch % fsdp_size == 0
+    if heads_ok and batch_ok:
+        kv = (None, "fsdp", None, "tp", None)
+    elif heads_ok:
+        # tiny batch (long-context decode): the data axis is idle -- shard the
+        # cache sequence over it instead of replicating GBs per chip (§Perf)
+        kv = (None, None, "fsdp", "tp", None)
+    else:
+        kv = (None, "fsdp", "tp", None, None)
+    return {"conv": (None, "fsdp", None, ("tp", 2 * cfg.d_model)),
+            "ssd": (None, "fsdp", ("tp", cfg.ssm_heads), None, None),
+            "k": kv, "v": kv, "len": ()}
+
+
+def _shared_attn_train(cfg, sp, x, positions):
+    h = L.rms_norm(x, sp["norm1"], cfg.norm_eps)
+    q, k, v = L.attention_qkv(sp["attn"], h, cfg)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    attn = L.flash_attention(q, k, v, causal=True)
+    B, S = x.shape[:2]
+    x = x + attn.reshape(B, S, -1) @ sp["attn"]["wo"].astype(x.dtype)
+    h = L.rms_norm(x, sp["norm2"], cfg.norm_eps)
+    return x + L.mlp_apply(sp["mlp"], h, cfg), (k, v)
+
+
+def _forward(params, cfg, tokens, state, mode: str, remat_policy=None):
+    n_super, k, tail = _split(cfg)
+    x = L.embed_lookup(params["embed"], tokens, cfg)
+    B, S, _ = x.shape
+    base = state["len"] if state is not None else jnp.int32(0)
+    positions = base + jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    st = state or init_state(cfg, B, S)
+    conv = st["conv"].astype(x.dtype)
+    ssd = st["ssd"]
+    conv_main = conv[: n_super * k].reshape(n_super, k, B, 3, conv.shape[-1])
+    ssd_main = ssd[: n_super * k].reshape(n_super, k, *ssd.shape[1:])
+    sp = params["shared"]
+
+    def inner(x, inp):
+        lp, cv, sd = inp
+        x, ns = mamba_layer_fwd(cfg, lp, x, {"conv": cv, "ssd": sd})
+        return x, (ns["conv"], ns["ssd"])
+
+    def super_body(carry, inp):
+        x = carry
+        lp6, cv6, sd6, kc, vc = inp
+        x, (cv6n, sd6n) = jax.lax.scan(inner, x, (lp6, cv6, sd6))
+        if mode == "train":
+            x, (kn, vn) = _shared_attn_train(cfg, sp, x, positions)
+        else:
+            # extend the cache with this segment's K/V, attend against it; ys
+            # carry only the new (B,S,Hkv,hd) slice (never the full cache)
+            h = L.rms_norm(x, sp["norm1"], cfg.norm_eps)
+            q, kq, vq = L.attention_qkv(sp["attn"], h, cfg)
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            kq = L.apply_rope(kq, positions, cfg.rope_theta)
+            kn, vn = kq.astype(kc.dtype), vq.astype(vc.dtype)
+            if S == 1:
+                kc2 = jax.lax.dynamic_update_slice(kc, kn, (0, base, 0, 0))
+                vc2 = jax.lax.dynamic_update_slice(vc, vn, (0, base, 0, 0))
+                attn = L.attention_decode(q, kc2, vc2, base + 1)
+            else:  # prefill from scratch: the segment IS the cache prefix
+                attn = L.flash_attention(q, kn, vn, causal=True)
+            x = x + attn.reshape(B, S, -1) @ sp["attn"]["wo"].astype(x.dtype)
+            h = L.rms_norm(x, sp["norm2"], cfg.norm_eps)
+            x = x + L.mlp_apply(sp["mlp"], h, cfg)
+        return x, (cv6n, sd6n, kn, vn)
+
+    body = super_body if remat_policy is None else jax.checkpoint(
+        super_body, policy=remat_policy)
+    kc = st["k"].astype(x.dtype) if mode != "train" else \
+        jnp.zeros((n_super, B, S, cfg.n_kv_heads, cfg.hd), x.dtype)
+    vc = st["v"].astype(x.dtype) if mode != "train" else kc
+    x, (cv_m, sd_m, k_sl, v_sl) = jax.lax.scan(
+        body, x, (params["mamba_main"], conv_main, ssd_main, kc, vc))
+    if mode == "train":
+        k_new, v_new = k_sl, v_sl
+    else:  # one post-scan write of the stacked new slices into the donated cache
+        k_new = jax.lax.dynamic_update_slice(st["k"], k_sl, (0, 0, base, 0, 0))
+        v_new = jax.lax.dynamic_update_slice(st["v"], v_sl, (0, 0, base, 0, 0))
+
+    if tail:
+        x, (cv_t, sd_t) = jax.lax.scan(
+            inner, x, (params["mamba_tail"], conv[n_super * k:],
+                       ssd[n_super * k:]))
+        conv_new = jnp.concatenate([cv_m.reshape(-1, B, 3, conv.shape[-1]), cv_t])
+        ssd_new = jnp.concatenate([sd_m.reshape(-1, *ssd.shape[1:]), sd_t])
+    else:
+        conv_new = cv_m.reshape(-1, B, 3, conv.shape[-1])
+        ssd_new = sd_m.reshape(-1, *ssd.shape[1:])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    new_state = {"conv": conv_new, "ssd": ssd_new, "k": k_new, "v": v_new,
+                 "len": base + S}
+    return x, new_state
+
+
+def train_loss(params, cfg: ModelConfig, batch, remat_policy=None):
+    x, _ = _forward(params, cfg, batch["tokens"], None, "train",
+                    remat_policy=remat_policy)
+    logits = L.lm_logits(params["embed"], x, cfg)
+    return L.cross_entropy(logits, batch["labels"])
+
+
+def prefill(params, cfg: ModelConfig, tokens, state):
+    x, ns = _forward(params, cfg, tokens, state, "prefill")
+    logits = L.lm_logits(params["embed"], x[:, -1:], cfg)
+    return logits, ns
+
+
+def decode_step(params, cfg: ModelConfig, token, state):
+    x, ns = _forward(params, cfg, token, state, "decode")
+    logits = L.lm_logits(params["embed"], x, cfg)
+    return logits, ns

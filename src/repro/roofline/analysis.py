@@ -1,0 +1,198 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware required).
+
+Three terms per (arch x shape x mesh), in seconds:
+
+    compute    = HLO_FLOPs        / (chips * peak_bf16)
+    memory     = HLO_bytes        / (chips * hbm_bw)
+    collective = collective_bytes / (chips * link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``.  XLA's SPMD output is a
+per-device program, so the analysis is per-device; we normalize to per-chip terms
+directly (chips factor already folded in).  collective_bytes is parsed from the HLO
+text: per-device ring-cost approximations
+    all-gather: out_bytes * (n-1)/n          reduce-scatter: in_bytes * (n-1)/n
+    all-reduce: 2 * bytes * (n-1)/n          all-to-all:     bytes * (n-1)/n
+    collective-permute: bytes
+where n = replica-group size of that op.
+
+Hardware constants (TPU v5e, per assignment): 197 TFLOP/s bf16, 819 GB/s HBM,
+50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|s32|u64|u32|s16|u16|s8|u8|pred|c64)"
+                       r"\[([0-9,]*)\]")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "s32": 4,
+                "u64": 8, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8}
+_COLL_RE = re.compile(
+    r"^\s*(?:\S+\s*=\s*)?(\([^)]*\)|\S+)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.MULTILINE)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Per-device collective wire bytes by op kind, parsed from HLO text."""
+    out: dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        if "-done(" in line:   # started op already counted at -start
+            continue
+        nbytes = _shape_bytes(type_str)
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            n = len(gm.group(1).split(","))
+        else:
+            gm2 = _GROUPS_V2_RE.search(line)
+            n = int(gm2.group(2)) if gm2 else 2
+        n = max(n, 2)
+        ring = (n - 1) / n
+        if kind == "all-reduce":
+            wire = 2 * nbytes * ring
+        elif kind == "collective-permute":
+            wire = nbytes
+        else:  # all-gather out / reduce-scatter in / all-to-all
+            wire = nbytes * ring
+        out[kind] = out.get(kind, 0.0) + wire
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops_per_chip: float
+    hlo_bytes_per_chip: float
+    coll_bytes_per_chip: float
+    coll_breakdown: dict
+    model_flops_total: float
+    per_device_bytes: int
+    useful_bytes_per_chip: float = 0.0  # argument+output buffers: a read-once/
+                                        # write-once lower bound on HBM traffic
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops_per_chip / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """Lower-bound step time = max of the three terms (perfect overlap)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def bw_frac(self) -> float:
+        """Useful-traffic fraction of modeled HBM bytes (decode cells live here:
+        the roofline for one-token steps is bandwidth, not FLOPs)."""
+        return min(1.0, self.useful_bytes_per_chip / max(self.hlo_bytes_per_chip,
+                                                         1.0))
+
+    @property
+    def useful_flops_frac(self) -> float:
+        """MODEL_FLOPS / total HLO FLOPs -- catches remat/dispatch/mask waste."""
+        total_hlo = self.hlo_flops_per_chip * self.chips
+        return self.model_flops_total / max(total_hlo, 1.0)
+
+    @property
+    def roofline_frac(self) -> float:
+        """Fraction of the compute roofline achieved at the modeled step time:
+        (useful FLOPs / chips / step_time) / peak."""
+        useful_per_chip_rate = (self.model_flops_total / self.chips) \
+            / max(self.step_time, 1e-12)
+        return useful_per_chip_rate / PEAK_FLOPS
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(t_compute=self.t_compute, t_memory=self.t_memory,
+                 t_collective=self.t_collective, bottleneck=self.bottleneck,
+                 step_time=self.step_time,
+                 useful_flops_frac=self.useful_flops_frac,
+                 bw_frac=self.bw_frac,
+                 roofline_frac=self.roofline_frac)
+        return d
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    """Analytic MODEL_FLOPS: 6*N*D train, 2*N*D prefill, 2*N*B decode (active
+    params for MoE) + attention term.  Enc-dec: the decoder only sees S/8 tokens
+    (repro.models.encdec.SRC_RATIO), so its params are weighted accordingly."""
+    n_active = cfg.active_param_count()
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec" and kind in ("train", "prefill"):
+        # approximate enc/dec param split by layer counts (enc 2/5 of a dec
+        # layer's params: no cross-attn): weight dec params by 1/8 token count
+        frac_dec = 0.55
+        n_active = n_active * ((1 - frac_dec) + frac_dec / 8)
+    if kind == "train":
+        tokens = B * S
+        base = 6 * n_active * tokens
+        attn = 12 * cfg.n_layers * cfg.n_heads * cfg.hd * S * S * B \
+            if cfg.family not in ("ssm",) else 0
+    elif kind == "prefill":
+        tokens = B * S
+        base = 2 * n_active * tokens
+        attn = 4 * cfg.n_layers * cfg.n_heads * cfg.hd * S * S * B \
+            if cfg.family not in ("ssm",) else 0
+    else:  # decode: one token per sequence
+        base = 2 * n_active * B
+        attn = 4 * cfg.n_layers * cfg.n_heads * cfg.hd * S * B \
+            if cfg.family not in ("ssm",) else 0
+    if cfg.family == "hybrid":
+        attn = attn / max(1, cfg.attn_every)  # shared block applied 1/k as often
+    return float(base + attn)
+
+
+def summarize(records: list[dict]) -> str:
+    """Markdown table for EXPERIMENTS.md."""
+    hdr = ("| arch | shape | mesh | t_compute | t_memory | t_collective | "
+           "bottleneck | useful/HLO | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for r in records:
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute'] * 1e3:.2f} ms | {r['t_memory'] * 1e3:.2f} ms "
+            f"| {r['t_collective'] * 1e3:.2f} ms | {r['bottleneck']} "
+            f"| {r['useful_flops_frac'] * 100:.1f}% "
+            f"| {r['roofline_frac'] * 100:.1f}% |")
+    return hdr + "\n".join(rows)

@@ -1,0 +1,59 @@
+"""KV-cache compression for serving (ZipFlow applied to the serving data path).
+
+Two mechanisms:
+  * int8 per-head-scale quantization of K/V blocks (in-HBM footprint, 2x vs bf16);
+  * bit-packed host<->HBM paging of cold cache blocks (long-context serving swaps
+    least-recent blocks to host RAM; the wire format is the ZipFlow bitpack codec so
+    the paging link moves ~9-13 bits/value instead of 16).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def quantize_kv(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (..., S, H, hd) -> (int8 values, f32 scales per (..., S, H))."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0 + 1e-9
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray,
+                  dtype=jnp.bfloat16) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+@dataclasses.dataclass
+class PagedBlock:
+    """A cache block paged out to host in ZipFlow wire format."""
+    packed: np.ndarray
+    bit_width: int
+    base: int
+    shape: tuple
+
+
+def page_out(block: jnp.ndarray) -> PagedBlock:
+    """Quantize + bitpack a KV block for host paging."""
+    from repro.algos.bitpack import pack_np, required_bits
+
+    q, scale = quantize_kv(block)
+    host = np.asarray(q).astype(np.int64).reshape(-1) + 127  # non-negative
+    bw = required_bits(254)
+    packed = pack_np(host, bw)
+    pb = PagedBlock(packed=packed, bit_width=bw, base=-127, shape=block.shape)
+    pb.scale = np.asarray(scale)  # type: ignore[attr-defined]
+    return pb
+
+
+def page_in(pb: PagedBlock, dtype=jnp.bfloat16) -> jnp.ndarray:
+    from repro.kernels.ref import unpack_bits_ref
+
+    n = int(np.prod(pb.shape))
+    vals = unpack_bits_ref(jnp.asarray(pb.packed), n, pb.bit_width, pb.base)
+    q = vals.reshape(pb.shape).astype(jnp.int8)
+    return dequantize_kv(q, jnp.asarray(pb.scale), dtype)

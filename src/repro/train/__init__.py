@@ -1,0 +1,5 @@
+"""Training substrate: optimizer, step builders, remat, checkpointing, FT loop."""
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import make_dp_compressed_step, make_train_step
+
+__all__ = ["AdamWConfig", "make_dp_compressed_step", "make_train_step"]

@@ -1,0 +1,21 @@
+"""Activation-checkpoint policies, selectable per architecture / perf iteration."""
+from __future__ import annotations
+
+import jax
+
+POLICIES = {
+    # save nothing: recompute the whole layer in the backward pass (min memory)
+    "full": jax.checkpoint_policies.nothing_saveable,
+    # save only matmul outputs that feed reductions (good default on TPU)
+    "dots": jax.checkpoint_policies.dots_saveable,
+    # save everything (no remat; max memory, min recompute)
+    "none": jax.checkpoint_policies.everything_saveable,
+    # save outputs of expensive contractions but not element-wise ops
+    "dots_no_batch": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+}
+
+
+def get_policy(name: str | None):
+    if name is None or name == "none":
+        return None if name is None else POLICIES["none"]
+    return POLICIES[name]

@@ -1,0 +1,63 @@
+"""rANS construction invariants (the <=1-word renorm bound that makes the lockstep
+decode branch-free) + paper Fig. 14/15 qualitative properties."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.algos.ans import (L, M, SCALE_BITS, decode_chunks_np, encode_chunks_np,
+                             normalize_freqs)
+from repro.core import plan as P
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 2**20), min_size=1, max_size=256))
+def test_normalize_freqs_invariants(counts):
+    c = np.zeros(256, np.int64)
+    c[: len(counts)] = counts
+    f = normalize_freqs(c)
+    assert f.sum() == M
+    assert ((c > 0) <= (f > 0)).all(), "present symbol lost its slot"
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.binary(min_size=64, max_size=4096))
+def test_encoder_emits_at_most_one_word_per_symbol(data):
+    """The invariant that keeps every decode step a single branch-free select."""
+    raw = np.frombuffer(data, np.uint8)
+    cs = 64
+    n_chunks = -(-raw.size // cs)
+    padded = np.zeros(n_chunks * cs, np.uint8)
+    padded[: raw.size] = raw
+    freq = normalize_freqs(np.bincount(padded, minlength=256))
+    cum = np.concatenate([[0], np.cumsum(freq)[:-1]])
+    streams, states = encode_chunks_np(padded.reshape(n_chunks, cs), freq, cum)
+    assert streams.shape[0] <= cs + 1          # <= one word per symbol
+    assert (states >= L).all()                 # decoder state invariant
+    sym = np.repeat(np.arange(256), freq)
+    out = decode_chunks_np(streams, states, sym, freq, cum, cs)
+    np.testing.assert_array_equal(out.reshape(-1)[: raw.size], raw)
+
+
+def test_skew_insensitivity_of_decode_work(rng):
+    """Paper Fig. 14: decode work per symbol is constant w.r.t. skew (unlike
+    nvCOMP) -- every step consumes <= 1 word regardless of frequency shape."""
+    for p in ([1 / 3] * 3, [0.90, 0.05, 0.05]):
+        arr = rng.choice(np.arange(3, dtype=np.uint8), 30000, p=p)
+        enc = P.encode(P.Plan("ans", params={"chunk_size": 1024}), arr)
+        np.testing.assert_array_equal(P.decode_np(enc), arr)
+        # stripe height bounds the lockstep work: always <= chunk_size + 1
+        assert enc.buffers["streams"].shape[0] <= 1025
+
+
+def test_chunk_size_ratio_tradeoff(rng):
+    """Paper Fig. 15: larger chunks -> better ratio (less padding/table overhead),
+    smaller chunks -> more lockstep parallelism."""
+    arr = rng.choice(np.arange(4, dtype=np.uint8) + 60, 1 << 17,
+                     p=[.7, .2, .05, .05])
+    sizes = [256, 1024, 8192]
+    ratios, chunks = [], []
+    for cs in sizes:
+        enc = P.encode(P.Plan("ans", params={"chunk_size": cs}), arr)
+        ratios.append(enc.ratio)
+        chunks.append(enc.meta["n_chunks"])
+    assert ratios == sorted(ratios), f"ratio should grow with chunk size {ratios}"
+    assert chunks == sorted(chunks, reverse=True)

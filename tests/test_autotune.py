@@ -1,0 +1,47 @@
+"""Geometry autotuning (paper §5.5 / Table 3): the pruned ('R.L.') search matches
+brute force on the analytic landscape at a fraction of the probes, and Native
+Configs beat Shared Configs across chips (Fig. 22)."""
+import pytest
+
+from repro.core.autotune import analytic_measure, brute_force, pruned_search
+from repro.core.geometry import CHIPS, analytic_cost_ns, native_config
+
+
+@pytest.mark.parametrize("pattern", ["fp", "gp", "np"])
+@pytest.mark.parametrize("chip", ["v5e", "v4", "v6e"])
+def test_pruned_matches_brute_force(pattern, chip):
+    spec = CHIPS[chip]
+    measure = analytic_measure(pattern, spec)
+    bf = brute_force(pattern, spec, measure)
+    pr = pruned_search(pattern, spec, measure)
+    assert pr.cost <= bf.cost * 1.001, (pr.best, bf.best)
+
+
+@pytest.mark.parametrize("pattern", ["fp", "gp", "np"])
+def test_pruned_probe_budget(pattern):
+    """Paper Table 3: pruned search lands in the ~10-probe regime while brute
+    force explores the whole space."""
+    spec = CHIPS["v5e"]
+    measure = analytic_measure(pattern, spec)
+    bf = brute_force(pattern, spec, measure)
+    pr = pruned_search(pattern, spec, measure)
+    assert pr.probes < bf.probes
+    assert pr.probes <= 25, pr.probes
+
+
+def test_native_vs_shared_config():
+    """A config tuned for one chip underperforms on another (paper Fig. 22)."""
+    degradations = []
+    for pattern in ("fp", "gp"):
+        for a in ("v5e", "v4", "v6e"):
+            native = native_config(pattern, CHIPS[a])
+            cost_native = analytic_cost_ns(pattern, native, 1 << 24, 4, CHIPS[a])
+            for b in ("v5e", "v4", "v6e"):
+                if a == b:
+                    continue
+                shared = native_config(pattern, CHIPS[b])
+                cost_shared = analytic_cost_ns(pattern, shared, 1 << 24, 4,
+                                               CHIPS[a])
+                degradations.append(cost_shared / cost_native)
+    assert all(d >= 1.0 - 1e-9 for d in degradations)
+    assert max(degradations) > 1.005, "chips too similar to matter"

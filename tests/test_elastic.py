@@ -1,0 +1,100 @@
+"""Elastic re-mesh + multi-device sharding tests.
+
+These need >1 device, and XLA's host-device count is locked at first jax init, so
+they run in a subprocess with XLA_FLAGS set (the same pattern launch/dryrun.py uses).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.launch.elastic import plan_remesh
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_plan_remesh_keeps_tp_groups():
+    p = plan_remesh(surviving_chips=240, model_size=16)
+    assert p.shape == (15, 16)
+    assert p.dropped_chips == 0
+    p = plan_remesh(surviving_chips=250, model_size=16)
+    assert p.shape == (15, 16) and p.dropped_chips == 10
+    with pytest.raises(RuntimeError):
+        plan_remesh(surviving_chips=8, model_size=16)
+
+
+_SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np, tempfile
+from repro.launch.elastic import ElasticCoordinator, make_mesh_from_plan, \
+    plan_remesh, reshard
+from repro.launch.mesh import shard_tree
+from repro.models import get_model
+from repro.configs import SMOKES
+from repro.train import checkpoint as ckpt
+
+cfg = SMOKES["qwen1.5-0.5b"]
+model = get_model(cfg)
+params, specs = model.init(jax.random.PRNGKey(0))
+
+# full mesh: 4 data x 2 model; "lose" 2 chips -> 3 x 2
+full = plan_remesh(8, model_size=2)
+assert full.shape == (4, 2)
+mesh = make_mesh_from_plan(full)
+placed = reshard(params, specs, mesh)
+batch = {"tokens": jnp.zeros((8, 32), jnp.int32),
+         "labels": jnp.zeros((8, 32), jnp.int32)}
+loss_full = jax.jit(lambda p, b: model.train_loss(p, b))(placed, batch)
+
+with tempfile.TemporaryDirectory() as d:
+    ckpt.save(d, 3, params)
+    coord = ElasticCoordinator(model_size=2, ckpt_dir=d)
+    survivors = jax.devices()[:6]           # 2 chips died
+    placed2, mesh2, step = coord.recover(params, specs, survivors)
+    assert dict(mesh2.shape) == {"data": 3, "model": 2}, mesh2.shape
+    assert step == 3
+    # the resharded model computes the same loss on the smaller mesh
+    b2 = {"tokens": jnp.zeros((6, 32), jnp.int32),
+          "labels": jnp.zeros((6, 32), jnp.int32)}
+    loss_small = jax.jit(lambda p, b: model.train_loss(p, b))(placed2, b2)
+    assert np.isfinite(float(loss_small))
+    np.testing.assert_allclose(float(loss_full), float(loss_small),
+                               rtol=1e-3)   # same data distribution, same params
+print("ELASTIC_OK")
+"""
+
+
+def test_elastic_remesh_subprocess():
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _SUBPROC], env=env,
+                         capture_output=True, text=True, timeout=420)
+    assert "ELASTIC_OK" in out.stdout, out.stdout + "\n" + out.stderr[-2000:]
+
+
+_SUBPROC_SHARD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.launch.mesh import make_production_mesh, shard_tree, mesh_axes
+# mini production-mesh analogue: shard_tree divisibility fallbacks
+mesh = jax.sharding.Mesh(np.asarray(jax.devices()).reshape(2, 4),
+                         ("data", "model"))
+shapes = {"w": jax.ShapeDtypeStruct((6, 8), jnp.float32),   # 6 % 2 == 0, 8 % 4 == 0
+          "odd": jax.ShapeDtypeStruct((5, 7), jnp.float32)} # indivisible -> replicated
+specs = {"w": ("fsdp", "tp"), "odd": ("fsdp", "tp")}
+sh = shard_tree(shapes, specs, mesh)
+assert sh["w"].spec == jax.sharding.PartitionSpec("data", "model"), sh["w"].spec
+assert sh["odd"].spec == jax.sharding.PartitionSpec(None, None), sh["odd"].spec
+print("SHARD_OK")
+"""
+
+
+def test_shard_tree_divisibility_subprocess():
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _SUBPROC_SHARD], env=env,
+                         capture_output=True, text=True, timeout=240)
+    assert "SHARD_OK" in out.stdout, out.stdout + "\n" + out.stderr[-2000:]

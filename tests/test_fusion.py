@@ -1,0 +1,70 @@
+"""Fusion pass (paper §3.2/Fig. 7(c), §5.3.3): semantic equivalence, kernel-count
+reduction, and the Eq.-2 memory-traffic model."""
+import numpy as np
+
+from repro.core import plan as P
+from repro.core.compiler import compile_decoder, device_buffers
+from repro.core.fusion import fuse, hbm_traffic_bytes
+from repro.core.plan import lower
+
+mp = P.make_plan
+
+
+def _mk(pl, arr):
+    enc = P.encode(pl, arr)
+    return enc, device_buffers(enc)
+
+
+def test_fp_fp_chain_collapses(rng):
+    arr = rng.choice([2, 5, 9], 2000).astype(np.int32)
+    enc, bufs = _mk(P.Plan("dictionary", children={"index": mp("bitpack")}), arr)
+    unfused = lower(enc)
+    fused = fuse(list(unfused))
+    assert len(unfused) == 2 and len(fused) == 1
+    a = compile_decoder(enc, fuse=False)(bufs)
+    b = compile_decoder(enc, fuse=True)(bufs)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fp_absorbed_into_gp_values(rng):
+    """bit-packed RLE values decode inside the Group-Parallel kernel."""
+    counts = rng.integers(1, 50, 200)
+    values = rng.integers(0, 500, 200).astype(np.int32)
+    arr = np.repeat(values, counts).astype(np.int32)
+    enc, bufs = _mk(P.Plan("rle", children={"counts": mp("bitpack"),
+                                            "values": mp("bitpack")}), arr)
+    unfused = lower(enc)
+    fused = fuse(list(unfused))
+    # bitpack(values) absorbed; bitpack(counts) inlined into the presum Aux
+    assert len(fused) == len(unfused) - 2
+    names = [s.name for s in fused]
+    assert any(">" in n for n in names), names
+    np.testing.assert_array_equal(
+        np.asarray(compile_decoder(enc, fuse=True)(bufs)), arr)
+
+
+def test_eq2_traffic_ratio(rng):
+    """Paper Eq. 2: unfused dictionary|bitpack costs > 2x the fused traffic."""
+    arr = rng.choice(np.arange(16, dtype=np.int32), 1 << 16)
+    enc, bufs = _mk(P.Plan("dictionary", children={"index": mp("bitpack")}), arr)
+    flat = {k: v for k, v in bufs.items()}
+    unfused = lower(enc)
+    fused = fuse(list(unfused))
+    t_unfused = hbm_traffic_bytes(unfused, flat)
+    t_fused = hbm_traffic_bytes(fused, flat)
+    assert t_unfused / t_fused > 2.0, (t_unfused, t_fused)
+
+
+def test_fusion_never_changes_results_all_table2(rng):
+    from repro.data.columns import TABLE2_PLANS
+    from repro.data.tpch import generate
+
+    cols = generate(scale=0.001, seed=5)
+    for name, pl in TABLE2_PLANS.items():
+        enc = P.encode(pl, cols[name])
+        bufs = device_buffers(enc)
+        a = np.asarray(compile_decoder(enc, fuse=False)(bufs))
+        b = np.asarray(compile_decoder(enc, fuse=True)(bufs))
+        np.testing.assert_array_equal(a, b, err_msg=name)
+        assert len(compile_decoder(enc, fuse=True).stages) <= \
+            len(compile_decoder(enc, fuse=False).stages), name

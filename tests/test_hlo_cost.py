@@ -1,0 +1,106 @@
+"""Trip-count-aware HLO cost walker vs closed forms (the roofline's foundation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.roofline.hlo_cost import analyze
+from repro.roofline.analysis import model_flops
+from repro.configs import ARCHS, SHAPES
+
+
+def _hlo(f, *shapes):
+    return jax.jit(f).lower(*shapes).compile().as_text()
+
+
+def test_matmul_exact():
+    hlo = _hlo(lambda a, b: a @ b,
+               jax.ShapeDtypeStruct((256, 512), jnp.float32),
+               jax.ShapeDtypeStruct((512, 128), jnp.float32))
+    assert analyze(hlo)["flops"] == 2 * 256 * 512 * 128
+
+
+def test_scan_trip_multiplication():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y.sum()
+
+    hlo = _hlo(f, jax.ShapeDtypeStruct((128, 128), jnp.float32),
+               jax.ShapeDtypeStruct((128, 128), jnp.float32))
+    got = analyze(hlo)["flops"]
+    want = 10 * 2 * 128**3
+    assert abs(got - want) / want < 0.01, (got, want)
+
+
+def test_nested_scan():
+    def f(x, w):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ w, None
+            c2, _ = jax.lax.scan(inner, c, None, length=4)
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y.sum()
+
+    hlo = _hlo(f, jax.ShapeDtypeStruct((64, 64), jnp.float32),
+               jax.ShapeDtypeStruct((64, 64), jnp.float32))
+    got = analyze(hlo)["flops"]
+    want = 20 * 2 * 64**3
+    assert abs(got - want) / want < 0.01, (got, want)
+
+
+def test_flash_attention_flops_within_tolerance():
+    """Chunked flash attention == 2 * 2 * B*H*Sq*Sk*hd (QK^T + PV), rectangular."""
+    from repro.models.layers import flash_attention
+
+    B, S, H, hd = 2, 1024, 4, 64
+    q = jax.ShapeDtypeStruct((B, S, H, hd), jnp.float32)
+    hlo = _hlo(lambda q, k, v: flash_attention(q, k, v, causal=True,
+                                               q_chunk=256, kv_chunk=256),
+               q, q, q)
+    got = analyze(hlo)["flops"]
+    want = 4 * B * H * S * S * hd
+    assert abs(got - want) / want < 0.05, (got, want)
+
+
+def test_training_flops_close_to_analytic():
+    """Full smoke-model train grad: HLO flops ~ 6-8x N x D (fwd 2, bwd 4,
+    (+recompute 2 under full remat))."""
+    from repro.configs import SMOKES
+    from repro.models import get_model
+
+    cfg = SMOKES["qwen1.5-0.5b"]
+    model = get_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    B, S = 4, 128
+    batch = {"tokens": jnp.zeros((B, S), jnp.int32),
+             "labels": jnp.zeros((B, S), jnp.int32)}
+    hlo = jax.jit(jax.grad(lambda p: model.train_loss(p, batch))) \
+        .lower(params).compile().as_text()
+    got = analyze(hlo)["flops"]
+    n = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+    lo, hi = 5 * n * B * S, 11 * n * B * S
+    assert lo < got < hi, (got, lo, hi)
+
+
+def test_collective_bytes_in_scan(monkeypatch):
+    import os
+    # (runs on 1 device: use replica_groups-free module from a saved dry-run if
+    # present; else accept the unit scale check)
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y.sum()
+    hlo = _hlo(f, jax.ShapeDtypeStruct((64, 64), jnp.float32),
+               jax.ShapeDtypeStruct((64, 64), jnp.float32))
+    assert analyze(hlo)["coll_bytes"] == 0.0
+
+
+def test_model_flops_moe_uses_active_params():
+    cfg = ARCHS["dbrx-132b"]
+    dense_equiv = 6 * cfg.param_count() * 4096 * 256
+    got = model_flops(cfg, SHAPES["train_4k"], "train")
+    assert got < dense_equiv, "MoE must count active params only"
+    assert got > 6 * cfg.active_param_count() * 4096 * 256 * 0.9

@@ -1,0 +1,44 @@
+"""Johnson's-rule pipelining scheduler (paper §3.3): optimality vs brute force,
+makespan properties, and the paper's Fig. 8 example shape."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scheduler import (Job, brute_force_best, johnson_order, makespan,
+                                  serial_time)
+
+times = st.floats(min_value=0.01, max_value=10.0, allow_nan=False)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(times, times), min_size=1, max_size=6))
+def test_johnson_is_optimal(pairs):
+    jobs = [Job(str(i), a, b) for i, (a, b) in enumerate(pairs)]
+    best, _ = brute_force_best(jobs)
+    got = makespan(jobs, johnson_order(jobs))
+    assert got <= best + 1e-9
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(times, times), min_size=1, max_size=8))
+def test_pipeline_never_worse_than_serial(pairs):
+    jobs = [Job(str(i), a, b) for i, (a, b) in enumerate(pairs)]
+    assert makespan(jobs, johnson_order(jobs)) <= serial_time(jobs) + 1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(times, times), min_size=1, max_size=8))
+def test_makespan_lower_bounds(pairs):
+    jobs = [Job(str(i), a, b) for i, (a, b) in enumerate(pairs)]
+    m = makespan(jobs, johnson_order(jobs))
+    assert m >= sum(j.transfer_s for j in jobs) - 1e-9      # link is serial
+    assert m >= max(j.transfer_s + j.decompress_s for j in jobs) - 1e-9
+
+
+def test_fig8_order_b_before_a():
+    """Paper Fig. 8: A = high transfer / fast decompress; B = the converse.
+    Johnson runs B (transfer-light) first."""
+    a = Job("A", transfer_s=4.0, decompress_s=1.0)
+    b = Job("B", transfer_s=1.0, decompress_s=4.0)
+    order = johnson_order([a, b])
+    assert order == [1, 0]
+    assert makespan([a, b], [1, 0]) < makespan([a, b], [0, 1])
