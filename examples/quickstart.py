@@ -26,6 +26,12 @@ stages = lower(enc)
 fused = fuse(list(stages))
 print(f"stages: {[s.name for s in stages]} -> fused: {[s.name for s in fused]}")
 
+# 4b. ...or to a DecodeGraph: buffer defs + the structural signature that keys the
+#     ProgramCache (blobs with equal signatures share ONE jitted program)
+graph = P.lower_graph(enc)
+print(f"graph: {graph.nesting}, {len(graph.buffers)} transfer buffers, "
+      f"signature {graph.signature[:12]}")
+
 # 5. move the compressed buffers and decode on device (pure-jnp backend here;
 #    backend='pallas' runs the TPU kernels, interpret=True off-TPU)
 decoder = compile_decoder(enc, backend="jnp", fuse=True)

@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Post-test smoke check: run the quickstart example end-to-end (compress ->
+# lower to DecodeGraph -> compile through the ProgramCache -> decode on device)
+# and fail on any assertion or import error.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python examples/quickstart.py
+echo "smoke: OK"

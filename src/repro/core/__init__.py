@@ -1,11 +1,18 @@
-"""ZipFlow core: patterns, plans, fusion, geometry scheduling, pipelining."""
-from repro.core.compiler import compile_decoder, decode_on_device, device_buffers
+"""ZipFlow core: patterns, plans, decode-graph IR, fusion, geometry, executor."""
+from repro.core.compiler import (DEFAULT_CACHE, Program, ProgramCache, compile_blob,
+                                 compile_decoder, decode_on_device, device_buffers)
+from repro.core.executor import ColumnExec, StreamingExecutor
 from repro.core.geometry import CHIPS, Geometry, chip, native_config
-from repro.core.plan import Encoded, Plan, decode_np, encode, flat_buffers, lower, make_plan
-from repro.core.scheduler import Job, johnson_order, makespan, schedule
+from repro.core.ir import BufferDef, DecodeGraph, structural_signature
+from repro.core.plan import (Encoded, Plan, decode_np, encode, flat_buffers, lower,
+                             lower_graph, make_plan)
+from repro.core.scheduler import Job, chunk_jobs, johnson_order, makespan, schedule
 
 __all__ = [
-    "CHIPS", "Encoded", "Geometry", "Job", "Plan", "chip", "compile_decoder",
-    "decode_np", "decode_on_device", "device_buffers", "encode", "flat_buffers",
-    "johnson_order", "lower", "make_plan", "makespan", "native_config", "schedule",
+    "CHIPS", "BufferDef", "ColumnExec", "DEFAULT_CACHE", "DecodeGraph", "Encoded",
+    "Geometry", "Job", "Plan", "Program", "ProgramCache", "StreamingExecutor",
+    "chip", "chunk_jobs", "compile_blob", "compile_decoder", "decode_np",
+    "decode_on_device", "device_buffers", "encode", "flat_buffers", "johnson_order",
+    "lower", "lower_graph", "make_plan", "makespan", "native_config", "schedule",
+    "structural_signature",
 ]

@@ -1,8 +1,11 @@
-"""ZipFlow compiler driver: compressed blob -> executable on-device decoder.
+"""ZipFlow compiler driver: DecodeGraph -> executable on-device program.
 
-``compile_decoder`` lowers a blob's plan tree to pattern stages, runs the fusion pass,
-binds a device geometry per stage (native config of the target chip unless overridden),
-and returns a jitted function ``bufs -> decoded array``.
+The compile pipeline is ``plan.lower_graph`` -> ``fusion.fuse_graph`` ->
+``compile_graph``; compiled programs live in a ``ProgramCache`` keyed by the graph's
+structural signature plus compile options, so N structurally identical columns share
+ONE jitted executable (one trace, one XLA compile, one launch geometry) instead of
+compiling per blob.  ``compile_decoder`` remains as the thin per-blob compatibility
+shim over that pipeline.
 
 Backends:
   * "jnp"      -- pure jax.numpy stages (reference semantics; fast on CPU; also what a
@@ -15,6 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 from typing import Any, Callable
 
 import jax
@@ -23,18 +27,8 @@ import jax.numpy as jnp
 from repro.core import fusion as fusion_mod
 from repro.core import plan as plan_mod
 from repro.core.geometry import DEFAULT_CHIP, Geometry, chip as chip_spec, native_config
-from repro.core.patterns import Aux, FullyParallel, GroupParallel, NonParallel, Stage
-
-
-@dataclasses.dataclass
-class CompiledDecoder:
-    fn: Callable[[dict[str, jnp.ndarray]], jnp.ndarray]
-    stages: list[Stage]
-    backend: str
-    n_kernels: int
-
-    def __call__(self, bufs: dict[str, jnp.ndarray]) -> jnp.ndarray:
-        return self.fn(bufs)
+from repro.core.ir import DecodeGraph
+from repro.core.patterns import Aux, Stage
 
 
 def _run_stage(st: Stage, bufs: dict[str, jnp.ndarray], backend: str,
@@ -46,25 +40,68 @@ def _run_stage(st: Stage, bufs: dict[str, jnp.ndarray], backend: str,
     return st.run_jnp(bufs)
 
 
-def compile_decoder(enc: plan_mod.Encoded, backend: str = "jnp", fuse: bool = True,
-                    chip: str = DEFAULT_CHIP,
-                    geometry: dict[str, Geometry] | None = None,
-                    interpret: bool | None = None,
-                    jit: bool = True) -> CompiledDecoder:
-    if backend == "baseline":
-        fuse = False
-    stages = plan_mod.lower(enc)
-    final_out = stages[-1].out
-    if fuse:
-        stages = fusion_mod.fuse(stages, final_out=final_out)
+BASELINE_GEOMS = {"fp": Geometry(1, 8, 128), "gp": Geometry(1, 8, 128),
+                  "np": Geometry(1, 8, 128)}
+
+
+@dataclasses.dataclass
+class Program:
+    """One compiled decode program, shared by every blob with the same signature.
+
+    ``fn`` decodes a single column's buffer dict; ``batched`` decodes a stack of
+    same-signature columns in one launch (vmap over the leading axis) -- built lazily
+    because most programs only ever see one column.
+    """
+
+    fn: Callable[[dict[str, jnp.ndarray]], jnp.ndarray]
+    raw_fn: Callable[[dict[str, jnp.ndarray]], jnp.ndarray]  # unjitted decode body
+    graph: DecodeGraph
+    backend: str
+    jit: bool = True
+    calls: int = 0              # single-column executions (0 => next call traces)
+    batched_calls: int = 0      # batched executions
+    _batched: Callable | None = dataclasses.field(default=None, repr=False)
+
+    @property
+    def signature(self) -> str:
+        return self.graph.signature
+
+    @property
+    def stages(self) -> list[Stage]:
+        return self.graph.stages
+
+    @property
+    def n_kernels(self) -> int:
+        return len(self.graph.stages)
+
+    def __call__(self, bufs: dict[str, jnp.ndarray]) -> jnp.ndarray:
+        self.calls += 1
+        return self.fn(bufs)
+
+    def batched(self, stacked: dict[str, jnp.ndarray]) -> jnp.ndarray:
+        """Decode K same-signature columns stacked on a new leading axis: one
+        launch instead of K (multi-column batched decode)."""
+        if self._batched is None:
+            vfn = jax.vmap(self.raw_fn)
+            self._batched = jax.jit(vfn) if self.jit else vfn
+        self.batched_calls += 1
+        return self._batched(stacked)
+
+
+def compile_graph(graph: DecodeGraph, backend: str = "jnp",
+                  chip: str = DEFAULT_CHIP,
+                  geometry: dict[str, Geometry] | None = None,
+                  interpret: bool | None = None,
+                  jit: bool = True) -> Program:
+    """Compile a DecodeGraph to a Program (no caching -- see ProgramCache)."""
     spec = chip_spec(chip)
     geoms = geometry or {p: native_config(p, spec) for p in ("fp", "gp", "np")}
     if backend == "baseline":
         # fixed library geometry, deliberately not adapted to the chip (paper §5.2)
-        geoms = {"fp": Geometry(1, 8, 128), "gp": Geometry(1, 8, 128),
-                 "np": Geometry(1, 8, 128)}
+        geoms = dict(BASELINE_GEOMS)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    stages = graph.stages
 
     def decode(bufs: dict[str, jnp.ndarray]) -> jnp.ndarray:
         env = dict(bufs)
@@ -75,8 +112,143 @@ def compile_decoder(enc: plan_mod.Encoded, backend: str = "jnp", fuse: bool = Tr
         return out
 
     fn = jax.jit(decode) if jit else decode
-    return CompiledDecoder(fn=fn, stages=stages, backend=backend,
-                           n_kernels=len(stages))
+    return Program(fn=fn, raw_fn=decode, graph=graph, backend=backend, jit=jit)
+
+
+def _geometry_key(geometry: dict[str, Geometry] | None):
+    if geometry is None:
+        return None
+    return tuple(sorted(geometry.items()))
+
+
+class ProgramCache:
+    """Signature-keyed cache of compiled programs: one jit per *structure*.
+
+    The key is (graph signature, backend, chip, geometry override, interpret, jit);
+    everything value-dependent is already folded into the signature by the IR layer.
+    ``max_programs`` bounds the cache LRU-style (None = unbounded): long-lived
+    servers seeing unbounded shape variety (e.g. one signature per prompt length)
+    should set it so old programs are evicted instead of retained forever.
+    """
+
+    def __init__(self, max_programs: int | None = None):
+        self._programs: dict[tuple, Program] = {}   # insertion order = LRU order
+        self._lock = threading.Lock()
+        self._compiling: dict[tuple, threading.Lock] = {}   # per-key compile guard
+        self.max_programs = max_programs
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._programs)
+
+    @property
+    def stats(self) -> dict[str, int]:
+        return {"programs": len(self._programs), "hits": self.hits,
+                "misses": self.misses}
+
+    def clear(self) -> None:
+        with self._lock:
+            self._programs.clear()
+            self._compiling.clear()
+            self.hits = self.misses = 0
+
+    def get(self, graph: DecodeGraph, backend: str = "jnp",
+            chip: str = DEFAULT_CHIP,
+            geometry: dict[str, Geometry] | None = None,
+            interpret: bool | None = None, jit: bool = True) -> Program:
+        key = (graph.signature, backend, chip, _geometry_key(geometry),
+               interpret, jit)
+        with self._lock:
+            prog = self._programs.get(key)
+            if prog is not None:
+                self.hits += 1
+                if self.max_programs is not None:       # refresh LRU position
+                    self._programs[key] = self._programs.pop(key)
+                return prog
+            key_lock = self._compiling.setdefault(key, threading.Lock())
+        # serialize same-key compiles (different keys still compile concurrently)
+        # so racing callers never duplicate a trace+XLA compile
+        with key_lock:
+            try:
+                with self._lock:
+                    prog = self._programs.get(key)
+                    if prog is not None:
+                        self.hits += 1
+                        if self.max_programs is not None:
+                            self._programs[key] = self._programs.pop(key)
+                        return prog
+                prog = compile_graph(graph, backend=backend, chip=chip,
+                                     geometry=geometry, interpret=interpret,
+                                     jit=jit)
+                with self._lock:
+                    self._programs[key] = prog
+                    self.misses += 1
+                    while (self.max_programs is not None
+                           and len(self._programs) > self.max_programs):
+                        self._programs.pop(next(iter(self._programs)))
+            finally:
+                with self._lock:
+                    self._compiling.pop(key, None)
+        return prog
+
+
+# Process-wide default cache: the ``compile_decoder`` shim and every executor that
+# doesn't bring its own cache share it, so e.g. 100 same-plan columns anywhere in the
+# process trace and XLA-compile exactly once.  Deliberately unbounded: analytics and
+# benchmark workloads see a bounded set of structures.  A long-lived process decoding
+# unbounded shape variety should bring its own ``ProgramCache(max_programs=...)``
+# (ServeEngine's default executor does).
+DEFAULT_CACHE = ProgramCache()
+
+
+def build_graph(enc: plan_mod.Encoded, fuse: bool = True) -> DecodeGraph:
+    """Lower + (optionally) fuse: the front half of the compile pipeline."""
+    graph = plan_mod.lower_graph(enc)
+    return fusion_mod.fuse_graph(graph) if fuse else graph
+
+
+def compile_blob(enc: plan_mod.Encoded, backend: str = "jnp", fuse: bool = True,
+                 chip: str = DEFAULT_CHIP,
+                 geometry: dict[str, Geometry] | None = None,
+                 interpret: bool | None = None, jit: bool = True,
+                 cache: ProgramCache | None = None) -> Program:
+    """Blob -> cached Program (the modern entry point)."""
+    if backend == "baseline":
+        fuse = False
+    graph = build_graph(enc, fuse=fuse)
+    cache = DEFAULT_CACHE if cache is None else cache
+    return cache.get(graph, backend=backend, chip=chip, geometry=geometry,
+                     interpret=interpret, jit=jit)
+
+
+# --------------------------------------------------------------- compatibility shim
+
+@dataclasses.dataclass
+class CompiledDecoder:
+    """Legacy per-blob handle; now a thin view over a cached Program."""
+
+    fn: Callable[[dict[str, jnp.ndarray]], jnp.ndarray]
+    stages: list[Stage]
+    backend: str
+    n_kernels: int
+    program: Program | None = None
+
+    def __call__(self, bufs: dict[str, jnp.ndarray]) -> jnp.ndarray:
+        if self.program is not None:   # keep Program.calls (cold-detection) honest
+            return self.program(bufs)
+        return self.fn(bufs)
+
+
+def compile_decoder(enc: plan_mod.Encoded, backend: str = "jnp", fuse: bool = True,
+                    chip: str = DEFAULT_CHIP,
+                    geometry: dict[str, Geometry] | None = None,
+                    interpret: bool | None = None,
+                    jit: bool = True) -> CompiledDecoder:
+    prog = compile_blob(enc, backend=backend, fuse=fuse, chip=chip,
+                        geometry=geometry, interpret=interpret, jit=jit)
+    return CompiledDecoder(fn=prog.fn, stages=prog.stages, backend=backend,
+                           n_kernels=prog.n_kernels, program=prog)
 
 
 def device_buffers(enc: plan_mod.Encoded, device=None,

@@ -146,6 +146,21 @@ def fuse(stages: list[Stage], final_out: str | None = None) -> list[Stage]:
     return stages
 
 
+def fuse_graph(graph: "ir.DecodeGraph") -> "ir.DecodeGraph":
+    """Rewrite a DecodeGraph through the fusion pass.
+
+    Returns a new graph; the signature gains a ``+fused`` marker so fused and unfused
+    programs never share a ProgramCache slot.
+    """
+    import dataclasses as _dc
+
+    if graph.fused:
+        return graph
+    fused = fuse(list(graph.stages), final_out=graph.out)
+    return _dc.replace(graph, stages=fused, fused=True,
+                       signature=graph.signature + "+fused")
+
+
 def kernel_count(stages: Sequence[Stage]) -> int:
     """Number of device kernels a stage list launches (Aux ops count: they
     materialize)."""

@@ -1,0 +1,144 @@
+"""Decode-graph IR: the explicit program representation between Plan and executor.
+
+``plan.lower_graph`` produces a ``DecodeGraph`` from a compressed blob and
+``fusion.fuse_graph`` rewrites it; the compiler consumes graphs instead of ad-hoc
+``list[Stage]`` threading.  The graph carries three things a bare stage list cannot:
+
+  * **buffer defs** -- name/shape/dtype of every leaf buffer that moves host->device,
+    which is what the streaming executor chunks and schedules;
+  * **output spec** -- final buffer name, length, dtype;
+  * **structural signature** -- a digest of the codec tree, per-node static metadata,
+    and leaf shapes/dtypes.  Two blobs with equal signatures lower to byte-identical
+    programs, so one jitted executable (and one XLA compile) serves all of them --
+    the launch/geometry reuse CODAG-style decoders rely on.
+
+Meta scalars (bit widths, bases, chunk counts, ...) are closed over by the stage
+lowering and baked into the jitted program as constants, so they are part of program
+identity and must be hashed; meta arrays are hashed by content for the same reason.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Iterator, TYPE_CHECKING
+
+import numpy as np
+
+from repro.core.patterns import Stage
+
+if TYPE_CHECKING:  # avoid a hard import cycle with repro.core.plan
+    from repro.core.plan import Encoded
+
+
+@dataclasses.dataclass(frozen=True)
+class BufferDef:
+    """One leaf buffer of a compressed blob (what actually transfers)."""
+
+    name: str                 # hierarchical name, e.g. "root/index.packed"
+    shape: tuple[int, ...]
+    dtype: str                # numpy dtype string
+
+    @property
+    def nbytes(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= int(d)
+        return n * np.dtype(self.dtype).itemsize
+
+
+@dataclasses.dataclass
+class DecodeGraph:
+    """A lowered (possibly fused) decode program: stages over named buffers."""
+
+    stages: list[Stage]
+    buffers: tuple[BufferDef, ...]   # leaf inputs, in lowering order
+    out: str                         # final output buffer name
+    n_out: int
+    out_dtype: str
+    signature: str                   # structural digest (see module docstring)
+    nesting: str = ""                # human-readable codec nesting, e.g. "rle[bp]"
+    fused: bool = False
+
+    @property
+    def compressed_nbytes(self) -> int:
+        return sum(b.nbytes for b in self.buffers)
+
+    @property
+    def plain_nbytes(self) -> int:
+        return int(self.n_out) * np.dtype(self.out_dtype).itemsize
+
+    @property
+    def n_kernels(self) -> int:
+        return len(self.stages)
+
+    def buffer_names(self) -> list[str]:
+        return [b.name for b in self.buffers]
+
+
+# ------------------------------------------------------------------- signature
+
+def _meta_tokens(meta: dict[str, Any]) -> Iterator[str]:
+    for k in sorted(meta):
+        v = meta[k]
+        if isinstance(v, np.ndarray):
+            # arrays in meta become closure constants -> content is program identity
+            digest = hashlib.sha1(np.ascontiguousarray(v).tobytes()).hexdigest()[:12]
+            yield f"{k}=nd{v.shape}{v.dtype}:{digest}"
+        elif isinstance(v, (bool, int, float, str, np.integer, np.floating)):
+            yield f"{k}={v!r}"
+        elif isinstance(v, (tuple, list)):
+            yield f"{k}={type(v).__name__}{tuple(v)!r}"
+        else:
+            # unknown meta types cannot be content-hashed; refusing beats a silent
+            # signature collision that would share a program with wrong constants
+            raise TypeError(
+                f"cannot signature meta value {k!r} of type {type(v).__name__}; "
+                "use scalars, strings, tuples/lists, or ndarrays")
+
+
+def _encoded_tokens(enc: "Encoded") -> Iterator[str]:
+    yield f"codec={enc.codec};n={enc.n};dtype={np.dtype(enc.dtype).str}"
+    yield from _meta_tokens(enc.meta)
+    for name in sorted(enc.buffers):
+        b = enc.buffers[name]
+        yield f"buf:{name}:{tuple(b.shape)}:{np.dtype(b.dtype).str}"
+    for slot in sorted(enc.children):
+        yield f"child:{slot}("
+        yield from _encoded_tokens(enc.children[slot])
+        yield ")"
+
+
+def structural_signature(enc: "Encoded") -> str:
+    """Digest of codec tree + static metadata + leaf shapes/dtypes.
+
+    Equal signatures <=> the lowered stage lists are interchangeable programs, so a
+    single jitted executable can decode every blob with the signature.
+    """
+    h = hashlib.sha1()
+    for tok in _encoded_tokens(enc):
+        h.update(tok.encode())
+        h.update(b"\x00")
+    return h.hexdigest()
+
+
+def describe_encoded(enc: "Encoded") -> str:
+    """Nesting string in the paper's Table-2 notation, from the blob side."""
+    if not enc.children:
+        return enc.codec
+    inner = ", ".join(f"{k}={describe_encoded(v)}" for k, v in enc.children.items())
+    return f"{enc.codec}[{inner}]"
+
+
+def graph_from_encoded(enc: "Encoded", stages: list[Stage]) -> DecodeGraph:
+    """Assemble a DecodeGraph around an already-lowered stage list."""
+    from repro.core import plan as plan_mod
+
+    flat = plan_mod.flat_buffers(enc)
+    buffers = tuple(BufferDef(name=k, shape=tuple(v.shape),
+                              dtype=np.dtype(v.dtype).str)
+                    for k, v in flat.items())
+    final = stages[-1]
+    return DecodeGraph(
+        stages=list(stages), buffers=buffers, out=final.out,
+        n_out=int(final.n_out), out_dtype=np.dtype(final.out_dtype).str,
+        signature=structural_signature(enc), nesting=describe_encoded(enc))

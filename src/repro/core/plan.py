@@ -107,3 +107,11 @@ def lower(enc: Encoded, prefix: str = "root", out_name: str | None = None) -> li
     out = out_name or f"{prefix}.decoded"
     stages.extend(codec.stages(enc, buf_names, out))
     return stages
+
+
+def lower_graph(enc: Encoded) -> "ir.DecodeGraph":
+    """Lower a compressed blob to a DecodeGraph: the stage list plus buffer defs and
+    the structural signature the ProgramCache keys on (repro.core.ir)."""
+    from repro.core import ir
+
+    return ir.graph_from_encoded(enc, lower(enc))

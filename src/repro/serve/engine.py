@@ -3,6 +3,11 @@
 Minimal but real: fixed-slot batch, greedy sampling, per-slot lengths, slot recycling
 when a sequence emits EOS or hits max length.  The decode step is one jitted program
 (shape-stable), which is what the dry-run lowers for the decode_* shapes.
+
+Prompts may arrive as ZipFlow-compressed blobs (``submit_compressed``): they are
+decoded through the shared ``StreamingExecutor``/``ProgramCache``, so every request
+with the same compression structure reuses one jitted decode program -- the serving
+analogue of the column pipeline's one-jit-per-structure rule.
 """
 from __future__ import annotations
 
@@ -14,6 +19,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import plan as plan_mod
+from repro.core.executor import StreamingExecutor
 from repro.models import get_model
 
 
@@ -28,7 +35,8 @@ class Request:
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, batch_slots: int = 4,
-                 max_len: int = 512, eos: int = 0):
+                 max_len: int = 512, eos: int = 0,
+                 executor: StreamingExecutor | None = None):
         self.cfg = cfg
         self.model = get_model(cfg)
         self.params = params
@@ -39,9 +47,26 @@ class ServeEngine:
         self._decode = jax.jit(
             lambda p, t, st: self.model.decode_step(p, t, st))
         self._queue: list[Request] = []
+        # decompression engine for compressed prompt ingestion: whole-blob transfer
+        # (prompts are small) with a bounded private ProgramCache -- every distinct
+        # prompt length is a distinct structural signature, so an unbounded cache
+        # would grow one jitted program per length for the life of the engine
+        from repro.core.compiler import ProgramCache
+
+        self.executor = executor or StreamingExecutor(
+            chunk_bytes=None, cache=ProgramCache(max_programs=64))
 
     def submit(self, req: Request):
         self._queue.append(req)
+
+    def submit_compressed(self, rid: int, enc: plan_mod.Encoded,
+                          max_new: int = 32) -> Request:
+        """Admit a request whose prompt arrives as a compressed blob."""
+        arr = self.executor.run_one(enc, name=f"prompt/{rid}")
+        req = Request(rid, np.asarray(arr).astype(np.int32).reshape(-1),
+                      max_new=max_new)
+        self.submit(req)
+        return req
 
     def _admit(self):
         for i, slot in enumerate(self.slots):

@@ -1,7 +1,10 @@
 """rANS construction invariants (the <=1-word renorm bound that makes the lockstep
 decode branch-free) + paper Fig. 14/15 qualitative properties."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.algos.ans import (L, M, SCALE_BITS, decode_chunks_np, encode_chunks_np,
                              normalize_freqs)

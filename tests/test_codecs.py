@@ -2,7 +2,8 @@
 numpy oracle, pure-jnp stages (fused + unfused).  Property-based via hypothesis."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import plan as P
 from repro.core.compiler import compile_decoder, device_buffers

@@ -1,0 +1,212 @@
+"""Decode-graph IR + streaming executor: structural signatures and ProgramCache
+sharing, chunked/batched decode bitwise-equality against the numpy oracle, and
+chunk-level Johnson scheduling."""
+import numpy as np
+import pytest
+
+from repro.core import plan as P, scheduler
+from repro.core.compiler import ProgramCache, compile_blob
+from repro.core.executor import StreamingExecutor, split_chunks
+from repro.core.fusion import fuse_graph
+from repro.data.columns import TABLE2_PLANS
+from repro.data.tpch import QUERY_COLUMNS, generate
+
+
+def _dict_bp():
+    return P.Plan("dictionary", children={"index": P.make_plan("bitpack")})
+
+
+# ------------------------------------------------------------------- signatures
+
+def test_structural_signature_equality():
+    rng = np.random.default_rng(0)
+    a = rng.integers(100, 612, 50_000).astype(np.int32)
+    b = rng.permutation(a)            # same structure, different values
+    ga = P.lower_graph(P.encode(_dict_bp(), a))
+    gb = P.lower_graph(P.encode(_dict_bp(), b))
+    assert ga.signature == gb.signature
+    # a different plan over the same data must not collide
+    gc = P.lower_graph(P.encode(P.make_plan("bitpack"), a))
+    assert gc.signature != ga.signature
+    # a different length is a different structure (different jit shapes)
+    gd = P.lower_graph(P.encode(_dict_bp(), a[:-1]))
+    assert gd.signature != ga.signature
+
+
+def test_signature_captures_meta_constants():
+    # bit width / base are baked into the program as constants: arrays of the same
+    # shape but different value range must get different signatures
+    a = np.arange(0, 4096, dtype=np.int32)
+    b = a + 100_000          # same shape+dtype, different base and bit width
+    ga = P.lower_graph(P.encode(P.make_plan("bitpack"), a))
+    gb = P.lower_graph(P.encode(P.make_plan("bitpack"), b))
+    assert ga.signature != gb.signature
+
+
+def test_fuse_graph_rewrites_and_retags():
+    enc = P.encode(_dict_bp(), np.arange(10_000, dtype=np.int32))
+    g = P.lower_graph(enc)
+    fg = fuse_graph(g)
+    assert fg.fused and not g.fused
+    assert len(fg.stages) <= len(g.stages)
+    assert fg.signature != g.signature            # fused/unfused never share a slot
+    assert fg.out == g.out and fg.buffers == g.buffers
+
+
+def test_graph_buffer_defs_match_flat_buffers():
+    enc = P.encode(TABLE2_PLANS["L_ORDERKEY"],
+                   np.repeat(np.arange(500, dtype=np.int64), 4).astype(np.int64))
+    g = P.lower_graph(enc)
+    flat = P.flat_buffers(enc)
+    assert set(g.buffer_names()) == set(flat)
+    for bd in g.buffers:
+        assert bd.shape == tuple(flat[bd.name].shape)
+        assert bd.nbytes == flat[bd.name].nbytes
+    assert g.compressed_nbytes == enc.compressed_nbytes
+
+
+# ----------------------------------------------------------------- ProgramCache
+
+def test_n_identical_columns_compile_once():
+    rng = np.random.default_rng(1)
+    base = rng.integers(0, 999, 20_000).astype(np.int32)
+    cols = {f"c{i}": rng.permutation(base) for i in range(5)}
+    cache = ProgramCache()
+    progs = {n: compile_blob(P.encode(_dict_bp(), arr), cache=cache)
+             for n, arr in cols.items()}
+    assert len(cache) == 1, "5 structurally identical columns -> 1 cached program"
+    assert cache.stats == {"programs": 1, "hits": 4, "misses": 1}
+    assert len({id(p) for p in progs.values()}) == 1
+
+
+def test_cache_keys_compile_options():
+    enc = P.encode(P.make_plan("bitpack"), np.arange(4096, dtype=np.int32))
+    cache = ProgramCache()
+    p1 = compile_blob(enc, backend="jnp", fuse=True, cache=cache)
+    p2 = compile_blob(enc, backend="jnp", fuse=False, cache=cache)
+    p3 = compile_blob(enc, backend="baseline", cache=cache)
+    assert len({id(p1), id(p2), id(p3)}) == 3
+
+
+# ------------------------------------------------------- chunked streaming decode
+
+def test_split_chunks_roundtrip():
+    rng = np.random.default_rng(2)
+    for shape in [(1,), (100,), (10_000,), (65, 33)]:
+        arr = rng.integers(0, 255, shape).astype(np.uint8)
+        pieces = split_chunks(arr, 256)
+        assert all(p.nbytes <= max(256, arr.nbytes // max(1, arr.shape[0]))
+                   for p in pieces)
+        np.testing.assert_array_equal(np.concatenate(pieces, axis=0)
+                                      if len(pieces) > 1 else pieces[0], arr)
+
+
+@pytest.mark.parametrize("chunk_bytes", [None, 4096])
+def test_chunked_decode_bitwise_equals_oracle(chunk_bytes):
+    """Every Q1 codec nesting: chunked streaming decode == plan.decode_np."""
+    cols = generate(scale=0.002, seed=7)
+    names = QUERY_COLUMNS[1]
+    encs = {n: P.encode(TABLE2_PLANS[n], cols[n]) for n in names}
+    ex = StreamingExecutor(chunk_bytes=chunk_bytes, cache=ProgramCache())
+    results = ex.run(encs)
+    for n in names:
+        got = np.asarray(results[n].array)
+        np.testing.assert_array_equal(got, P.decode_np(encs[n]), err_msg=n)
+        np.testing.assert_array_equal(got, cols[n], err_msg=n)
+        if chunk_bytes is not None:
+            # reported chunk count == pieces the transfer actually issues
+            expected = sum(len(split_chunks(np.asarray(v), chunk_bytes))
+                           for v in P.flat_buffers(encs[n]).values())
+            assert results[n].n_chunks == expected >= 1
+
+
+def test_batched_decode_matches_single():
+    rng = np.random.default_rng(3)
+    base = rng.integers(0, 500, 30_000).astype(np.int32)
+    cols = {f"c{i}": rng.permutation(base) for i in range(3)}
+    encs = {n: P.encode(_dict_bp(), arr) for n, arr in cols.items()}
+    cache = ProgramCache()
+    ex = StreamingExecutor(chunk_bytes=8192, batch_columns=True, cache=cache)
+    results = ex.run(encs)
+    assert len(cache) == 1
+    for n, arr in cols.items():
+        np.testing.assert_array_equal(np.asarray(results[n].array), arr)
+        assert len(results[n].batched_with) == 2     # one launch for all three
+    # executor timings populated for makespan reuse
+    assert set(ex.timings) == set(cols)
+
+
+# --------------------------------------------------------- chunk-level scheduling
+
+def test_chunk_jobs_split_and_naming():
+    jobs = [scheduler.Job("a", 4.0, 1.0), scheduler.Job("b", 1.0, 4.0)]
+    cjobs = scheduler.chunk_jobs(jobs, [4, 2])
+    assert len(cjobs) == 6
+    assert cjobs[0].name == "a#0" and scheduler.column_of(cjobs[0].name) == "a"
+    assert abs(sum(j.transfer_s for j in cjobs) - 5.0) < 1e-12
+    assert abs(sum(j.decompress_s for j in cjobs) - 5.0) < 1e-12
+    assert scheduler.column_order([j.name for j in cjobs]) == ["a", "b"]
+
+
+def test_chunk_level_johnson_beats_fifo():
+    # transfer-heavy column submitted first: FIFO stalls the device behind the link
+    jobs = [scheduler.Job("big_xfer", 4.0, 1.0), scheduler.Job("big_dec", 1.0, 4.0)]
+    cjobs = scheduler.chunk_jobs(jobs, [8, 8])
+    mk_fifo = scheduler.makespan(cjobs, scheduler.fifo_order(cjobs))
+    mk_johnson = scheduler.makespan(cjobs, scheduler.johnson_order(cjobs))
+    assert mk_johnson < mk_fifo
+    # finer-grained jobs can only improve the Johnson makespan (more overlap)
+    mk_whole = scheduler.makespan(jobs, scheduler.johnson_order(jobs))
+    assert mk_johnson <= mk_whole + 1e-12
+    # and the Johnson chunk order keeps each column's chunks contiguous
+    order = scheduler.johnson_order(cjobs)
+    cols_seen = scheduler.column_order([cjobs[i].name for i in order])
+    assert cols_seen == ["big_dec", "big_xfer"]
+
+
+def test_executor_issue_order_prefers_decode_heavy_first():
+    # synthetic timings: make one column clearly transfer-bound, one decode-bound
+    rng = np.random.default_rng(4)
+    a = rng.integers(0, 9, 40_000).astype(np.int32)       # small alphabet
+    b = rng.integers(0, 1 << 20, 40_000).astype(np.int32)
+    ex = StreamingExecutor(chunk_bytes=4096, cache=ProgramCache())
+    ex.compile("a", P.encode(P.make_plan("bitpack"), a))
+    ex.compile("b", P.encode(P.make_plan("bitpack"), b))
+    ex.timings["a"] = (0.001, 0.010)    # decode-heavy -> should go first
+    ex.timings["b"] = (0.010, 0.001)
+    assert ex.issue_order(["b", "a"]) == ["a", "b"]
+
+
+# ------------------------------------------------------------- pipeline client
+
+def test_column_pipeline_measures_each_column_once():
+    from repro.data.loader import ColumnPipeline
+
+    cols = generate(scale=0.002, seed=9)
+    names = QUERY_COLUMNS[6]
+    pipe = ColumnPipeline({n: TABLE2_PLANS[n] for n in names}, chunk_bytes=16384)
+    pipe.compress({n: cols[n] for n in names})
+    pipe.run()                                   # populates the timing cache
+    est_a = {n: pipe._measure(n) for n in names}
+    est_b = {n: pipe._measure(n) for n in names}
+    assert est_a == est_b, "measurements must be cached, not re-taken"
+    # all three makespan configs come from the same cached measurement set
+    mk_serial = pipe.modeled_makespan(pipeline=False)
+    mk_j = pipe.modeled_makespan(pipeline=True, johnson=True)
+    mk_jc = pipe.modeled_makespan(pipeline=True, johnson=True, chunked=True)
+    assert mk_jc <= mk_j + 1e-9 <= mk_serial + 1e-9
+
+
+def test_recompress_invalidates_cached_timings():
+    from repro.data.loader import ColumnPipeline
+
+    rng = np.random.default_rng(11)
+    pipe = ColumnPipeline({"a": P.make_plan("bitpack")}, chunk_bytes=4096)
+    pipe.compress({"a": rng.integers(0, 100, 1_000).astype(np.int32)})
+    pipe.run()
+    assert "a" in pipe._timings
+    big = rng.integers(0, 100, 500_000).astype(np.int32)
+    pipe.compress({"a": big})        # new data under the same name
+    assert "a" not in pipe._timings, "stale measurement must not schedule new data"
+    assert "a" not in pipe.executor.timings
+    np.testing.assert_array_equal(np.asarray(pipe.run()["a"].array), big)

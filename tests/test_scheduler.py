@@ -1,7 +1,10 @@
 """Johnson's-rule pipelining scheduler (paper §3.3): optimality vs brute force,
 makespan properties, and the paper's Fig. 8 example shape."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.scheduler import (Job, brute_force_best, johnson_order, makespan,
                                   serial_time)
