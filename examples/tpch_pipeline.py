@@ -23,6 +23,9 @@ ap = argparse.ArgumentParser()
 ap.add_argument("--scale", type=float, default=0.01)
 ap.add_argument("--chunk-kib", type=int, default=1024,
                 help="streaming transfer chunk size (KiB); 0 = whole-blob")
+ap.add_argument("--chunk-decode", action="store_true",
+                help="launch one decode per transferred chunk (element-chunkable "
+                     "columns; others fall back to whole-column decode)")
 args = ap.parse_args()
 chunk_bytes = args.chunk_kib * 1024 or None
 
@@ -36,7 +39,8 @@ for q, engine in ((1, q1_engine), (6, q6_engine)):
     raw_bytes = sum(a.nbytes for a in qcols.values())
 
     pipe = ColumnPipeline({n: TABLE2_PLANS[n] for n in names},
-                          chunk_bytes=chunk_bytes)
+                          chunk_bytes=chunk_bytes,
+                          chunk_decode=args.chunk_decode)
     ratios = pipe.compress(qcols)
     comp_bytes = sum(pipe._encoded[n].compressed_nbytes for n in names)
     t0 = time.perf_counter()
@@ -56,7 +60,12 @@ for q, engine in ((1, q1_engine), (6, q6_engine)):
           f" -> result {np.asarray(out).ravel()[:4]}")
     stats = pipe.cache_stats
     print(f"   programs: {stats['programs']} jitted for {len(names)} columns "
-          f"(cache hits {stats['hits']})")
+          f"(cache hits {stats['hits']}, evictions {stats['evictions']})")
+    if args.chunk_decode:
+        launches = {n: r.decode_launches for n, r in results.items()}
+        print(f"   per-chunk decode: "
+              f"{sum(r.chunk_decoded for r in results.values())}/{len(names)} "
+              f"columns chunked, launches {launches}")
     # makespans reuse the timings measured during run() -- no re-measurement
     mk_nopipe = pipe.modeled_makespan(pipeline=False)
     mk_pipe = pipe.modeled_makespan(pipeline=True, johnson=True)

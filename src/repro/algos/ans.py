@@ -177,7 +177,8 @@ class AnsCodec:
         raw = syms.reshape(-1)[: meta["n_bytes"]]
         return raw.view(np.dtype(dtype))[:n].copy()
 
-    def stages(self, enc, buf_names: dict[str, str], out_name: str) -> list:
+    def stages(self, enc, buf_names: dict[str, str], out_name: str,
+               meta_names: dict[str, str] | None = None) -> list:
         meta = enc.meta
         itemsize = int(meta["itemsize"])
         n_bytes = int(meta["n_bytes"])

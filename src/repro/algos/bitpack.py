@@ -51,6 +51,9 @@ def unpack_np(packed: np.ndarray, n: int, bit_width: int) -> np.ndarray:
 class BitpackCodec:
     name = "bitpack"
     pattern = "fp"
+    # bit_width/base are data-dependent scalars: lifted to runtime operands so every
+    # same-shaped column shares one compiled program regardless of value range
+    lifted_meta = {"bit_width": np.int32, "base": np.int32}
 
     def encode(self, arr: np.ndarray, bit_width: int | None = None,
                **_: Any) -> tuple[dict[str, np.ndarray], dict]:
@@ -72,15 +75,16 @@ class BitpackCodec:
         vals = unpack_np(bufs["packed"], n, meta["bit_width"]) + meta["base"]
         return vals.astype(dtype)
 
-    def stages(self, enc, buf_names: dict[str, str], out_name: str) -> list:
-        bw = int(enc.meta["bit_width"])
-        # wrap to int32: zigzag payloads can have 32-bit bases; consumers of such
-        # payloads (delta) work mod 2^32 by construction
-        base = int(np.int64(enc.meta["base"]).astype(np.int32))
-        mask = np.uint32((1 << bw) - 1) if bw < 32 else np.uint32(0xFFFFFFFF)
+    def stages(self, enc, buf_names: dict[str, str], out_name: str,
+               meta_names: dict[str, str] | None = None) -> list:
+        bw_name = meta_names["bit_width"]
+        base_name = meta_names["base"]
         out_dt = jnp.dtype(enc.dtype) if np.dtype(enc.dtype).itemsize <= 4 else jnp.int32
 
-        def fn(ctx: Ctx, packed: jnp.ndarray) -> jnp.ndarray:
+        def fn(ctx: Ctx, packed: jnp.ndarray, bw_op: jnp.ndarray,
+               base_op: jnp.ndarray) -> jnp.ndarray:
+            bw = bw_op[0]        # traced (1,) operands: value is NOT program identity
+            base = base_op[0]    # (already wrapped to int32 by meta_operands)
             i = ctx.out_idx
             start = ctx.starts[0] if ctx.starts and ctx.starts[0] is not None else 0
             # overflow-safe split of bitpos = i*bw (i*bw would wrap int32 for large n):
@@ -93,12 +97,17 @@ class BitpackCodec:
             hi_shift = (jnp.uint32(32) - off) & jnp.uint32(31)
             hi = jnp.where(off == 0, jnp.uint32(0),
                            packed[jnp.minimum(w + 1, last)] << hi_shift)
+            # (1 << (bw & 31)) - 1 is 0 at bw=32, where the select takes the full mask
+            mask = jnp.where(bw >= 32, jnp.uint32(0xFFFFFFFF),
+                             (jnp.uint32(1) << (bw.astype(jnp.uint32)
+                                                & jnp.uint32(31))) - jnp.uint32(1))
             v = (lo | hi) & mask
             return (v.astype(jnp.int32) + base).astype(out_dt)
 
         return [FullyParallel(
-            fn=fn, inputs=(buf_names["packed"],),
-            specs=(BufSpec("tile", num=bw, den=32),),
+            fn=fn, inputs=(buf_names["packed"], bw_name, base_name),
+            specs=(BufSpec("tile", den=32, num_op=bw_name),
+                   BufSpec("full"), BufSpec("full")),
             out=out_name, n_out=enc.n, out_dtype=out_dt,
             elementwise=False, name="bitpack")]
 

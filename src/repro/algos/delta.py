@@ -38,6 +38,8 @@ def unzigzag32_np(z: np.ndarray) -> np.ndarray:
 class DeltaCodec:
     name = "delta"
     pattern = "fp"
+    # the start value is data-dependent but shape-free: a runtime operand
+    lifted_meta = {"base": np.int32}
 
     def encode(self, arr: np.ndarray, **_: Any) -> tuple[dict[str, np.ndarray], dict]:
         flat = np.asarray(arr).reshape(-1).astype(np.int64)
@@ -51,8 +53,9 @@ class DeltaCodec:
         vals = (np.cumsum(d) + meta["base"]) & _MASK32
         return vals.astype(np.uint32).astype(np.int32).astype(dtype)
 
-    def stages(self, enc, buf_names: dict[str, str], out_name: str) -> list:
-        base = int(enc.meta["base"])
+    def stages(self, enc, buf_names: dict[str, str], out_name: str,
+               meta_names: dict[str, str] | None = None) -> list:
+        base_name = meta_names["base"]
         out_dt = jnp.dtype(enc.dtype) if np.dtype(enc.dtype).itemsize <= 4 else jnp.int32
         mid = f"{out_name}.unzig"
 
@@ -60,14 +63,14 @@ class DeltaCodec:
             zu = primary(ctx, z).astype(jnp.uint32)
             return ((zu >> 1) ^ (jnp.uint32(0) - (zu & 1))).astype(jnp.int32)
 
-        def prefix(d: jnp.ndarray) -> jnp.ndarray:
-            return jnp.cumsum(d) + jnp.int32(np.int64(base).astype(np.int32))
+        def prefix(d: jnp.ndarray, base_op: jnp.ndarray) -> jnp.ndarray:
+            return jnp.cumsum(d) + base_op[0]
 
         return [
             FullyParallel(fn=unzig, inputs=(buf_names["deltas"],),
                           specs=(BufSpec("tile"),), out=mid, n_out=enc.n,
                           out_dtype=jnp.int32, elementwise=True, name="unzigzag"),
-            Aux(fn=prefix, inputs=(mid,), out=out_name, n_out=enc.n,
+            Aux(fn=prefix, inputs=(mid, base_name), out=out_name, n_out=enc.n,
                 out_dtype=out_dt, name="delta-cumsum"),
         ]
 

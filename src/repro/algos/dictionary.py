@@ -31,7 +31,8 @@ class DictionaryCodec:
         return np.asarray(bufs["dictionary"])[
             np.asarray(bufs["index"]).astype(np.int64)].astype(dtype)
 
-    def stages(self, enc, buf_names: dict[str, str], out_name: str) -> list:
+    def stages(self, enc, buf_names: dict[str, str], out_name: str,
+               meta_names: dict[str, str] | None = None) -> list:
         out_dt = jnp.dtype(enc.dtype) if np.dtype(enc.dtype).itemsize <= 4 else jnp.int32
 
         def fn(ctx: Ctx, index: jnp.ndarray, dictionary: jnp.ndarray) -> jnp.ndarray:

@@ -66,7 +66,8 @@ class Float2IntCodec:
         out[np.asarray(bufs["exc_idx"]).astype(np.int64)] = np.asarray(bufs["exc_val"])
         return out.astype(dtype)
 
-    def stages(self, enc, buf_names: dict[str, str], out_name: str) -> list:
+    def stages(self, enc, buf_names: dict[str, str], out_name: str,
+               meta_names: dict[str, str] | None = None) -> list:
         n_exc = int(enc.meta["n_exc"])
         mid = f"{out_name}.scaled" if n_exc else out_name
 

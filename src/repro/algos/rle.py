@@ -39,7 +39,8 @@ class RleCodec:
         return np.repeat(np.asarray(bufs["values"]),
                          np.asarray(bufs["counts"]).astype(np.int64))[:n].astype(dtype)
 
-    def stages(self, enc, buf_names: dict[str, str], out_name: str) -> list:
+    def stages(self, enc, buf_names: dict[str, str], out_name: str,
+               meta_names: dict[str, str] | None = None) -> list:
         out_dt = jnp.dtype(enc.dtype) if np.dtype(enc.dtype).itemsize <= 4 else jnp.int32
         presum_name = f"{out_name}.presum"
 

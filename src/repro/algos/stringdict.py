@@ -58,7 +58,8 @@ class StringDictCodec:
         raw = chars[offs[index[g]] + pos].astype(np.uint8)
         return raw[: meta["n_bytes"]].view(np.dtype(dtype))[:n].copy()
 
-    def stages(self, enc, buf_names: dict[str, str], out_name: str) -> list:
+    def stages(self, enc, buf_names: dict[str, str], out_name: str,
+               meta_names: dict[str, str] | None = None) -> list:
         meta = enc.meta
         n_tokens = int(meta["n_tokens"])
         n_bytes = int(meta["n_bytes"])

@@ -1,18 +1,22 @@
 """ZipFlow core: patterns, plans, decode-graph IR, fusion, geometry, executor."""
-from repro.core.compiler import (DEFAULT_CACHE, Program, ProgramCache, compile_blob,
-                                 compile_decoder, decode_on_device, device_buffers)
+from repro.core.compiler import (DEFAULT_CACHE, ChunkProgram, Program, ProgramCache,
+                                 compile_blob, compile_decoder, decode_on_device,
+                                 device_buffers)
 from repro.core.executor import ColumnExec, StreamingExecutor
 from repro.core.geometry import CHIPS, Geometry, chip, native_config
-from repro.core.ir import BufferDef, DecodeGraph, structural_signature
-from repro.core.plan import (Encoded, Plan, decode_np, encode, flat_buffers, lower,
-                             lower_graph, make_plan)
+from repro.core.ir import (BufferDef, DecodeGraph, MetaSpec, element_chunk_layout,
+                           structural_signature)
+from repro.core.plan import (Encoded, Plan, decode_np, encode, flat_buffers,
+                             host_operands, lower, lower_graph, make_plan,
+                             meta_operands)
 from repro.core.scheduler import Job, chunk_jobs, johnson_order, makespan, schedule
 
 __all__ = [
-    "CHIPS", "BufferDef", "ColumnExec", "DEFAULT_CACHE", "DecodeGraph", "Encoded",
-    "Geometry", "Job", "Plan", "Program", "ProgramCache", "StreamingExecutor",
-    "chip", "chunk_jobs", "compile_blob", "compile_decoder", "decode_np",
-    "decode_on_device", "device_buffers", "encode", "flat_buffers", "johnson_order",
-    "lower", "lower_graph", "make_plan", "makespan", "native_config", "schedule",
-    "structural_signature",
+    "CHIPS", "BufferDef", "ChunkProgram", "ColumnExec", "DEFAULT_CACHE",
+    "DecodeGraph", "Encoded", "Geometry", "Job", "MetaSpec", "Plan", "Program",
+    "ProgramCache", "StreamingExecutor", "chip", "chunk_jobs", "compile_blob",
+    "compile_decoder", "decode_np", "decode_on_device", "device_buffers",
+    "element_chunk_layout", "encode", "flat_buffers", "host_operands",
+    "johnson_order", "lower", "lower_graph", "make_plan", "makespan",
+    "meta_operands", "native_config", "schedule", "structural_signature",
 ]

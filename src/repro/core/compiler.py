@@ -2,10 +2,13 @@
 
 The compile pipeline is ``plan.lower_graph`` -> ``fusion.fuse_graph`` ->
 ``compile_graph``; compiled programs live in a ``ProgramCache`` keyed by the graph's
-structural signature plus compile options, so N structurally identical columns share
-ONE jitted executable (one trace, one XLA compile, one launch geometry) instead of
-compiling per blob.  ``compile_decoder`` remains as the thin per-blob compatibility
-shim over that pipeline.
+STRUCTURE-ONLY signature plus compile options, so N structurally identical columns
+share ONE jitted executable (one trace, one XLA compile, one launch geometry) even
+when their data-dependent meta differs: programs are *called* with an operand pytree
+(leaf buffers + lifted meta scalars, ``plan.host_operands``), never specialized on
+meta values.  ``compile_decoder`` remains as the thin per-blob compatibility shim
+over that pipeline; ``get_chunk``/``compile_chunk_graph`` build the per-chunk decode
+programs the streaming executor launches chunk-by-chunk.
 
 Backends:
   * "jnp"      -- pure jax.numpy stages (reference semantics; fast on CPU; also what a
@@ -27,8 +30,8 @@ import jax.numpy as jnp
 from repro.core import fusion as fusion_mod
 from repro.core import plan as plan_mod
 from repro.core.geometry import DEFAULT_CHIP, Geometry, chip as chip_spec, native_config
-from repro.core.ir import DecodeGraph
-from repro.core.patterns import Aux, Stage
+from repro.core.ir import DecodeGraph, element_chunk_layout
+from repro.core.patterns import Aux, Ctx, Stage
 
 
 def _run_stage(st: Stage, bufs: dict[str, jnp.ndarray], backend: str,
@@ -48,9 +51,10 @@ BASELINE_GEOMS = {"fp": Geometry(1, 8, 128), "gp": Geometry(1, 8, 128),
 class Program:
     """One compiled decode program, shared by every blob with the same signature.
 
-    ``fn`` decodes a single column's buffer dict; ``batched`` decodes a stack of
-    same-signature columns in one launch (vmap over the leading axis) -- built lazily
-    because most programs only ever see one column.
+    ``fn`` decodes a single column's operand dict (leaf buffers + lifted meta
+    scalars); ``batched`` decodes a stack of same-signature columns in one launch
+    (vmap over the leading axis -- meta operands stack and vmap with the buffers)
+    -- built lazily because most programs only ever see one column.
     """
 
     fn: Callable[[dict[str, jnp.ndarray]], jnp.ndarray]
@@ -115,6 +119,67 @@ def compile_graph(graph: DecodeGraph, backend: str = "jnp",
     return Program(fn=fn, raw_fn=decode, graph=graph, backend=backend, jit=jit)
 
 
+@dataclasses.dataclass
+class ChunkProgram:
+    """Per-chunk decode program: one launch decodes output elements
+    [out_start, out_start + chunk_elems) from the chunk's buffer slices.
+
+    ``fn(bufs, out_start)`` takes the chunk's tile-leaf slices plus the column's
+    whole-resident buffers/meta operands, with ``out_start`` a traced scalar so the
+    same program serves every chunk at its offset.  Executed with the stage
+    closures' jnp semantics (the fns are backend-agnostic by construction)."""
+
+    fn: Callable[[dict[str, jnp.ndarray], Any], jnp.ndarray]
+    graph: DecodeGraph
+    chunk_elems: int
+    jit: bool = True
+    calls: int = 0
+
+    def __call__(self, bufs: dict[str, jnp.ndarray], out_start) -> jnp.ndarray:
+        self.calls += 1
+        return self.fn(bufs, out_start)
+
+
+def compile_chunk_graph(graph: DecodeGraph, chunk_elems: int,
+                        jit: bool = True) -> ChunkProgram:
+    """Compile the per-chunk variant of an element-chunkable graph.
+
+    Every stage is Fully-Parallel (``element_chunk_layout`` guarantees it), so the
+    chunk evaluates each stage closure at the chunk's global output indices with
+    tile inputs sliced to the chunk window: exactly the addressing the Pallas grid
+    tiles use, at transfer-chunk granularity.  Tile origins for operand-driven
+    ratios (bitpack's ``bit_width``) are computed from the traced operand, so one
+    program serves columns with different widths too."""
+    layout = element_chunk_layout(graph)
+    if layout is None:
+        raise ValueError(f"graph {graph.nesting!r} is not element-chunkable")
+    stages = graph.stages
+
+    def decode_chunk(bufs: dict[str, jnp.ndarray], out_start) -> jnp.ndarray:
+        out_idx = out_start + jnp.arange(chunk_elems, dtype=jnp.int32)
+        env = dict(bufs)
+        produced: set[str] = set()
+        out = None
+        for st in stages:
+            starts = []
+            for nm, spec in zip(st.inputs, st.specs):
+                if nm in produced or spec.kind == "full":
+                    starts.append(None)     # positionally aligned / whole-resident
+                elif spec.num_op:
+                    num = env[spec.num_op][0]
+                    starts.append((out_start * num) // spec.den)
+                else:
+                    starts.append((out_start * spec.num) // spec.den)
+            ctx = Ctx(out_idx=out_idx, starts=tuple(starts))
+            out = st.fn(ctx, *[env[nm] for nm in st.inputs]).astype(st.out_dtype)
+            env[st.out] = out
+            produced.add(st.out)
+        return out
+
+    fn = jax.jit(decode_chunk) if jit else decode_chunk
+    return ChunkProgram(fn=fn, graph=graph, chunk_elems=int(chunk_elems), jit=jit)
+
+
 def _geometry_key(geometry: dict[str, Geometry] | None):
     if geometry is None:
         return None
@@ -132,12 +197,13 @@ class ProgramCache:
     """
 
     def __init__(self, max_programs: int | None = None):
-        self._programs: dict[tuple, Program] = {}   # insertion order = LRU order
+        self._programs: dict[tuple, Any] = {}   # insertion order = LRU order
         self._lock = threading.Lock()
         self._compiling: dict[tuple, threading.Lock] = {}   # per-key compile guard
         self.max_programs = max_programs
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     def __len__(self) -> int:
         return len(self._programs)
@@ -145,26 +211,27 @@ class ProgramCache:
     @property
     def stats(self) -> dict[str, int]:
         return {"programs": len(self._programs), "hits": self.hits,
-                "misses": self.misses}
+                "misses": self.misses, "evictions": self.evictions}
 
     def clear(self) -> None:
         with self._lock:
             self._programs.clear()
             self._compiling.clear()
-            self.hits = self.misses = 0
+            self.hits = self.misses = self.evictions = 0
 
-    def get(self, graph: DecodeGraph, backend: str = "jnp",
-            chip: str = DEFAULT_CHIP,
-            geometry: dict[str, Geometry] | None = None,
-            interpret: bool | None = None, jit: bool = True) -> Program:
-        key = (graph.signature, backend, chip, _geometry_key(geometry),
-               interpret, jit)
+    def _lookup(self, key: tuple):
+        """Under self._lock: hit bookkeeping + LRU refresh."""
+        prog = self._programs.get(key)
+        if prog is not None:
+            self.hits += 1
+            if self.max_programs is not None:       # refresh LRU position
+                self._programs[key] = self._programs.pop(key)
+        return prog
+
+    def _get(self, key: tuple, build: Callable[[], Any]):
         with self._lock:
-            prog = self._programs.get(key)
+            prog = self._lookup(key)
             if prog is not None:
-                self.hits += 1
-                if self.max_programs is not None:       # refresh LRU position
-                    self._programs[key] = self._programs.pop(key)
                 return prog
             key_lock = self._compiling.setdefault(key, threading.Lock())
         # serialize same-key compiles (different keys still compile concurrently)
@@ -172,25 +239,39 @@ class ProgramCache:
         with key_lock:
             try:
                 with self._lock:
-                    prog = self._programs.get(key)
+                    prog = self._lookup(key)
                     if prog is not None:
-                        self.hits += 1
-                        if self.max_programs is not None:
-                            self._programs[key] = self._programs.pop(key)
                         return prog
-                prog = compile_graph(graph, backend=backend, chip=chip,
-                                     geometry=geometry, interpret=interpret,
-                                     jit=jit)
+                prog = build()
                 with self._lock:
                     self._programs[key] = prog
                     self.misses += 1
                     while (self.max_programs is not None
                            and len(self._programs) > self.max_programs):
                         self._programs.pop(next(iter(self._programs)))
+                        self.evictions += 1
             finally:
                 with self._lock:
                     self._compiling.pop(key, None)
         return prog
+
+    def get(self, graph: DecodeGraph, backend: str = "jnp",
+            chip: str = DEFAULT_CHIP,
+            geometry: dict[str, Geometry] | None = None,
+            interpret: bool | None = None, jit: bool = True) -> Program:
+        key = (graph.signature, backend, chip, _geometry_key(geometry),
+               interpret, jit)
+        return self._get(key, lambda: compile_graph(
+            graph, backend=backend, chip=chip, geometry=geometry,
+            interpret=interpret, jit=jit))
+
+    def get_chunk(self, graph: DecodeGraph, chunk_elems: int,
+                  jit: bool = True) -> ChunkProgram:
+        """Cached per-chunk program: one per (structure, chunk size), shared by
+        every chunk at that size across all same-signature columns."""
+        key = (graph.signature, "chunk", int(chunk_elems), jit)
+        return self._get(key, lambda: compile_chunk_graph(
+            graph, chunk_elems, jit=jit))
 
 
 # Process-wide default cache: the ``compile_decoder`` shim and every executor that
@@ -253,10 +334,11 @@ def compile_decoder(enc: plan_mod.Encoded, backend: str = "jnp", fuse: bool = Tr
 
 def device_buffers(enc: plan_mod.Encoded, device=None,
                    sharding=None) -> dict[str, jnp.ndarray]:
-    """Move a blob's leaf buffers host->device (the compressed transfer itself)."""
-    flat = plan_mod.flat_buffers(enc)
+    """Move a blob's operands host->device: leaf buffers (the compressed transfer
+    itself) plus the lifted meta operands the program consumes at call time."""
+    ops = plan_mod.host_operands(enc)
     put = functools.partial(jax.device_put, device=sharding or device)
-    return {k: put(v) for k, v in flat.items()}
+    return {k: put(v) for k, v in ops.items()}
 
 
 def decode_on_device(enc: plan_mod.Encoded, backend: str = "jnp",

@@ -1,4 +1,5 @@
-"""Streaming decode executor: chunked double-buffered transfer + batched decode.
+"""Streaming decode executor: chunked double-buffered transfer + per-chunk or
+batched decode.
 
 This is the runtime half of the compile pipeline (``plan.lower_graph`` ->
 ``fusion.fuse_graph`` -> ``ProgramCache``).  Given a set of compressed blobs it
@@ -8,14 +9,27 @@ This is the runtime half of the compile pipeline (``plan.lower_graph`` ->
      (``scheduler.chunk_jobs``) so transfer of later chunks overlaps decode of
      earlier columns, with a bounded in-flight window (double buffering: the async
      ``jax.device_put`` of chunk k+1..k+w is in flight while chunk k is consumed),
-  3. reassembles chunks on device and decodes each column through its cached
-     Program -- stacking same-signature columns and decoding them in ONE batched
-     launch (``Program.batched``, vmap over the leading axis), and
+  3. decodes each column through its cached Program.  Two decode modes:
+
+     * **per-chunk** (``chunk_decode=True``, element-chunkable graphs): every
+       transferred chunk is decoded in its own launch while later chunks are still
+       in flight -- transfer/decode overlap *within* a column, the configuration
+       the fig19 ``Zc`` model bounds.  Chunk slices are coordinated through the
+       graph's ``ChunkLayout`` so outputs concatenate to exactly the one-shot
+       result; graphs that are not element-chunkable (Group-Parallel, ANS, Aux
+       stages) fall back to one whole-column launch.
+     * **whole-column** (default): chunks reassemble on device and the column
+       decodes in one launch, stacking same-signature columns into ONE batched
+       launch (``Program.batched``, vmap over the leading axis -- lifted meta
+       operands stack and vmap along with the buffers), and
+
   4. records per-column (transfer_s, decode_s) timings so clients schedule future
      runs from real measurements instead of re-measuring every column.
 
-Chunked+batched execution is bitwise-identical to the one-shot path: chunks
-concatenate back to the exact source bytes and vmap runs the same program per lane.
+Chunked, batched and per-chunk execution are all bitwise-identical to the one-shot
+path: chunks concatenate back to the exact source bytes, vmap runs the same program
+per lane, and per-chunk launches evaluate the same stage closures at the same global
+indices over exact slices.
 """
 from __future__ import annotations
 
@@ -30,7 +44,7 @@ import numpy as np
 from repro.core import plan as plan_mod, scheduler
 from repro.core.compiler import DEFAULT_CACHE, Program, ProgramCache
 from repro.core.geometry import DEFAULT_CHIP, chip as chip_spec
-from repro.core.ir import DecodeGraph
+from repro.core.ir import DecodeGraph, element_chunk_layout
 
 
 def split_chunks(arr: np.ndarray, chunk_bytes: int | None) -> list[np.ndarray]:
@@ -43,6 +57,21 @@ def split_chunks(arr: np.ndarray, chunk_bytes: int | None) -> list[np.ndarray]:
     row_bytes = max(1, arr.nbytes // max(1, arr.shape[0]))
     rows = max(1, chunk_bytes // row_bytes)
     return [arr[i:i + rows] for i in range(0, arr.shape[0], rows)]
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkSchedule:
+    """Coordinated per-chunk slicing for one column (resolved from the graph's
+    ChunkLayout and the column's actual meta operand values)."""
+
+    out_starts: tuple[int, ...]
+    out_sizes: tuple[int, ...]
+    slices: dict[str, list[tuple[int, int]]]   # tile leaf -> per-chunk [lo, hi)
+    whole: tuple[str, ...]                     # transferred once, shared by chunks
+
+    @property
+    def n_chunks(self) -> int:
+        return len(self.out_starts)
 
 
 @dataclasses.dataclass
@@ -58,14 +87,17 @@ class ColumnExec:
     n_chunks: int
     signature: str
     batched_with: tuple[str, ...] = ()   # same-signature columns sharing the launch
+    decode_launches: int = 1             # >1 iff the per-chunk path ran
+    chunk_decoded: bool = False
 
 
 class StreamingExecutor:
-    """Chunked, cached, batched decode engine over a ProgramCache."""
+    """Chunked, cached, batched/per-chunk decode engine over a ProgramCache."""
 
     def __init__(self, backend: str = "jnp", fuse: bool = True,
                  chunk_bytes: int | None = 1 << 20, pipeline: bool = True,
                  batch_columns: bool = True, prefetch_chunks: int = 2,
+                 chunk_decode: bool = False,
                  chip: str = DEFAULT_CHIP, cache: ProgramCache | None = None):
         self.backend = backend
         self.fuse = fuse
@@ -73,12 +105,14 @@ class StreamingExecutor:
         self.pipeline = pipeline
         self.batch_columns = batch_columns
         self.prefetch_chunks = max(1, prefetch_chunks)
+        self.chunk_decode = chunk_decode
         self.chip = chip
         self.cache = cache if cache is not None else DEFAULT_CACHE
         self._encoded: dict[str, plan_mod.Encoded] = {}
         self._graphs: dict[str, DecodeGraph] = {}
         self._programs: dict[str, Program] = {}
         self._chunk_counts: dict[str, int] = {}
+        self._schedules: dict[str, ChunkSchedule | None] = {}
         # measured (transfer_s, decode_s) per column from the latest run
         self.timings: dict[str, tuple[float, float]] = {}
 
@@ -90,6 +124,7 @@ class StreamingExecutor:
         self._encoded[name] = enc
         # re-registering a name invalidates anything derived from the old blob
         self._chunk_counts.pop(name, None)
+        self._schedules.pop(name, None)
         self.timings.pop(name, None)
         prog = compile_blob(enc, backend=self.backend, fuse=self.fuse,
                             chip=self.chip, cache=self.cache)
@@ -118,8 +153,9 @@ class StreamingExecutor:
         return transfer, decode
 
     def _n_chunks(self, name: str) -> int:
-        """Number of transfer pieces the executor will actually issue for a column
-        (per leaf buffer, row-granular) -- the chunk count the Zc model uses."""
+        """Number of transfer pieces the executor will issue for a column's leaf
+        buffers (row-granular) -- the chunk count the Zc model uses.  Lifted meta
+        operands ride along as extra scalar puts but are not counted."""
         if self.chunk_bytes is None:
             return 1
         cached = self._chunk_counts.get(name)
@@ -129,6 +165,54 @@ class StreamingExecutor:
                          for v in flat.values())
             self._chunk_counts[name] = cached
         return cached
+
+    def chunk_schedule(self, name: str) -> ChunkSchedule | None:
+        """Coordinated per-chunk decode schedule for a column, or None when the
+        graph is not element-chunkable / chunking is off / one chunk suffices."""
+        if not self.chunk_decode or self.chunk_bytes is None:
+            return None
+        if name in self._schedules:
+            return self._schedules[name]
+        sched = self._build_schedule(name)
+        self._schedules[name] = sched
+        return sched
+
+    def _build_schedule(self, name: str) -> ChunkSchedule | None:
+        graph = self._graphs[name]
+        layout = element_chunk_layout(graph)
+        if layout is None:
+            return None
+        ops = plan_mod.host_operands(self._encoded[name])
+        # resolve tile ratios (operand-driven ratios use this column's meta value)
+        ratios: dict[str, tuple[int, int]] = {}
+        per_elem = 0.0
+        for nm, spec in layout.tiled.items():
+            num = int(ops[spec.num_op][0]) if spec.num_op else int(spec.num)
+            ratios[nm] = (num, int(spec.den))
+            per_elem += num / spec.den * np.dtype(ops[nm].dtype).itemsize
+        n = int(graph.n_out)
+        align = int(layout.align)
+        # chunk size targets ~chunk_bytes of *compressed* tile bytes per chunk,
+        # rounded to the alignment every boundary must respect
+        chunk_elems = int(self.chunk_bytes / max(per_elem, 1e-9)) // align * align
+        chunk_elems = max(align, chunk_elems)
+        if chunk_elems >= n:
+            return None                      # degenerate: one chunk = whole column
+        out_starts = tuple(range(0, n, chunk_elems))
+        out_sizes = tuple(min(chunk_elems, n - s) for s in out_starts)
+        slices: dict[str, list[tuple[int, int]]] = {}
+        for nm, (num, den) in ratios.items():
+            length = int(ops[nm].shape[0])
+            per = []
+            for s, sz in zip(out_starts, out_sizes):
+                lo = (s * num) // den
+                # the final chunk takes the remaining rows (incl. guard words);
+                # interior boundaries are aligned so (b*num) % den == 0 exactly
+                hi = length if s + sz >= n else ((s + sz) * num) // den
+                per.append((lo, max(hi, lo + 1)))
+            slices[nm] = per
+        return ChunkSchedule(out_starts=out_starts, out_sizes=out_sizes,
+                             slices=slices, whole=layout.whole)
 
     def issue_order(self, names: Sequence[str] | None = None) -> list[str]:
         """Column issue order induced by chunk-level Johnson scheduling."""
@@ -153,17 +237,36 @@ class StreamingExecutor:
             names = list(self._encoded)
         order = list(order) if order is not None else self.issue_order(names)
 
-        # host-side chunking, in issue order
+        # host-side staging, in issue order.  Whole-mode columns split every
+        # operand row-granularly; per-chunk columns use the coordinated schedule
+        # (whole-resident buffers first, then chunk 0's slices, chunk 1's, ...).
         host: dict[str, dict[str, list[np.ndarray]]] = {}
+        scheds = {name: self.chunk_schedule(name) for name in order}
         transfer_items: list[tuple[str, str, int, np.ndarray]] = []
         col_end: dict[str, int] = {}
+        chunk_ends: dict[str, list[int]] = {}
         for name in order:
-            flat = plan_mod.flat_buffers(self._encoded[name])
-            host[name] = {k: split_chunks(np.asarray(v), self.chunk_bytes)
-                          for k, v in flat.items()}
-            for k, pieces in host[name].items():
-                for i, piece in enumerate(pieces):
-                    transfer_items.append((name, k, i, piece))
+            ops = plan_mod.host_operands(self._encoded[name])
+            sched = scheds[name]
+            if sched is None:
+                host[name] = {k: split_chunks(np.asarray(v), self.chunk_bytes)
+                              for k, v in ops.items()}
+                for k, pieces in host[name].items():
+                    for i, piece in enumerate(pieces):
+                        transfer_items.append((name, k, i, piece))
+            else:
+                host[name] = {k: [np.asarray(ops[k])] for k in sched.whole}
+                for k in sched.whole:
+                    transfer_items.append((name, k, 0, host[name][k][0]))
+                ends = []
+                for i in range(sched.n_chunks):
+                    for k, per in sched.slices.items():
+                        lo, hi = per[i]
+                        piece = np.asarray(ops[k])[lo:hi]
+                        host[name].setdefault(k, []).append(piece)
+                        transfer_items.append((name, k, i, piece))
+                    ends.append(len(transfer_items))
+                chunk_ends[name] = ends
             col_end[name] = len(transfer_items)
 
         device: dict[str, dict[str, list]] = {n: {k: [None] * len(p) for k, p in
@@ -183,23 +286,34 @@ class StreamingExecutor:
                 issue_s[name] += time.perf_counter() - t
                 cursor += 1
 
-        # decode units: *consecutive-in-order* columns sharing one Program decode in
-        # a single batched launch.  Grouping only adjacent columns keeps the
-        # transfer/decode overlap: a global group spanning the whole order would
-        # force every transfer to finish before the first decode.  (Johnson's rule
-        # keys on (transfer, decode) times, which are equal for same-signature
-        # columns, so they end up adjacent anyway.)
-        units: list[tuple[Program, list[str]]] = []
+        # decode units.  Per-chunk columns are singleton units (their launches are
+        # already split along the chunk axis); whole-mode *consecutive-in-order*
+        # columns sharing one Program decode in a single batched launch.  Grouping
+        # only adjacent columns keeps the transfer/decode overlap: a global group
+        # spanning the whole order would force every transfer to finish before the
+        # first decode.  (Johnson's rule keys on (transfer, decode) times, which
+        # are equal for same-signature columns, so they end up adjacent anyway.)
+        units: list[tuple[str, Program | None, list[str]]] = []
         for name in order:
+            if scheds[name] is not None:
+                units.append(("chunk", None, [name]))
+                continue
             prog = self._programs[name]
-            if self.batch_columns and units and units[-1][0] is prog:
-                units[-1][1].append(name)
+            if (self.batch_columns and units and units[-1][0] == "whole"
+                    and units[-1][1] is prog):
+                units[-1][2].append(name)
             else:
-                units.append((prog, [name]))
+                units.append(("whole", prog, [name]))
 
         window = self.prefetch_chunks
         results: dict[str, ColumnExec] = {}
-        for prog, members in units:
+        for kind, prog, members in units:
+            if kind == "chunk":
+                name = members[0]
+                results[name] = self._run_chunked(
+                    name, scheds[name], device[name], chunk_ends[name],
+                    issue_until, issue_s, window)
+                continue
             last_end = max(col_end[m] for m in members)
             issue_until(last_end + window)      # keep the link busy ahead of decode
             t0 = time.perf_counter()
@@ -251,6 +365,57 @@ class StreamingExecutor:
                     batched_with=tuple(s for s in siblings if s != m))
         return results
 
+    def _run_chunked(self, name: str, sched: ChunkSchedule,
+                     device_col: dict[str, list], ends: list[int],
+                     issue_until, issue_s: dict[str, float],
+                     window: int) -> ColumnExec:
+        """Per-chunk decode of one column: launch chunk k's decode while chunks
+        k+1..k+w transfer, then concatenate the chunk outputs on device."""
+        graph = self._graphs[name]
+        K = sched.n_chunks
+        residual = 0.0
+        dispatch = 0.0
+        cold = False
+        whole_bufs: dict[str, jnp.ndarray] | None = None
+        launches = []     # (ChunkProgram, bufs, out_start) -- kept for warm re-time
+        outs = []
+        for k in range(K):
+            issue_until(ends[k] + window)
+            t0 = time.perf_counter()
+            if whole_bufs is None:     # issued ahead of chunk 0 by construction
+                whole_bufs = {nm: device_col[nm][0] for nm in sched.whole}
+                jax.block_until_ready(list(whole_bufs.values()))
+            pieces = {nm: device_col[nm][k] for nm in sched.slices}
+            jax.block_until_ready(list(pieces.values()))
+            residual += time.perf_counter() - t0
+            prog = self.cache.get_chunk(graph, sched.out_sizes[k])
+            cold = cold or prog.calls == 0
+            bufs = {**whole_bufs, **pieces}
+            start = np.int32(sched.out_starts[k])
+            t0 = time.perf_counter()
+            outs.append(prog(bufs, start))       # async launch; k+1 still in flight
+            dispatch += time.perf_counter() - t0
+            launches.append((prog, bufs, start))
+        t0 = time.perf_counter()
+        arr = outs[0] if K == 1 else jnp.concatenate(outs)
+        jax.block_until_ready(arr)
+        dispatch += time.perf_counter() - t0
+        if cold:      # first use traced+compiled: re-run warm so cached timings
+            t0 = time.perf_counter()              # model decode, not jit
+            outs2 = [p(b, s) for p, b, s in launches]
+            jax.block_until_ready(outs2[0] if K == 1 else jnp.concatenate(outs2))
+            decode_s = time.perf_counter() - t0
+        else:
+            decode_s = dispatch
+        enc = self._encoded[name]
+        transfer_s = issue_s[name] + residual
+        self.timings[name] = (transfer_s, decode_s)
+        return ColumnExec(
+            name=name, array=arr, transfer_s=transfer_s, decode_s=decode_s,
+            compressed_bytes=enc.compressed_nbytes, plain_bytes=enc.plain_nbytes,
+            n_chunks=K, signature=graph.signature,
+            decode_launches=K, chunk_decoded=True)
+
     def run_one(self, enc: plan_mod.Encoded, name: str = "_single") -> jnp.ndarray:
         """Decode a single blob through the cache (serving-path helper).
 
@@ -262,7 +427,7 @@ class StreamingExecutor:
             return self.run({name: enc})[name].array
         finally:
             for store in (self._encoded, self._graphs, self._programs,
-                          self._chunk_counts, self.timings):
+                          self._chunk_counts, self._schedules, self.timings):
                 store.pop(name, None)
 
     # ------------------------------------------------------------------- model

@@ -128,15 +128,18 @@ def fuse(stages: list[Stage], final_out: str | None = None) -> list[Stage]:
                 pi = producer.get(cons.inputs[0])
                 if pi is not None and isinstance(stages[pi], FullyParallel):
                     prod = stages[pi]
-                    if (uses.get(prod.out, 0) == 1 and prod.out != final_out
-                            and len(cons.inputs) == 1):
+                    if uses.get(prod.out, 0) == 1 and prod.out != final_out:
+                        # only the Aux's primary input is produced; trailing inputs
+                        # (e.g. lifted meta operands like delta's base) pass through
                         a_fn, p_stage = cons.fn, prod
 
-                        def aux_fn(*bufs, _a=a_fn, _p=p_stage):
-                            return _a(_p.run_jnp(dict(zip(_p.inputs, bufs))))
+                        def aux_fn(*bufs, _a=a_fn, _p=p_stage,
+                                   _n=len(prod.inputs)):
+                            mid = _p.run_jnp(dict(zip(_p.inputs, bufs[:_n])))
+                            return _a(mid, *bufs[_n:])
 
                         new = dataclasses.replace(
-                            cons, fn=aux_fn, inputs=prod.inputs,
+                            cons, fn=aux_fn, inputs=prod.inputs + cons.inputs[1:],
                             name=f"{prod.name}>{cons.name}")
                         stages[ci] = new
                         del stages[pi]

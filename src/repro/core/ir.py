@@ -2,29 +2,38 @@
 
 ``plan.lower_graph`` produces a ``DecodeGraph`` from a compressed blob and
 ``fusion.fuse_graph`` rewrites it; the compiler consumes graphs instead of ad-hoc
-``list[Stage]`` threading.  The graph carries three things a bare stage list cannot:
+``list[Stage]`` threading.  The graph carries four things a bare stage list cannot:
 
   * **buffer defs** -- name/shape/dtype of every leaf buffer that moves host->device,
     which is what the streaming executor chunks and schedules;
+  * **meta specs** -- the *lifted* data-dependent metadata (bitpack ``bit_width``/
+    ``base``, delta ``base``, ...) that enters the program as runtime operands.  A
+    ``MetaSpec`` is identified by name/dtype/shape only -- its VALUE is not program
+    identity, so two blobs differing only in such a scalar share one jitted program;
   * **output spec** -- final buffer name, length, dtype;
-  * **structural signature** -- a digest of the codec tree, per-node static metadata,
-    and leaf shapes/dtypes.  Two blobs with equal signatures lower to byte-identical
-    programs, so one jitted executable (and one XLA compile) serves all of them --
-    the launch/geometry reuse CODAG-style decoders rely on.
+  * **structural signature** -- a digest of the codec tree, per-node *structural*
+    metadata (shape-determining counts: group counts, chunk geometry, ...), leaf
+    shapes/dtypes, and the lifted-operand specs.  Two blobs with equal signatures
+    lower to byte-identical programs, so one jitted executable (and one XLA compile)
+    serves all of them -- the launch/geometry reuse CODAG-style decoders rely on.
 
-Meta scalars (bit widths, bases, chunk counts, ...) are closed over by the stage
-lowering and baked into the jitted program as constants, so they are part of program
-identity and must be hashed; meta arrays are hashed by content for the same reason.
+Structural meta values (which fix shapes and loop bounds) remain baked into programs
+and are hashed by value; meta *arrays* that are not lifted are hashed by content.
+Lifted meta is hashed by dtype/shape only and extracted per blob by
+``plan.meta_operands``.
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
+import math
 from typing import Any, Iterator, TYPE_CHECKING
 
 import numpy as np
 
-from repro.core.patterns import Stage
+from repro.core import registry
+from repro.core.patterns import (CHUNK_ELEMENT, CHUNK_GROUP, CHUNK_NONE,
+                                 FullyParallel, Stage)
 
 if TYPE_CHECKING:  # avoid a hard import cycle with repro.core.plan
     from repro.core.plan import Encoded
@@ -46,6 +55,16 @@ class BufferDef:
         return n * np.dtype(self.dtype).itemsize
 
 
+@dataclasses.dataclass(frozen=True)
+class MetaSpec:
+    """One lifted meta operand: program identity is (name, shape, dtype) -- never
+    the value.  The value rides along at call time as a tiny device buffer."""
+
+    name: str                 # hierarchical operand name, e.g. "root.@bit_width"
+    shape: tuple[int, ...]
+    dtype: str
+
+
 @dataclasses.dataclass
 class DecodeGraph:
     """A lowered (possibly fused) decode program: stages over named buffers."""
@@ -56,6 +75,7 @@ class DecodeGraph:
     n_out: int
     out_dtype: str
     signature: str                   # structural digest (see module docstring)
+    meta_specs: tuple[MetaSpec, ...] = ()   # lifted runtime operands
     nesting: str = ""                # human-readable codec nesting, e.g. "rle[bp]"
     fused: bool = False
 
@@ -74,11 +94,27 @@ class DecodeGraph:
     def buffer_names(self) -> list[str]:
         return [b.name for b in self.buffers]
 
+    @property
+    def chunkability(self) -> str:
+        """Finest output boundary every stage supports: CHUNK_ELEMENT if all stages
+        split anywhere, CHUNK_GROUP if the coarsest constraint is group boundaries,
+        CHUNK_NONE if any stage needs the whole buffer."""
+        levels = {st.chunkability for st in self.stages}
+        if CHUNK_NONE in levels or not levels:
+            return CHUNK_NONE
+        return CHUNK_GROUP if CHUNK_GROUP in levels else CHUNK_ELEMENT
+
 
 # ------------------------------------------------------------------- signature
 
-def _meta_tokens(meta: dict[str, Any]) -> Iterator[str]:
+def _meta_tokens(meta: dict[str, Any], lifted: dict[str, Any]) -> Iterator[str]:
     for k in sorted(meta):
+        if k in lifted:
+            # lifted meta is a runtime operand: dtype/shape are identity, the value
+            # is not -- this is what lets N blobs differing only in a scalar share
+            # one compiled program
+            yield f"{k}~operand:{np.dtype(lifted[k]).str}:(1,)"
+            continue
         v = meta[k]
         if isinstance(v, np.ndarray):
             # arrays in meta become closure constants -> content is program identity
@@ -98,7 +134,8 @@ def _meta_tokens(meta: dict[str, Any]) -> Iterator[str]:
 
 def _encoded_tokens(enc: "Encoded") -> Iterator[str]:
     yield f"codec={enc.codec};n={enc.n};dtype={np.dtype(enc.dtype).str}"
-    yield from _meta_tokens(enc.meta)
+    lifted = getattr(registry.get(enc.codec), "lifted_meta", {})
+    yield from _meta_tokens(enc.meta, lifted)
     for name in sorted(enc.buffers):
         b = enc.buffers[name]
         yield f"buf:{name}:{tuple(b.shape)}:{np.dtype(b.dtype).str}"
@@ -109,10 +146,12 @@ def _encoded_tokens(enc: "Encoded") -> Iterator[str]:
 
 
 def structural_signature(enc: "Encoded") -> str:
-    """Digest of codec tree + static metadata + leaf shapes/dtypes.
+    """Digest of codec tree + structural metadata + leaf shapes/dtypes + lifted
+    operand specs.
 
     Equal signatures <=> the lowered stage lists are interchangeable programs, so a
-    single jitted executable can decode every blob with the signature.
+    single jitted executable can decode every blob with the signature (feeding each
+    blob's own meta operands at call time).
     """
     h = hashlib.sha1()
     for tok in _encoded_tokens(enc):
@@ -137,8 +176,79 @@ def graph_from_encoded(enc: "Encoded", stages: list[Stage]) -> DecodeGraph:
     buffers = tuple(BufferDef(name=k, shape=tuple(v.shape),
                               dtype=np.dtype(v.dtype).str)
                     for k, v in flat.items())
+    ops = plan_mod.meta_operands(enc)
+    meta_specs = tuple(MetaSpec(name=k, shape=tuple(v.shape),
+                                dtype=np.dtype(v.dtype).str)
+                       for k, v in ops.items())
     final = stages[-1]
     return DecodeGraph(
         stages=list(stages), buffers=buffers, out=final.out,
         n_out=int(final.n_out), out_dtype=np.dtype(final.out_dtype).str,
-        signature=structural_signature(enc), nesting=describe_encoded(enc))
+        signature=structural_signature(enc), meta_specs=meta_specs,
+        nesting=describe_encoded(enc))
+
+
+# ------------------------------------------------------- element-chunk analysis
+
+@dataclasses.dataclass(frozen=True)
+class ChunkLayout:
+    """Static slicing recipe for element-chunkable graphs.
+
+    ``align`` is the output-element granularity every chunk boundary must be a
+    multiple of (lcm of the tile denominators, so every input slice is integral and
+    bitpack word boundaries line up).  ``tiled`` maps each tile leaf buffer to its
+    BufSpec; ``whole`` lists buffers every chunk shares (full-resident metadata and
+    lifted meta operands)."""
+
+    align: int
+    tiled: dict[str, Any]      # leaf name -> BufSpec  (ratio may be operand-driven)
+    whole: tuple[str, ...]
+
+
+def element_chunk_layout(graph: DecodeGraph) -> ChunkLayout | None:
+    """Derive the coordinated slicing recipe for per-chunk decode, or None.
+
+    A graph takes the per-chunk decode path iff every stage is Fully-Parallel (the
+    CHUNK_ELEMENT declaration), every stage produces the full output length (so a
+    chunk of the final output maps to the same element range at every stage), every
+    tile input is either a leaf buffer sliced proportionally or an intermediate
+    consumed positionally, and all leaves are 1-D.  Group-boundary chunking
+    (CHUNK_GROUP) is declared by the IR but not yet exploited by the executor --
+    those graphs fall back to one whole-column launch.
+    """
+    if graph.chunkability != CHUNK_ELEMENT:
+        return None
+    produced: set[str] = set()
+    tiled: dict[str, Any] = {}
+    whole: list[str] = []
+    buf_shapes = {b.name: b.shape for b in graph.buffers}
+    align = 1
+    for st in graph.stages:
+        if not isinstance(st, FullyParallel) or int(st.n_out) != int(graph.n_out):
+            return None
+        for name, spec in zip(st.inputs, st.specs):
+            if name in produced:
+                # intermediate: must be consumed positionally (1:1) to stay aligned
+                if spec.kind == "tile" and (spec.num, spec.den) != (1, 1):
+                    return None
+                continue
+            if spec.kind == "full":
+                if name not in whole:
+                    whole.append(name)
+                continue
+            if name in tiled:
+                if tiled[name] != spec:   # two inconsistent ratios on one leaf
+                    return None
+                continue
+            if len(buf_shapes.get(name, (0, 0))) != 1:
+                return None               # only 1-D leaves slice along axis 0
+            tiled[name] = spec
+            align = math.lcm(align, int(spec.den))
+        produced.add(st.out)
+    if not tiled:
+        return None
+    # meta operands always ride whole (they are (1,) scalars)
+    for ms in graph.meta_specs:
+        if ms.name not in whole and ms.name not in tiled:
+            whole.append(ms.name)
+    return ChunkLayout(align=align, tiled=dict(tiled), whole=tuple(whole))

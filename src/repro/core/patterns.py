@@ -17,6 +17,13 @@ Each stage can be executed by three backends (``repro.core.compiler``): pure-jnp
 The per-element functions (``fn``, ``map_fn``) are jnp-traceable closures over *vectors*
 of elements, so the very same closure is inlined into Pallas kernel bodies by the fusion
 pass -- this is the TPU analogue of the paper's kernel fusion (§3.2, Fig. 7(c)).
+
+Data-dependent scalar metadata (bitpack ``bit_width``/``base``, delta ``base``) is NOT
+closed over: it arrives as extra (1,)-shaped *operand* inputs listed in ``inputs`` with
+``BufSpec("full")``, so one traced program serves every blob that shares the structure
+(see ``repro.core.ir.MetaSpec``).  Each stage also declares its **chunkability** --
+which output boundaries it can be split at -- which the streaming executor uses to
+decide between per-chunk decode launches and one whole-column launch.
 """
 from __future__ import annotations
 
@@ -27,20 +34,38 @@ import jax.numpy as jnp
 import numpy as np
 
 
+# --- chunkability levels (what output boundaries a stage can be split at) ---
+# FullyParallel stages evaluate out[i] independently, so any element boundary works;
+# GroupParallel can only split where whole groups do (data-dependent boundaries);
+# NonParallel (chunked serial decode) and Aux (whole-array ops) only decode whole
+# buffers.  The streaming executor uses these declarations to pick the per-chunk
+# decode path or fall back to one whole-column launch.
+CHUNK_ELEMENT = "element"
+CHUNK_GROUP = "group"
+CHUNK_NONE = "none"
+
+
 @dataclasses.dataclass(frozen=True)
 class BufSpec:
     """How an input buffer is tiled relative to the output tile.
 
     kind="tile": the block covering output range [o0, o1) is input range
-                 [o0*num//den, o1*num//den) (+pad guard words); bitpack uses num=bw,
-                 den=32 on uint32 words.  kind="full": whole buffer resident in VMEM
+                 [o0*num//den, o1*num//den) (+pad guard words); bitpack uses den=32
+                 on uint32 words.  kind="full": whole buffer resident in VMEM
                  (small metadata: dictionaries, tables).
+
+    ``num_op`` names a runtime meta operand (a (1,) buffer in the stage's inputs)
+    that supplies ``num`` at execution time -- e.g. bitpack's data-dependent
+    ``bit_width``.  A dynamic ratio cannot drive static kernel windowing, so the
+    Pallas backends keep such buffers whole-resident; host-side chunk planning
+    resolves the operand's value per blob and slices exactly.
     """
 
     kind: str = "tile"  # "tile" | "full"
     num: int = 1
     den: int = 1
     pad: int = 0        # extra trailing elements fetched (cross-word guard)
+    num_op: str = ""    # env name of the runtime operand supplying num ("" = static)
 
 
 @dataclasses.dataclass
@@ -60,6 +85,7 @@ class Stage:
     out: str
     n_out: int
     out_dtype: Any
+    chunkability = CHUNK_NONE   # overridden per pattern (not a dataclass field)
 
 
 def primary(ctx: Ctx, block: jnp.ndarray) -> jnp.ndarray:
@@ -89,6 +115,7 @@ class FullyParallel(Stage):
     out_dtype: Any = jnp.int32
     elementwise: bool = True   # True iff fn reads inputs[0] only at position ctx.out_idx
     name: str = "fp"
+    chunkability = CHUNK_ELEMENT   # out[i] independent => split anywhere
 
     def run_jnp(self, bufs: dict[str, jnp.ndarray]) -> jnp.ndarray:
         ctx = Ctx(out_idx=jnp.arange(self.n_out, dtype=jnp.int32),
@@ -123,6 +150,7 @@ class GroupParallel(Stage):
     n_groups: int = 0
     extra_inputs: tuple[str, ...] = ()  # whole-buffer metadata (dictionaries, offsets)
     name: str = "gp"
+    chunkability = CHUNK_GROUP   # splits only where whole groups do
 
     def run_jnp(self, bufs: dict[str, jnp.ndarray]) -> jnp.ndarray:
         presum = bufs[self.presum]
@@ -160,6 +188,7 @@ class NonParallel(Stage):
     n_out: int = 0
     out_dtype: Any = jnp.uint8
     name: str = "np"
+    chunkability = CHUNK_NONE   # whole-buffer only (stripes interleave all chunks)
 
     def run_jnp(self, bufs: dict[str, jnp.ndarray]) -> jnp.ndarray:
         from repro.algos.ans import decode_chunks_jnp  # avoids import cycle
@@ -184,6 +213,7 @@ class Aux(Stage):
     n_out: int = 0
     out_dtype: Any = jnp.int32
     name: str = "aux"
+    chunkability = CHUNK_NONE   # whole-array op (cumsum, scatter) by definition
 
     def run_jnp(self, bufs: dict[str, jnp.ndarray]) -> jnp.ndarray:
         return self.fn(*[bufs[k] for k in self.inputs]).astype(self.out_dtype)

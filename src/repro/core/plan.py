@@ -95,6 +95,36 @@ def flat_buffers(enc: Encoded, prefix: str = "root") -> dict[str, np.ndarray]:
     return out
 
 
+def _meta_operand_names(codec, prefix: str) -> dict[str, str]:
+    # "@" keeps operand names disjoint from buffer names (buffers never contain it)
+    return {k: f"{prefix}.@{k}" for k in getattr(codec, "lifted_meta", {})}
+
+
+def meta_operands(enc: Encoded, prefix: str = "root") -> dict[str, np.ndarray]:
+    """Lifted meta values as (1,)-shaped arrays under their operand names.
+
+    These are the runtime operands of the compiled program: hashed by dtype/shape
+    only (``ir.MetaSpec``), fed by value at call time.  Integer values route through
+    int64 so out-of-range bases wrap mod 2^32 exactly like the old baked constants.
+    """
+    codec = registry.get(enc.codec)
+    out: dict[str, np.ndarray] = {}
+    for key, dt in getattr(codec, "lifted_meta", {}).items():
+        v = enc.meta[key]
+        if np.issubdtype(np.dtype(dt), np.integer):
+            out[f"{prefix}.@{key}"] = np.asarray([v], np.int64).astype(dt)
+        else:
+            out[f"{prefix}.@{key}"] = np.asarray([v], dt)
+    for slot, child in enc.children.items():
+        out.update(meta_operands(child, f"{prefix}/{slot}"))
+    return out
+
+
+def host_operands(enc: Encoded) -> dict[str, np.ndarray]:
+    """Everything a compiled Program consumes: leaf buffers + lifted meta operands."""
+    return {**flat_buffers(enc), **meta_operands(enc)}
+
+
 def lower(enc: Encoded, prefix: str = "root", out_name: str | None = None) -> list[Stage]:
     """Lower a compressed blob to a stage list (children first, post-order)."""
     codec = registry.get(enc.codec)
@@ -105,7 +135,8 @@ def lower(enc: Encoded, prefix: str = "root", out_name: str | None = None) -> li
         stages.extend(lower(child, f"{prefix}/{slot}", out_name=child_out))
         buf_names[slot] = child_out
     out = out_name or f"{prefix}.decoded"
-    stages.extend(codec.stages(enc, buf_names, out))
+    stages.extend(codec.stages(enc, buf_names, out,
+                               meta_names=_meta_operand_names(codec, prefix)))
     return stages
 
 

@@ -16,6 +16,12 @@ import numpy as np
 class Codec(Protocol):
     name: str
     pattern: str  # "fp" | "gp" | "np" | "aux" -- dominant pattern family (Table 1)
+    # Data-dependent meta keys LIFTED out of program identity into runtime operands,
+    # mapped to the operand dtype (e.g. {"bit_width": np.int32}).  Lifted keys are
+    # hashed by dtype/shape only in the structural signature; stage closures must
+    # read them from traced (1,)-operand inputs, never bake the values.  Keys not
+    # listed here are structural: hashed by value and free to close over.
+    lifted_meta: dict[str, Any] = {}
 
     def encode(self, arr: np.ndarray, **params) -> tuple[dict[str, np.ndarray], dict]:
         """-> (buffers, meta).  Buffers may be re-compressed by child plans."""
@@ -26,8 +32,12 @@ class Codec(Protocol):
         """Pure-numpy decode given already-decoded child buffers."""
         ...
 
-    def stages(self, enc, buf_names: dict[str, str], out_name: str) -> list:
-        """Lower decode onto pattern stages (repro.core.patterns)."""
+    def stages(self, enc, buf_names: dict[str, str], out_name: str,
+               meta_names: dict[str, str] | None = None) -> list:
+        """Lower decode onto pattern stages (repro.core.patterns).
+
+        ``meta_names`` maps each lifted meta key to its operand env name; the
+        returned stages list those names among their inputs (BufSpec "full")."""
         ...
 
 

@@ -93,26 +93,33 @@ class ColumnPipeline:
     """Transfer + decompress a set of columns through the streaming executor.
 
     Columns flow Plan -> DecodeGraph -> ProgramCache -> StreamingExecutor: one jit
-    per column *structure*, chunked double-buffered transfer in chunk-level Johnson
-    order, and same-signature columns decoded in one batched launch.  Per-column
-    (transfer_s, decode_s) measurements are cached on the instance -- ``run`` and
-    ``modeled_makespan`` reuse the executor's timings instead of re-transferring and
-    re-decoding every column per call.
+    per column *structure* (data-dependent meta rides as runtime operands), chunked
+    double-buffered transfer in chunk-level Johnson order, and same-signature
+    columns decoded in one batched launch.  ``chunk_decode=True`` additionally
+    launches one decode per transferred chunk for element-chunkable columns, so
+    transfer/decode overlap *within* a column (the measured counterpart of the
+    ``Zc`` chunk-level makespan model).  Per-column (transfer_s, decode_s)
+    measurements are cached on the instance -- ``run`` and ``modeled_makespan``
+    reuse the executor's timings instead of re-transferring and re-decoding every
+    column per call.
     """
 
     def __init__(self, plans: dict[str, Plan], backend: str = "jnp",
                  fuse: bool = True, pipeline: bool = True,
                  chunk_bytes: int | None = 1 << 20, batch_columns: bool = True,
+                 chunk_decode: bool = False,
                  executor: StreamingExecutor | None = None):
         self.plans = plans
         self.executor = executor or StreamingExecutor(
             backend=backend, fuse=fuse, chunk_bytes=chunk_bytes,
-            pipeline=pipeline, batch_columns=batch_columns)
+            pipeline=pipeline, batch_columns=batch_columns,
+            chunk_decode=chunk_decode)
         # mirror the *effective* config (an explicitly passed executor wins)
         self.backend = self.executor.backend
         self.fuse = self.executor.fuse
         self.pipeline = self.executor.pipeline
         self.chunk_bytes = self.executor.chunk_bytes
+        self.chunk_decode = self.executor.chunk_decode
         self._encoded: dict[str, plan_mod.Encoded] = {}
         self._decoders: dict[str, compiler.Program] = {}
 

@@ -1,0 +1,22 @@
+"""Pallas API compatibility shims across jax versions.
+
+The Group-Parallel kernel windows its presum/value inputs with *element-indexed*
+BlockSpecs (the index map returns element offsets, not block indices).  Newer jax
+spells that with per-dimension ``pl.Element`` block dims; jax 0.4.x (this container
+ships 0.4.37) removed/lacks that class and instead takes a per-spec
+``indexing_mode=pl.Unblocked()``.  ``element_block_spec`` papers over the drift so
+kernel code stays version-agnostic.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.experimental.pallas as pl
+
+
+def element_block_spec(n_elems: int, index_map: Callable) -> pl.BlockSpec:
+    """1-D BlockSpec of ``n_elems`` elements whose ``index_map`` returns ELEMENT
+    offsets (element-indexed window), on any supported jax version."""
+    if hasattr(pl, "Element"):          # jax >= 0.5 per-dim block classes
+        return pl.BlockSpec((pl.Element(n_elems),), index_map)
+    return pl.BlockSpec((n_elems,), index_map, indexing_mode=pl.Unblocked())

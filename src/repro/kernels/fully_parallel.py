@@ -43,7 +43,10 @@ def fully_parallel_call(stage: FullyParallel, bufs: dict[str, jnp.ndarray],
     in_specs = []
     tile_sizes: list[int | None] = []
     for spec, arr in zip(stage.specs, arrays):
-        if spec.kind == "full":
+        if spec.kind == "full" or spec.num_op:
+            # whole-resident: small metadata, or a tile ratio supplied by a runtime
+            # meta operand (bitpack bit_width) -- no static window size exists, so
+            # the closure indexes the buffer globally (start=None -> 0)
             in_specs.append(pl.BlockSpec(arr.shape,
                                          lambda i, _nd=arr.ndim: (0,) * _nd))
             tile_sizes.append(None)

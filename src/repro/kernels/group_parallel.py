@@ -10,8 +10,12 @@ Data-dependent blocking: a tile starting at output offset o touches groups start
 ``fg = searchsorted(presum, o, 'right') - 1``.  ``fg`` per tile is precomputed with one
 cheap scan (the paper's one-time data scan) and fed through *scalar prefetch*, so the
 BlockSpec index maps DMA exactly the presum/value window each tile needs
-(``pl.Element`` dims).  A tile of T outputs intersects at most T+1 groups (counts are
->= 1), bounding the window statically.
+(element-indexed windows via ``repro.kernels.compat``).  A tile of T outputs
+intersects at most T+1 groups (counts are >= 1), bounding the window statically.
+
+Value inputs whose tile ratio is a runtime meta operand (bitpack's ``bit_width``
+after fusion rule 2) cannot drive a static DMA window, so they stay whole-resident
+in VMEM instead of windowed.
 
 Absorbed Fully-Parallel producers (fusion rule 2) run on the gathered group values
 inside this same kernel -- e.g. bit-packed RLE values never materialize, the paper's
@@ -28,6 +32,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.geometry import Geometry
 from repro.core.patterns import Ctx, GroupParallel
+from repro.kernels.compat import element_block_spec
 from repro.kernels.fully_parallel import _out_index_grid
 
 
@@ -69,7 +74,9 @@ def group_parallel_call(stage: GroupParallel, bufs: dict[str, jnp.ndarray],
     value_units: list[tuple[int, int]] = []  # (num, den) per value input
     for spec, name in zip(stage.value_specs, stage.value_inputs):
         arr = bufs[name]
-        if spec.kind == "full":
+        if spec.kind == "full" or spec.num_op:
+            # whole-resident: small metadata, or a tile whose ratio is a runtime
+            # operand (no static window size exists for it)
             value_specs.append(pl.BlockSpec(arr.shape,
                                             lambda i, s, _nd=arr.ndim: (0,) * _nd))
             value_units.append((0, 1))  # start derived as None
@@ -79,9 +86,8 @@ def group_parallel_call(stage: GroupParallel, bufs: dict[str, jnp.ndarray],
         blen = (gcap * num) // den + (2 if den > 1 else 1)
         pad = jnp.zeros((blen + 2,), arr.dtype)
         value_arrays.append(jnp.concatenate([arr.reshape(-1), pad]))
-        value_specs.append(pl.BlockSpec(
-            (pl.Element(blen),),
-            lambda i, s, _n=num, _d=den: ((s[i] * _n) // _d,)))
+        value_specs.append(element_block_spec(
+            blen, lambda i, s, _n=num, _d=den: ((s[i] * _n) // _d,)))
         value_units.append((num, den))
     extra_arrays = [bufs[k] for k in stage.extra_inputs]
     extra_specs = [pl.BlockSpec(a.shape, lambda i, s, _nd=a.ndim: (0,) * _nd)
@@ -110,7 +116,7 @@ def group_parallel_call(stage: GroupParallel, bufs: dict[str, jnp.ndarray],
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(n_tiles,),
-        in_specs=[pl.BlockSpec((pl.Element(gcap + 2),), lambda i, s: (s[i],))]
+        in_specs=[element_block_spec(gcap + 2, lambda i, s: (s[i],))]
         + value_specs + extra_specs,
         out_specs=pl.BlockSpec((rows, cols), lambda i, s: (i, 0)),
     )

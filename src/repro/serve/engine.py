@@ -7,7 +7,10 @@ when a sequence emits EOS or hits max length.  The decode step is one jitted pro
 Prompts may arrive as ZipFlow-compressed blobs (``submit_compressed``): they are
 decoded through the shared ``StreamingExecutor``/``ProgramCache``, so every request
 with the same compression structure reuses one jitted decode program -- the serving
-analogue of the column pipeline's one-jit-per-structure rule.
+analogue of the column pipeline's one-jit-per-structure rule.  Data-dependent meta
+(bitpack base / bit width) is a runtime operand, not program identity, so two
+prompts of equal length with different token ranges hit the same cached program
+instead of compiling twice.
 """
 from __future__ import annotations
 
@@ -49,12 +52,18 @@ class ServeEngine:
         self._queue: list[Request] = []
         # decompression engine for compressed prompt ingestion: whole-blob transfer
         # (prompts are small) with a bounded private ProgramCache -- every distinct
-        # prompt length is a distinct structural signature, so an unbounded cache
-        # would grow one jitted program per length for the life of the engine
+        # prompt LENGTH is still a distinct structural signature (shapes jit), so an
+        # unbounded cache would grow one program per length for the life of the
+        # engine; within a length, operand-lifted meta makes all prompts share one
         from repro.core.compiler import ProgramCache
 
         self.executor = executor or StreamingExecutor(
             chunk_bytes=None, cache=ProgramCache(max_programs=64))
+
+    @property
+    def decode_cache_stats(self) -> dict[str, int]:
+        """Prompt-decode ProgramCache counters (hits show cross-request reuse)."""
+        return self.executor.cache.stats
 
     def submit(self, req: Request):
         self._queue.append(req)

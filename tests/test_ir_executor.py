@@ -33,14 +33,18 @@ def test_structural_signature_equality():
     assert gd.signature != ga.signature
 
 
-def test_signature_captures_meta_constants():
-    # bit width / base are baked into the program as constants: arrays of the same
-    # shape but different value range must get different signatures
+def test_signature_lifts_data_dependent_meta():
+    # bit width / base are runtime OPERANDS, not program identity: blobs of the
+    # same shape with different value ranges share a signature (and a program)
     a = np.arange(0, 4096, dtype=np.int32)
-    b = a + 100_000          # same shape+dtype, different base and bit width
+    b = a + 100_000          # same shape+dtype, different base (same bit width)
     ga = P.lower_graph(P.encode(P.make_plan("bitpack"), a))
     gb = P.lower_graph(P.encode(P.make_plan("bitpack"), b))
-    assert ga.signature != gb.signature
+    assert ga.signature == gb.signature
+    assert {m.name for m in ga.meta_specs} == {"root.@bit_width", "root.@base"}
+    # structural meta still separates: a different length is a different program
+    gc = P.lower_graph(P.encode(P.make_plan("bitpack"), a[:-33]))
+    assert gc.signature != ga.signature
 
 
 def test_fuse_graph_rewrites_and_retags():
@@ -75,7 +79,7 @@ def test_n_identical_columns_compile_once():
     progs = {n: compile_blob(P.encode(_dict_bp(), arr), cache=cache)
              for n, arr in cols.items()}
     assert len(cache) == 1, "5 structurally identical columns -> 1 cached program"
-    assert cache.stats == {"programs": 1, "hits": 4, "misses": 1}
+    assert cache.stats == {"programs": 1, "hits": 4, "misses": 1, "evictions": 0}
     assert len({id(p) for p in progs.values()}) == 1
 
 

@@ -1,0 +1,159 @@
+"""Operand-lifted metadata + per-chunk streamed decode.
+
+Pins the tentpole invariants: (1) data-dependent meta (bitpack bit_width/base,
+delta base) is a runtime operand, so blobs differing only in those values share ONE
+compiled program; (2) the per-chunk decode path is bitwise-identical to one-shot
+decode for every element-chunkable TPC-H Q1 nesting; (3) non-chunkable nestings
+(Group-Parallel, ANS, Aux-bearing graphs) fall back cleanly to whole-column decode.
+"""
+import numpy as np
+import pytest
+
+from repro.core import plan as P
+from repro.core.compiler import ProgramCache, compile_blob
+from repro.core.executor import StreamingExecutor
+from repro.core.ir import CHUNK_GROUP, CHUNK_NONE  # re-exported pattern levels
+from repro.data.columns import TABLE2_PLANS
+from repro.data.tpch import QUERY_COLUMNS, generate
+
+mp = P.make_plan
+
+
+# --------------------------------------------------------- operand-lifted reuse
+
+def test_bitpack_blobs_differing_in_meta_compile_once(rng):
+    """N bitpack blobs with different bit_width AND base -> exactly one program.
+
+    n=15 makes ceil(n*bw/32) collide for bw 16..17, so the packed shapes (the
+    structural part) are equal while the lifted scalars differ."""
+    cache = ProgramCache()
+    blobs = []
+    for bw, base in [(16, 0), (17, 5), (16, -123), (17, 100_000)]:
+        arr = (rng.integers(0, 2 ** bw - 1, 15) + base).astype(np.int32)
+        blobs.append((arr, P.encode(P.Plan("bitpack",
+                                           params={"bit_width": bw}), arr)))
+    progs = [compile_blob(enc, cache=cache) for _, enc in blobs]
+    assert cache.stats["misses"] == 1, "one structure -> one XLA compile"
+    assert len({id(p) for p in progs}) == 1
+    from repro.core.compiler import device_buffers
+    for (arr, enc), prog in zip(blobs, progs):
+        np.testing.assert_array_equal(np.asarray(prog(device_buffers(enc))), arr)
+
+
+def test_delta_base_is_an_operand(rng):
+    """delta|bitpack columns with different start values share one program."""
+    cache = ProgramCache()
+    plan = P.Plan("delta", children={"deltas": mp("bitpack")})
+    step = rng.integers(0, 3, 4096).astype(np.int64)
+    outs = []
+    for base in (0, 7_000_000):
+        arr = (base + np.cumsum(step)).astype(np.int32)
+        enc = P.encode(plan, arr)
+        prog = compile_blob(enc, cache=cache)
+        from repro.core.compiler import device_buffers
+        outs.append((np.asarray(prog(device_buffers(enc))), arr))
+    assert cache.stats["misses"] == 1
+    for got, want in outs:
+        np.testing.assert_array_equal(got, want)
+
+
+def test_batched_decode_vmaps_over_meta_operands(rng):
+    """Same-signature columns with DIFFERENT meta operands stack into one batched
+    launch -- the operands vmap along with the buffers."""
+    cols = {f"c{i}": (rng.integers(0, 1000, 20_000) + i * 37).astype(np.int32)
+            for i in range(3)}
+    encs = {n: P.encode(P.Plan("bitpack", params={"bit_width": 10}), arr)
+            for n, arr in cols.items()}
+    cache = ProgramCache()
+    ex = StreamingExecutor(chunk_bytes=8192, batch_columns=True, cache=cache)
+    results = ex.run(encs)
+    assert cache.stats["misses"] == 1
+    for n, arr in cols.items():
+        np.testing.assert_array_equal(np.asarray(results[n].array), arr)
+        assert len(results[n].batched_with) == 2
+
+
+# ------------------------------------------------------- per-chunk decode path
+
+@pytest.mark.parametrize("chunk_bytes,min_chunked", [(2048, 4), (16384, 1)])
+def test_per_chunk_decode_bitwise_equals_oracle(chunk_bytes, min_chunked):
+    """Every TPC-H Q1 nesting through chunk_decode=True == plan.decode_np,
+    with chunkable graphs actually decoding in multiple launches."""
+    cols = generate(scale=0.002, seed=7)
+    names = QUERY_COLUMNS[1]
+    encs = {n: P.encode(TABLE2_PLANS[n], cols[n]) for n in names}
+    ex = StreamingExecutor(chunk_bytes=chunk_bytes, chunk_decode=True,
+                           cache=ProgramCache())
+    results = ex.run(encs)
+    chunked_cols = 0
+    for n in names:
+        got = np.asarray(results[n].array)
+        np.testing.assert_array_equal(got, P.decode_np(encs[n]), err_msg=n)
+        np.testing.assert_array_equal(got, cols[n], err_msg=n)
+        if results[n].chunk_decoded:
+            chunked_cols += 1
+            assert results[n].decode_launches == results[n].n_chunks > 1
+    assert chunked_cols >= min_chunked, \
+        "Q1's bitpack-family nestings must chunk-decode"
+
+
+def test_per_chunk_decode_matches_whole_column(rng):
+    """Chunked vs whole-column decode of the same blobs: bitwise identical."""
+    arr = rng.integers(-500, 10_000, 100_000).astype(np.int32)
+    enc = P.encode(P.Plan("dictionary", children={"index": mp("bitpack")}), arr)
+    whole = StreamingExecutor(chunk_bytes=None, cache=ProgramCache())
+    chunked = StreamingExecutor(chunk_bytes=4096, chunk_decode=True,
+                                cache=ProgramCache())
+    a = np.asarray(whole.run({"c": enc})["c"].array)
+    b = np.asarray(chunked.run({"c": enc})["c"].array)
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(b, arr)
+
+
+def test_non_chunkable_nestings_fall_back(rng):
+    """GroupParallel/NonParallel/Aux graphs declare their chunkability and the
+    executor falls back to one whole-column launch -- still bitwise-correct."""
+    from repro.core.patterns import GroupParallel
+
+    # rle's expansion stage declares group-boundary chunkability, but its presum
+    # Aux is whole-array, so the GRAPH is non-chunkable (declared, not exploited)
+    cases = {
+        "rle": (P.Plan("rle", children={"counts": mp("bitpack"),
+                                        "values": mp("bitpack")}),
+                np.repeat(rng.integers(0, 50, 300), rng.integers(1, 60, 300))
+                .astype(np.int32)),
+        "ans": (P.Plan("ans", params={"chunk_size": 512}),
+                rng.integers(0, 40, 30_000).astype(np.int32)),
+        "delta": (P.Plan("delta", children={"deltas": mp("bitpack")}),
+                  np.cumsum(rng.integers(0, 4, 30_000)).astype(np.int32)),
+    }
+    ex = StreamingExecutor(chunk_bytes=1024, chunk_decode=True,
+                           cache=ProgramCache())
+    for name, (plan, arr) in cases.items():
+        enc = P.encode(plan, arr)
+        ex.compile(name, enc)
+        assert ex.graph(name).chunkability == CHUNK_NONE, name
+        assert ex.chunk_schedule(name) is None, name
+        res = ex.run({name: enc})[name]
+        assert not res.chunk_decoded and res.decode_launches == 1
+        np.testing.assert_array_equal(np.asarray(res.array), arr, err_msg=name)
+    gp = [s for s in ex.graph("rle").stages if isinstance(s, GroupParallel)]
+    assert gp and gp[0].chunkability == CHUNK_GROUP
+
+
+def test_chunk_programs_shared_across_columns(rng):
+    """Same-structure columns reuse the SAME per-chunk programs (body + tail)."""
+    cache = ProgramCache()
+    ex = StreamingExecutor(chunk_bytes=4096, chunk_decode=True, cache=cache)
+    encs = {f"c{i}": P.encode(mp("bitpack"),
+                              rng.integers(0, 4000, 50_000).astype(np.int32))
+            for i in range(3)}
+    results = ex.run(encs)
+    for n, enc in encs.items():
+        np.testing.assert_array_equal(np.asarray(results[n].array),
+                                      P.decode_np(enc))
+        assert results[n].chunk_decoded
+    # one whole-column program (from compile) + body/tail chunk programs, shared:
+    # 3 columns x K chunks hit the same <= 3 cache entries
+    assert cache.stats["misses"] <= 3
+    assert cache.stats["hits"] >= 2 * (results["c0"].decode_launches - 1)
