@@ -10,15 +10,23 @@ buffers; transfer overlap is fig19's subject.
 The ``operand_reuse`` row re-encodes every integer column as a value-shifted twin:
 identical structure, different data-dependent meta (bitpack base, delta base).
 With meta lifted to runtime operands those twins are pure cache hits -- zero new
-compiles -- where the meta-as-constant scheme recompiled each one."""
+compiles -- where the meta-as-constant scheme recompiled each one.
+
+The ``costmodel`` row streams each column's measured decode into the planner's
+``CostModel`` and reports the per-column prediction error before vs after the
+EWMA calibration warms up -- the feedback loop fig19's planner schedules by."""
 from __future__ import annotations
 
+import time
+
+import jax
 import numpy as np
 
 from benchmarks.common import gbps, row, time_fn
 from repro.core import plan as P
 from repro.core.compiler import (ProgramCache, compile_blob, compile_decoder,
                                  device_buffers)
+from repro.core.costmodel import CostModel, profile_from
 from repro.data.columns import TABLE2_PLANS
 from repro.data.tpch import generate
 
@@ -31,11 +39,20 @@ def main(quick: bool = False) -> list[str]:
     rows = []
     names = QUICK_COLS if quick else list(TABLE2_PLANS)
     cache = ProgramCache()
+    cm = CostModel()
+    pred_errs = []
     for name in names:
         enc = P.encode(TABLE2_PLANS[name], cols[name])
         prog = compile_blob(enc, backend="jnp", fuse=True, cache=cache)
+        cm.register(profile_from(name, enc, prog.graph))
+        pred_d = cm.predict(name)[1]     # calibrated decode prediction, pre-run
+        t0 = time.perf_counter()
         bufs = device_buffers(enc)
+        jax.block_until_ready(list(bufs.values()))
+        t_transfer = time.perf_counter() - t0
         t_zip = time_fn(prog, bufs, iters=3)
+        pred_errs.append(abs(pred_d / t_zip - 1.0))
+        cm.observe(name, t_transfer, t_zip)   # EWMA feedback for later columns
         t_base = time_fn(compile_decoder(enc, backend="baseline"), bufs, iters=3)
         rows.append(row(
             f"fig17/{name}", t_zip,
@@ -43,6 +60,12 @@ def main(quick: bool = False) -> list[str]:
             f"baseline_gbps={gbps(enc.plain_nbytes, t_base):.2f};"
             f"speedup={t_base / t_zip:.2f};ratio={enc.ratio:.2f};"
             f"sig={prog.signature[:8]}"))
+    half = max(1, len(pred_errs) // 2)
+    rows.append(row(
+        "fig17/costmodel", 0.0,
+        f"decode_scale={cm.decode_scale:.1f};"
+        f"mean_err_first_half={float(np.mean(pred_errs[:half])):.2f};"
+        f"mean_err_second_half={float(np.mean(pred_errs[half:])):.2f}"))
     stats = cache.stats
     rows.append(row(
         "fig17/program_cache", 0.0,

@@ -9,15 +9,19 @@ Configurations (paper Fig. 20 labels):
   N      -- cascaded-only compression, no fusion, fixed geometry (nvCOMP role);
   C      -- ZipFlow compression, no transfer/decode pipelining;
   Z      -- full ZipFlow incl. Johnson-ordered pipelining;
-  Zc     -- Z modeled with chunk-level jobs: the bound a chunk-granular decoder
-            reaches when transfer/decode overlap *within* a column;
-  Zc_run -- MEASURED wall-clock of the per-chunk-decode executor
-            (``chunk_decode=True``): every transferred chunk of an
-            element-chunkable column decodes in its own launch while later chunks
-            are in flight, non-chunkable columns fall back to one launch.  The
-            chunked output is asserted bitwise-equal to ``plan.decode_np`` before
-            it is timed, alongside Z_run (measured whole-column wall-clock) for an
-            apples-to-apples pair.
+  Zc     -- Z modeled with chunk-level jobs: the chunk-granular decoder's
+            makespan when transfer/decode overlap *within* a column;
+  Zc_run -- MEASURED wall-clock of the PLANNED per-chunk executor: the holistic
+            planner (``policy="adaptive"``, ``chunk_bytes="auto"``) chooses each
+            column's chunk size, decode mode and the issue order by minimizing
+            modeled makespan over the cost model's calibrated timings; every
+            transferred chunk of a chunk-decoded column runs in its own launch
+            while later chunks are in flight.  The chunked output is asserted
+            bitwise-equal to ``plan.decode_np`` before it is timed, alongside
+            Z_run (measured whole-column wall-clock) for an apples-to-apples
+            pair.  The row also reports the planner's PLANNED makespan next to
+            the measured one, and the planner's simulated baselines (FIFO /
+            whole-column Johnson) so planned <= min(baselines) is visible.
 
 The pipeline runs on the streaming executor; C/Z/Zc makespans reuse the one set of
 timings measured by ``run`` (no per-config re-measurement); Zc_run/Z_run are warm
@@ -101,20 +105,26 @@ def main(quick: bool = False) -> list[str]:
         t0 = time.perf_counter()
         pipe.run()      # warm whole-column wall-clock (Z_run)
         t_z_run = time.perf_counter() - t0
-        # --- Zc measured: per-chunk decode launches, same chunk size ---
+        # --- Zc measured: planner-chosen per-column chunks + decode modes ---
         pipe_zc = ColumnPipeline({n: TABLE2_PLANS[n] for n in names},
-                                 chunk_bytes=chunk_bytes, chunk_decode=True)
+                                 chunk_bytes="auto", chunk_decode=True,
+                                 policy="adaptive")
         pipe_zc.compress(qcols)
-        res_zc = pipe_zc.run()          # cold run traces the chunk programs
+        res_zc = pipe_zc.run()          # cold run traces + calibrates cost model
         for n in names:                 # bitwise guard: chunked == oracle
             np.testing.assert_array_equal(
                 np.asarray(res_zc[n].array), P.decode_np(pipe_zc._encoded[n]),
                 err_msg=f"q{q}/{n} chunk-decode")
+        ep = pipe_zc.plan()             # re-plan from measured timings
+        pipe_zc.run(plan=ep)            # trace any newly-chosen chunk programs
         t0 = time.perf_counter()
-        res_zc = pipe_zc.run()          # warm per-chunk wall-clock (Zc_run)
+        res_zc = pipe_zc.run(plan=ep)   # warm planned wall-clock (Zc_run)
         t_zc_run = time.perf_counter() - t0
+        t_planned = ep.modeled_makespan_s
         chunked_cols = sum(r.chunk_decoded for r in res_zc.values())
         launches = sum(r.decode_launches for r in res_zc.values())
+        auto_sizes = sorted({(d.chunk_bytes or 0) >> 10
+                             for d in ep.decisions.values()})
         # --- query execution phase (engine, identical across configs) ---
         t_engine = 0.0
         if q in ENGINES:
@@ -135,6 +145,10 @@ def main(quick: bool = False) -> list[str]:
             f"Zc={t_zc + t_engine:.4f}s;"
             f"Z_run={t_z_run + t_engine:.4f}s;"
             f"Zc_run={t_zc_run + t_engine:.4f}s;"
+            f"planned={t_planned:.4f}s;measured={t_zc_run:.4f}s;"
+            f"plan_fifo={ep.baselines['fifo']:.4f}s;"
+            f"plan_johnson={ep.baselines['johnson']:.4f}s;"
+            f"auto_chunk_kib={'/'.join(str(s) for s in auto_sizes)};"
             f"chunk_cols={chunked_cols}/{len(names)};launches={launches};"
             f"engine={t_engine:.4f}s;zipflow_vs_cascaded={speedups[-1]:.2f}x"))
     rows.append(row("fig19/MEAN_speedup_vs_cascaded", 0.0,

@@ -26,8 +26,16 @@ ap.add_argument("--chunk-kib", type=int, default=1024,
 ap.add_argument("--chunk-decode", action="store_true",
                 help="launch one decode per transferred chunk (element-chunkable "
                      "columns; others fall back to whole-column decode)")
+ap.add_argument("--policy", default="chunk-johnson",
+                choices=["fifo", "johnson", "chunk-johnson", "adaptive"],
+                help="scheduling policy for the execution planner; 'adaptive' "
+                     "searches orders and chunk configurations by modeled "
+                     "makespan")
+ap.add_argument("--auto-chunks", action="store_true",
+                help="let the planner size chunks per column (overrides "
+                     "--chunk-kib)")
 args = ap.parse_args()
-chunk_bytes = args.chunk_kib * 1024 or None
+chunk_bytes = "auto" if args.auto_chunks else (args.chunk_kib * 1024 or None)
 
 cols = generate(scale=args.scale, seed=0)
 print(f"generated TPC-H-like tables at scale {args.scale} "
@@ -40,11 +48,11 @@ for q, engine in ((1, q1_engine), (6, q6_engine)):
 
     pipe = ColumnPipeline({n: TABLE2_PLANS[n] for n in names},
                           chunk_bytes=chunk_bytes,
-                          chunk_decode=args.chunk_decode)
+                          chunk_decode=args.chunk_decode, policy=args.policy)
     ratios = pipe.compress(qcols)
     comp_bytes = sum(pipe._encoded[n].compressed_nbytes for n in names)
     t0 = time.perf_counter()
-    results = pipe.run()        # chunked streaming, Johnson order, batched decode
+    results = pipe.run()        # planned streaming: order/chunks/modes from plan
     t_move = time.perf_counter() - t0
     device_cols = {n: r.array for n, r in results.items()}
     t0 = time.perf_counter()
@@ -75,3 +83,10 @@ for q, engine in ((1, q1_engine), (6, q6_engine)):
           f"({mk_nopipe / max(mk_pipe, 1e-9):.2f}x) -> "
           f"chunked {mk_chunk * 1e3:.1f} ms "
           f"({mk_nopipe / max(mk_chunk, 1e-9):.2f}x)")
+    # re-plan from the measured timings: planned vs measured makespan
+    ep = pipe.plan()
+    print(f"   planner ({ep.policy}): planned {ep.modeled_makespan_s * 1e3:.1f} "
+          f"ms vs measured move+decode {t_move * 1e3:.1f} ms; baselines "
+          + " ".join(f"{k}={v * 1e3:.1f}ms" for k, v in sorted(ep.baselines.items())))
+    for line in ep.explain().splitlines():
+        print(f"     {line}")

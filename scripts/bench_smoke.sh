@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Benchmark smoke: run fig19 (end-to-end TPC-H movement+decode) at tiny scale
+# and record the per-query Z_run / Zc_run / planned / measured makespans in
+# BENCH_fig19.json, so every PR leaves a machine-readable perf datapoint
+# (wall-clock is CPU-noisy; the planned-vs-baseline fields are deterministic
+# given the measured timings and are the regression-relevant signal).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} python - <<'EOF'
+import json
+
+from benchmarks import fig19_e2e
+
+rows = fig19_e2e.main(quick=True)
+out = {}
+for line in rows:
+    name, _, derived = line.split(",", 2)
+    key = name.split("/", 1)[1]
+    fields = dict(kv.split("=", 1) for kv in derived.split(";") if "=" in kv)
+    if key.startswith("q"):
+        out[key] = {k: fields[k] for k in
+                    ("Z_run", "Zc_run", "planned", "measured",
+                     "plan_fifo", "plan_johnson", "auto_chunk_kib",
+                     "chunk_cols", "launches") if k in fields}
+with open("BENCH_fig19.json", "w") as f:
+    json.dump(out, f, indent=2, sort_keys=True)
+    f.write("\n")
+print(f"bench-smoke: wrote BENCH_fig19.json ({len(out)} queries)")
+EOF

@@ -1,7 +1,9 @@
-"""ZipFlow core: patterns, plans, decode-graph IR, fusion, geometry, executor."""
+"""ZipFlow core: patterns, plans, decode-graph IR, fusion, geometry, planner,
+executor."""
 from repro.core.compiler import (DEFAULT_CACHE, ChunkProgram, Program, ProgramCache,
                                  compile_blob, compile_decoder, decode_on_device,
                                  device_buffers)
+from repro.core.costmodel import ColumnProfile, CostModel, profile_from
 from repro.core.executor import ColumnExec, StreamingExecutor
 from repro.core.geometry import CHIPS, Geometry, chip, native_config
 from repro.core.ir import (BufferDef, DecodeGraph, MetaSpec, element_chunk_layout,
@@ -9,14 +11,23 @@ from repro.core.ir import (BufferDef, DecodeGraph, MetaSpec, element_chunk_layou
 from repro.core.plan import (Encoded, Plan, decode_np, encode, flat_buffers,
                              host_operands, lower, lower_graph, make_plan,
                              meta_operands)
-from repro.core.scheduler import Job, chunk_jobs, johnson_order, makespan, schedule
+from repro.core.planner import ColumnDecision, ExecutionPlan, plan_execution
+from repro.core.scheduler import (POLICIES, AdaptivePolicy, ChunkInfo,
+                                  ChunkJohnsonPolicy, FifoPolicy, Job,
+                                  JohnsonPolicy, SchedulingPolicy, chunk_jobs,
+                                  get_policy, johnson_order, makespan, schedule,
+                                  simulate_stream)
 
 __all__ = [
-    "CHIPS", "BufferDef", "ChunkProgram", "ColumnExec", "DEFAULT_CACHE",
-    "DecodeGraph", "Encoded", "Geometry", "Job", "MetaSpec", "Plan", "Program",
-    "ProgramCache", "StreamingExecutor", "chip", "chunk_jobs", "compile_blob",
-    "compile_decoder", "decode_np", "decode_on_device", "device_buffers",
-    "element_chunk_layout", "encode", "flat_buffers", "host_operands",
-    "johnson_order", "lower", "lower_graph", "make_plan", "makespan",
-    "meta_operands", "native_config", "schedule", "structural_signature",
+    "CHIPS", "AdaptivePolicy", "BufferDef", "ChunkInfo", "ChunkJohnsonPolicy",
+    "ChunkProgram", "ColumnDecision", "ColumnExec", "ColumnProfile", "CostModel",
+    "DEFAULT_CACHE", "DecodeGraph", "Encoded", "ExecutionPlan", "FifoPolicy",
+    "Geometry", "Job", "JohnsonPolicy", "MetaSpec", "POLICIES", "Plan",
+    "Program", "ProgramCache", "SchedulingPolicy", "StreamingExecutor", "chip",
+    "chunk_jobs", "compile_blob", "compile_decoder", "decode_np",
+    "decode_on_device", "device_buffers", "element_chunk_layout", "encode",
+    "flat_buffers", "get_policy", "host_operands", "johnson_order", "lower",
+    "lower_graph", "make_plan", "makespan", "meta_operands", "native_config",
+    "plan_execution", "profile_from", "schedule", "simulate_stream",
+    "structural_signature",
 ]

@@ -1,0 +1,213 @@
+"""Unified cost model for transfer/decode planning (paper §3.3, holistic thesis).
+
+One ``CostModel`` replaces the estimate logic previously duplicated in
+``executor._estimate`` and ``loader._measure``: it unifies
+
+  * the **chip-model estimate** -- transfer = compressed bytes / host-link
+    bandwidth, decode = (compressed + plain) HBM traffic / HBM bandwidth plus a
+    per-kernel launch overhead (the same resource table ``geometry.ChipSpec``
+    the kernel configs use), and
+  * the executor's **measured** ``(transfer_s, decode_s)`` wall-clock timings,
+
+into per-column *and* per-chunk predictions.  Measurements calibrate the chip
+model through an EWMA feedback loop: every ``observe`` updates a transfer and a
+decode scale factor (measured / raw-model ratio), so estimates for columns that
+have never run are in the same units as wall-clock measurements -- the mixing
+problem that previously forced ``measured_jobs`` to throw away partial
+measurements.
+
+``ColumnProfile`` is the planner-facing summary of a column: enough static
+structure (leaf buffer sizes, chunkability, tile geometry) to predict how many
+transfer pieces / decode chunks any candidate ``chunk_bytes`` produces, without
+touching the executor.  ``ColumnProfile.n_decode_chunks`` mirrors
+``StreamingExecutor._build_schedule`` exactly, so planned chunk counts equal
+executed chunk counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from repro.core import scheduler
+from repro.core.geometry import DEFAULT_CHIP, chip as chip_spec
+
+
+def rows_per_chunk(shape0: int, nbytes: int, chunk_bytes: int) -> int:
+    """Rows of an axis-0-split buffer that fit in one transfer chunk -- the ONE
+    home of this formula, shared by ``executor.split_chunks`` (which slices) and
+    ``ColumnProfile.n_transfer_chunks`` (which predicts)."""
+    return max(1, chunk_bytes // max(1, nbytes // max(1, shape0)))
+
+
+def aligned_chunk_elems(chunk_bytes: int, per_elem_bytes: float,
+                        align: int) -> int:
+    """Output elements per decode chunk: ~chunk_bytes of compressed tile bytes,
+    rounded to the boundary alignment -- the ONE home of this formula, shared by
+    ``executor._build_schedule`` (which slices) and
+    ``ColumnProfile.decode_chunking`` (which predicts)."""
+    elems = int(chunk_bytes / max(per_elem_bytes, 1e-9)) // align * align
+    return max(align, elems)
+
+
+@dataclasses.dataclass(frozen=True)
+class ColumnProfile:
+    """Planner-facing static summary of one compressed column."""
+
+    name: str
+    compressed_nbytes: int
+    plain_nbytes: int
+    n_kernels: int
+    signature: str = ""
+    # (shape[0], nbytes) per leaf buffer -- what the transfer actually splits
+    leaves: tuple[tuple[int, int], ...] = ()
+    # element-chunkable decode (FullyParallel-only graph, see ir.ChunkLayout)
+    chunkable: bool = False
+    n_out: int = 0
+    per_elem_bytes: float = 0.0   # compressed tile bytes per output element
+    align: int = 1                # output-element chunk-boundary granularity
+
+    def n_transfer_chunks(self, chunk_bytes: int | None) -> int:
+        """Transfer pieces ``split_chunks`` issues for this column's leaves.
+        Whole-blob transfer (None) is modeled as ONE piece, matching the
+        executor's ``_n_chunks`` accounting."""
+        if chunk_bytes is None:
+            return 1
+        total = 0
+        for shape0, nbytes in self.leaves:
+            if nbytes <= chunk_bytes or shape0 <= 1:
+                total += 1
+                continue
+            total += math.ceil(shape0 / rows_per_chunk(shape0, nbytes,
+                                                       chunk_bytes))
+        return max(1, total)
+
+    def decode_chunking(self, chunk_bytes: int | None) -> tuple[int, float]:
+        """(n_chunks, tail_frac) the per-chunk decode path produces, mirroring
+        ``StreamingExecutor._build_schedule``; (1, 1.0) when the column decodes
+        whole (not chunkable, chunking off, or one chunk covers the column)."""
+        if (not self.chunkable or chunk_bytes is None or self.n_out <= 0
+                or self.per_elem_bytes <= 0):
+            return 1, 1.0
+        chunk_elems = aligned_chunk_elems(chunk_bytes, self.per_elem_bytes,
+                                          self.align)
+        if chunk_elems >= self.n_out:
+            return 1, 1.0
+        k = math.ceil(self.n_out / chunk_elems)
+        tail = self.n_out - (k - 1) * chunk_elems
+        return k, tail / chunk_elems
+
+
+def profile_from(name: str, enc, graph) -> ColumnProfile:
+    """Build a ColumnProfile from an Encoded blob + its DecodeGraph."""
+    from repro.core import plan as plan_mod
+    from repro.core.ir import element_chunk_layout
+
+    flat = plan_mod.flat_buffers(enc)
+    leaves = tuple((int(v.shape[0]) if v.ndim else 1, int(v.nbytes))
+                   for v in flat.values())
+    layout = element_chunk_layout(graph)
+    per_elem, align = 0.0, 1
+    if layout is not None:
+        ops = plan_mod.host_operands(enc)
+        for nm, spec in layout.tiled.items():
+            num = int(ops[spec.num_op][0]) if spec.num_op else int(spec.num)
+            per_elem += num / spec.den * np.dtype(ops[nm].dtype).itemsize
+        align = int(layout.align)
+    return ColumnProfile(
+        name=name, compressed_nbytes=int(enc.compressed_nbytes),
+        plain_nbytes=int(enc.plain_nbytes), n_kernels=int(graph.n_kernels),
+        signature=graph.signature, leaves=leaves,
+        chunkable=layout is not None, n_out=int(graph.n_out),
+        per_elem_bytes=per_elem, align=align)
+
+
+class CostModel:
+    """Per-column / per-chunk (transfer_s, decode_s) predictor with an
+    EWMA-calibrated measured-feedback loop.
+
+    ``measured`` is the authoritative wall-clock store (the executor's
+    ``timings`` dict aliases it); ``observe`` additionally folds each
+    measurement into the transfer/decode calibration scales so chip-model
+    estimates for unmeasured columns land in wall-clock units.
+    """
+
+    def __init__(self, chip: str = DEFAULT_CHIP, alpha: float = 0.4):
+        self.spec = chip_spec(chip)
+        self.alpha = float(alpha)
+        self.transfer_scale = 1.0
+        self.decode_scale = 1.0
+        self.n_observed = 0
+        self.profiles: dict[str, ColumnProfile] = {}
+        self.measured: dict[str, tuple[float, float]] = {}
+
+    # -------------------------------------------------------------- registry
+    def register(self, profile: ColumnProfile) -> None:
+        self.profiles[profile.name] = profile
+
+    def forget(self, name: str) -> None:
+        self.profiles.pop(name, None)
+        self.measured.pop(name, None)
+
+    # ---------------------------------------------------------- predictions
+    def raw_estimate(self, name: str) -> tuple[float, float]:
+        """Uncalibrated chip-model (transfer_s, decode_s)."""
+        p = self.profiles[name]
+        transfer = p.compressed_nbytes / (self.spec.host_link_gbps * 1e9)
+        traffic = p.compressed_nbytes + p.plain_nbytes
+        decode = (traffic / (self.spec.hbm_gbps * 1e9)
+                  + p.n_kernels * self.spec.grid_step_overhead_ns * 1e-9)
+        return transfer, decode
+
+    def predict(self, name: str) -> tuple[float, float]:
+        """Best available (transfer_s, decode_s): measured when we have it,
+        EWMA-calibrated chip model otherwise."""
+        if name in self.measured:
+            return self.measured[name]
+        t, d = self.raw_estimate(name)
+        return t * self.transfer_scale, d * self.decode_scale
+
+    def launch_overhead_s(self, name: str) -> float:
+        """Cost of one *extra* decode launch (per-chunk decode dispatches the
+        column's kernels once per chunk instead of once)."""
+        p = self.profiles[name]
+        return (p.n_kernels * self.spec.grid_step_overhead_ns * 1e-9
+                * self.decode_scale)
+
+    # ------------------------------------------------------------- feedback
+    def observe(self, name: str, transfer_s: float, decode_s: float) -> None:
+        """Feed one measured run back: store it and recalibrate the scales."""
+        self.measured[name] = (float(transfer_s), float(decode_s))
+        if name not in self.profiles:
+            return
+        raw_t, raw_d = self.raw_estimate(name)
+        a = self.alpha if self.n_observed else 1.0   # first sample snaps
+        if raw_t > 0 and transfer_s > 0:
+            self.transfer_scale += a * (transfer_s / raw_t - self.transfer_scale)
+        if raw_d > 0 and decode_s > 0:
+            self.decode_scale += a * (decode_s / raw_d - self.decode_scale)
+        self.n_observed += 1
+
+    # ------------------------------------------------------------- job views
+    def jobs(self, names: Sequence[str]) -> list[scheduler.Job]:
+        """Scheduling jobs in CONSISTENT units.  Once the EWMA loop has been
+        calibrated by at least one observation, each column uses its best
+        prediction (measured if present, calibrated estimate otherwise) -- the
+        same values ``predict`` hands the planner's per-column decisions.
+        Before any calibration, mixing microsecond-scale raw estimates with
+        millisecond-scale injected measurements would make Johnson's
+        transfer-vs-decode comparison arbitrary, so it is all-or-nothing:
+        measured only when every column has a measurement."""
+        names = list(names)
+        if self.n_observed or (names and all(n in self.measured
+                                             for n in names)):
+            est: Mapping[str, tuple[float, float]] = {
+                n: self.predict(n) for n in names}
+        else:
+            est = {}
+            for n in names:
+                t, d = self.raw_estimate(n)
+                est[n] = (t * self.transfer_scale, d * self.decode_scale)
+        return [scheduler.Job(n, est[n][0], est[n][1]) for n in names]

@@ -1,30 +1,36 @@
-"""Streaming decode executor: chunked double-buffered transfer + per-chunk or
+"""Streaming decode executor: plan-driven chunked transfer + per-chunk or
 batched decode.
 
 This is the runtime half of the compile pipeline (``plan.lower_graph`` ->
-``fusion.fuse_graph`` -> ``ProgramCache``).  Given a set of compressed blobs it
+``fusion.fuse_graph`` -> ``ProgramCache``).  ``run`` *consumes* an
+``ExecutionPlan`` (``core/planner.py``): issue order, per-column chunk size,
+decode mode and in-flight window all come from the plan -- the executor contains
+no scheduling heuristics of its own.  When no plan is passed, one is built from
+the constructor defaults through the same planner (so the legacy knobs
+``chunk_bytes`` / ``chunk_decode`` / ``prefetch_chunks`` survive only as inputs
+to auto-planning).  Given a plan over a set of compressed blobs it
 
-  1. splits every leaf buffer into fixed-size chunks (``chunk_bytes``),
-  2. orders the chunk transfers by Johnson's rule at *chunk* granularity
-     (``scheduler.chunk_jobs``) so transfer of later chunks overlaps decode of
-     earlier columns, with a bounded in-flight window (double buffering: the async
-     ``jax.device_put`` of chunk k+1..k+w is in flight while chunk k is consumed),
-  3. decodes each column through its cached Program.  Two decode modes:
+  1. splits every leaf buffer into the plan's per-column chunk sizes,
+  2. issues transfers in plan order as async ``jax.device_put`` with the plan's
+     bounded in-flight window (double buffering: chunks k+1..k+w are in flight
+     while chunk k is consumed),
+  3. decodes each column through its cached Program in the plan's decode mode:
 
-     * **per-chunk** (``chunk_decode=True``, element-chunkable graphs): every
-       transferred chunk is decoded in its own launch while later chunks are still
-       in flight -- transfer/decode overlap *within* a column, the configuration
-       the fig19 ``Zc`` model bounds.  Chunk slices are coordinated through the
+     * **per-chunk** (element-chunkable graphs): every transferred chunk is
+       decoded in its own launch while later chunks are still in flight --
+       transfer/decode overlap *within* a column, the configuration the fig19
+       ``Zc`` model describes.  Chunk slices are coordinated through the
        graph's ``ChunkLayout`` so outputs concatenate to exactly the one-shot
        result; graphs that are not element-chunkable (Group-Parallel, ANS, Aux
        stages) fall back to one whole-column launch.
-     * **whole-column** (default): chunks reassemble on device and the column
-       decodes in one launch, stacking same-signature columns into ONE batched
-       launch (``Program.batched``, vmap over the leading axis -- lifted meta
-       operands stack and vmap along with the buffers), and
+     * **whole-column / batched-by-signature**: chunks reassemble on device and
+       the column decodes in one launch; adjacent plan-marked "batched" columns
+       sharing one Program stack into ONE launch (``Program.batched``, vmap over
+       the leading axis -- lifted meta operands stack and vmap along), and
 
-  4. records per-column (transfer_s, decode_s) timings so clients schedule future
-     runs from real measurements instead of re-measuring every column.
+  4. feeds measured per-column (transfer_s, decode_s) actuals back into the
+     ``CostModel`` so the next plan is built from calibrated predictions
+     instead of re-measuring every column.
 
 Chunked, batched and per-chunk execution are all bitwise-identical to the one-shot
 path: chunks concatenate back to the exact source bytes, vmap runs the same program
@@ -41,21 +47,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import costmodel, planner as planner_mod
 from repro.core import plan as plan_mod, scheduler
 from repro.core.compiler import DEFAULT_CACHE, Program, ProgramCache
-from repro.core.geometry import DEFAULT_CHIP, chip as chip_spec
+from repro.core.costmodel import CostModel, profile_from
+from repro.core.geometry import DEFAULT_CHIP
 from repro.core.ir import DecodeGraph, element_chunk_layout
+from repro.core.planner import ExecutionPlan
 
 
 def split_chunks(arr: np.ndarray, chunk_bytes: int | None) -> list[np.ndarray]:
     """Split a host buffer into <=chunk_bytes pieces along axis 0 (2-D buffers like
     the ANS stream matrix chunk by rows).  Concatenating the pieces restores the
-    buffer exactly, so chunked transfer cannot change decode results."""
+    buffer exactly, so chunked transfer cannot change decode results.  The piece
+    count comes from ``costmodel.rows_per_chunk`` -- the same formula
+    ``ColumnProfile.n_transfer_chunks`` predicts with, so plans match execution."""
     if (chunk_bytes is None or arr.ndim == 0 or arr.nbytes <= chunk_bytes
             or arr.shape[0] <= 1):
         return [arr]
-    row_bytes = max(1, arr.nbytes // max(1, arr.shape[0]))
-    rows = max(1, chunk_bytes // row_bytes)
+    rows = costmodel.rows_per_chunk(arr.shape[0], arr.nbytes, chunk_bytes)
     return [arr[i:i + rows] for i in range(0, arr.shape[0], rows)]
 
 
@@ -92,29 +102,48 @@ class ColumnExec:
 
 
 class StreamingExecutor:
-    """Chunked, cached, batched/per-chunk decode engine over a ProgramCache."""
+    """Plan-driven chunked, cached, batched/per-chunk decode engine.
+
+    ``chunk_bytes`` (an int, None for whole-blob, or "auto" for per-column
+    sizing), ``chunk_decode`` and ``prefetch_chunks`` are *planner defaults*:
+    they parameterize the ``ExecutionPlan`` built when ``run`` is called
+    without one; a passed plan is authoritative.
+    """
 
     def __init__(self, backend: str = "jnp", fuse: bool = True,
-                 chunk_bytes: int | None = 1 << 20, pipeline: bool = True,
-                 batch_columns: bool = True, prefetch_chunks: int = 2,
+                 chunk_bytes: int | None | str = 1 << 20, pipeline: bool = True,
+                 batch_columns: bool = True, prefetch_chunks: int | None = None,
                  chunk_decode: bool = False,
-                 chip: str = DEFAULT_CHIP, cache: ProgramCache | None = None):
+                 chip: str = DEFAULT_CHIP, cache: ProgramCache | None = None,
+                 policy: str = "chunk-johnson",
+                 cost_model: CostModel | None = None):
         self.backend = backend
         self.fuse = fuse
         self.chunk_bytes = chunk_bytes
         self.pipeline = pipeline
         self.batch_columns = batch_columns
-        self.prefetch_chunks = max(1, prefetch_chunks)
+        self.prefetch_chunks = (None if prefetch_chunks is None
+                                else max(1, prefetch_chunks))
         self.chunk_decode = chunk_decode
         self.chip = chip
         self.cache = cache if cache is not None else DEFAULT_CACHE
+        self.policy = policy
+        self.cost_model = cost_model or CostModel(chip=chip)
         self._encoded: dict[str, plan_mod.Encoded] = {}
         self._graphs: dict[str, DecodeGraph] = {}
         self._programs: dict[str, Program] = {}
-        self._chunk_counts: dict[str, int] = {}
-        self._schedules: dict[str, ChunkSchedule | None] = {}
-        # measured (transfer_s, decode_s) per column from the latest run
-        self.timings: dict[str, tuple[float, float]] = {}
+        self._chunk_counts: dict[tuple[str, int | None], int] = {}
+        self._schedules: dict[tuple[str, int | None], ChunkSchedule | None] = {}
+        # measured (transfer_s, decode_s) per column from the latest run --
+        # an ALIAS of the cost model's store (one source of truth)
+        self.timings: dict[str, tuple[float, float]] = self.cost_model.measured
+
+    @property
+    def _fixed_chunk_bytes(self) -> int | None:
+        """Constructor chunk size as an int/None ("auto" falls back to the
+        default fixed size for legacy single-size paths)."""
+        cb = self.chunk_bytes
+        return planner_mod.DEFAULT_CHUNK_BYTES if isinstance(cb, str) else cb
 
     # ------------------------------------------------------------------ compile
     def compile(self, name: str, enc: plan_mod.Encoded) -> Program:
@@ -123,14 +152,23 @@ class StreamingExecutor:
 
         self._encoded[name] = enc
         # re-registering a name invalidates anything derived from the old blob
-        self._chunk_counts.pop(name, None)
-        self._schedules.pop(name, None)
-        self.timings.pop(name, None)
+        for store in (self._chunk_counts, self._schedules):
+            for key in [k for k in store if k[0] == name]:
+                store.pop(key)
+        self.cost_model.forget(name)    # drops profile + measured timings
         prog = compile_blob(enc, backend=self.backend, fuse=self.fuse,
                             chip=self.chip, cache=self.cache)
         self._graphs[name] = prog.graph
         self._programs[name] = prog
+        self.cost_model.register(profile_from(name, enc, prog.graph))
         return prog
+
+    def column_profile(self, name: str):
+        """Planner-facing profile of a registered column."""
+        if name not in self.cost_model.profiles:
+            self.cost_model.register(
+                profile_from(name, self._encoded[name], self._graphs[name]))
+        return self.cost_model.profiles[name]
 
     def program(self, name: str) -> Program:
         return self._programs[name]
@@ -139,45 +177,48 @@ class StreamingExecutor:
         return self._graphs[name]
 
     # ----------------------------------------------------------------- schedule
-    def _estimate(self, name: str) -> tuple[float, float]:
-        """Static (transfer_s, decode_s) estimate from the chip resource table --
-        used for issue ordering before any measured timings exist."""
-        enc = self._encoded[name]
-        spec = chip_spec(self.chip)
-        transfer = enc.compressed_nbytes / (spec.host_link_gbps * 1e9)
-        # decode is HBM-bound: read compressed + write plain, plus per-kernel launch
-        graph = self._graphs[name]
-        traffic = enc.compressed_nbytes + enc.plain_nbytes
-        decode = (traffic / (spec.hbm_gbps * 1e9)
-                  + graph.n_kernels * spec.grid_step_overhead_ns * 1e-9)
-        return transfer, decode
+    _DEFAULTS = object()     # sentinel: "use the constructor's chunk config"
 
-    def _n_chunks(self, name: str) -> int:
+    def _n_chunks(self, name: str, chunk_bytes: int | None | object = _DEFAULTS
+                  ) -> int:
         """Number of transfer pieces the executor will issue for a column's leaf
         buffers (row-granular) -- the chunk count the Zc model uses.  Lifted meta
         operands ride along as extra scalar puts but are not counted."""
-        if self.chunk_bytes is None:
+        if chunk_bytes is self._DEFAULTS:
+            chunk_bytes = self._fixed_chunk_bytes
+        if chunk_bytes is None:
             return 1
-        cached = self._chunk_counts.get(name)
+        cached = self._chunk_counts.get((name, chunk_bytes))
         if cached is None:
             flat = plan_mod.flat_buffers(self._encoded[name])
-            cached = sum(len(split_chunks(np.asarray(v), self.chunk_bytes))
+            cached = sum(len(split_chunks(np.asarray(v), chunk_bytes))
                          for v in flat.values())
-            self._chunk_counts[name] = cached
+            self._chunk_counts[(name, chunk_bytes)] = cached
         return cached
 
-    def chunk_schedule(self, name: str) -> ChunkSchedule | None:
-        """Coordinated per-chunk decode schedule for a column, or None when the
-        graph is not element-chunkable / chunking is off / one chunk suffices."""
-        if not self.chunk_decode or self.chunk_bytes is None:
+    def chunk_schedule(self, name: str,
+                       chunk_bytes: int | None | object = _DEFAULTS
+                       ) -> ChunkSchedule | None:
+        """Coordinated per-chunk decode schedule for a column at the given chunk
+        size, or None when the graph is not element-chunkable / chunking is off /
+        one chunk suffices.  Without an explicit size, the constructor defaults
+        gate it (chunk_decode flag + fixed chunk size), preserving the legacy
+        probe semantics."""
+        if chunk_bytes is self._DEFAULTS:
+            if not self.chunk_decode:
+                return None
+            chunk_bytes = self._fixed_chunk_bytes
+        if chunk_bytes is None:
             return None
-        if name in self._schedules:
-            return self._schedules[name]
-        sched = self._build_schedule(name)
-        self._schedules[name] = sched
+        key = (name, chunk_bytes)
+        if key in self._schedules:
+            return self._schedules[key]
+        sched = self._build_schedule(name, chunk_bytes)
+        self._schedules[key] = sched
         return sched
 
-    def _build_schedule(self, name: str) -> ChunkSchedule | None:
+    def _build_schedule(self, name: str,
+                        chunk_bytes: int) -> ChunkSchedule | None:
         graph = self._graphs[name]
         layout = element_chunk_layout(graph)
         if layout is None:
@@ -193,9 +234,9 @@ class StreamingExecutor:
         n = int(graph.n_out)
         align = int(layout.align)
         # chunk size targets ~chunk_bytes of *compressed* tile bytes per chunk,
-        # rounded to the alignment every boundary must respect
-        chunk_elems = int(self.chunk_bytes / max(per_elem, 1e-9)) // align * align
-        chunk_elems = max(align, chunk_elems)
+        # rounded to the alignment every boundary must respect -- via the same
+        # shared formula ColumnProfile.decode_chunking predicts with
+        chunk_elems = costmodel.aligned_chunk_elems(chunk_bytes, per_elem, align)
         if chunk_elems >= n:
             return None                      # degenerate: one chunk = whole column
         out_starts = tuple(range(0, n, chunk_elems))
@@ -215,19 +256,50 @@ class StreamingExecutor:
                              slices=slices, whole=layout.whole)
 
     def issue_order(self, names: Sequence[str] | None = None) -> list[str]:
-        """Column issue order induced by chunk-level Johnson scheduling."""
+        """Column issue order from the configured scheduling policy."""
         names = list(self._encoded) if names is None else list(names)
         if not self.pipeline or len(names) <= 1:
             return names
-        jobs = self.measured_jobs(names)
-        cjobs = scheduler.chunk_jobs(jobs, [self._n_chunks(n) for n in names])
-        corder = scheduler.johnson_order(cjobs)
-        return scheduler.column_order([cjobs[i].name for i in corder])
+        return list(self.plan(names).order)
+
+    def plan(self, names: Sequence[str] | None = None,
+             policy: str | None = None, order: Sequence[str] | None = None,
+             chunk_bytes: int | None | str | object = _DEFAULTS,
+             chunk_decode: bool | None = None,
+             window: int | None = None) -> ExecutionPlan:
+        """Build an ``ExecutionPlan`` for a set of registered columns.
+
+        Defaults come from the constructor knobs; any argument overrides them.
+        An explicit ``order`` pins the issue order (decisions still planned);
+        ``pipeline=False`` degrades to submission order (FIFO).
+        """
+        names = list(self._encoded) if names is None else list(names)
+        profiles = {n: self.column_profile(n) for n in names}
+        # an explicit policy always wins; pipeline=False only downgrades the
+        # constructor DEFAULT to submission order
+        if policy is not None:
+            pol = policy
+        else:
+            pol = "fifo" if not self.pipeline else self.policy
+        ep = planner_mod.plan_execution(
+            profiles, self.cost_model, policy=pol,
+            chunk_bytes=(self.chunk_bytes if chunk_bytes is self._DEFAULTS
+                         else chunk_bytes),
+            chunk_decode=(self.chunk_decode if chunk_decode is None
+                          else chunk_decode),
+            window=self.prefetch_chunks if window is None else window,
+            batch_columns=self.batch_columns)
+        if order is not None:
+            ep = dataclasses.replace(ep, order=tuple(order), policy="explicit")
+        return ep
 
     # --------------------------------------------------------------------- run
     def run(self, encs: dict[str, plan_mod.Encoded] | None = None,
-            order: Sequence[str] | None = None) -> dict[str, ColumnExec]:
-        """Transfer + decode a set of columns; returns per-column records."""
+            order: Sequence[str] | None = None,
+            plan: ExecutionPlan | None = None) -> dict[str, ColumnExec]:
+        """Transfer + decode a set of columns per an ExecutionPlan; returns
+        per-column records.  Without a plan, one is built from the constructor
+        defaults; measured actuals feed back into the cost model either way."""
         if encs is not None:
             for name, enc in encs.items():
                 if self._programs.get(name) is None or self._encoded.get(name) is not enc:
@@ -235,13 +307,31 @@ class StreamingExecutor:
             names = list(encs)
         else:
             names = list(self._encoded)
-        order = list(order) if order is not None else self.issue_order(names)
+        if plan is None:
+            plan = self.plan(names, order=order)
+        elif order is not None:
+            plan = dataclasses.replace(plan, order=tuple(order),
+                                       policy="explicit")
+        missing = [n for n in names if n not in plan.decisions]
+        if missing:
+            raise ValueError(
+                f"plan does not cover requested columns {missing}; it was "
+                f"built over {sorted(plan.decisions)} -- re-plan after "
+                "registering new columns")
+        names_set = set(names)
+        order = [n for n in plan.order if n in names_set]
+        decisions = plan.decisions
 
-        # host-side staging, in issue order.  Whole-mode columns split every
-        # operand row-granularly; per-chunk columns use the coordinated schedule
-        # (whole-resident buffers first, then chunk 0's slices, chunk 1's, ...).
+        # host-side staging, in plan order.  Whole-mode columns split every
+        # operand row-granularly at the column's planned chunk size; per-chunk
+        # columns use the coordinated schedule (whole-resident buffers first,
+        # then chunk 0's slices, chunk 1's, ...).
         host: dict[str, dict[str, list[np.ndarray]]] = {}
-        scheds = {name: self.chunk_schedule(name) for name in order}
+        scheds: dict[str, ChunkSchedule | None] = {}
+        for name in order:
+            d = decisions[name]
+            scheds[name] = (self.chunk_schedule(name, d.chunk_bytes)
+                            if d.decode_mode == planner_mod.CHUNK else None)
         transfer_items: list[tuple[str, str, int, np.ndarray]] = []
         col_end: dict[str, int] = {}
         chunk_ends: dict[str, list[int]] = {}
@@ -249,7 +339,8 @@ class StreamingExecutor:
             ops = plan_mod.host_operands(self._encoded[name])
             sched = scheds[name]
             if sched is None:
-                host[name] = {k: split_chunks(np.asarray(v), self.chunk_bytes)
+                host[name] = {k: split_chunks(np.asarray(v),
+                                              decisions[name].chunk_bytes)
                               for k, v in ops.items()}
                 for k, pieces in host[name].items():
                     for i, piece in enumerate(pieces):
@@ -287,25 +378,29 @@ class StreamingExecutor:
                 cursor += 1
 
         # decode units.  Per-chunk columns are singleton units (their launches are
-        # already split along the chunk axis); whole-mode *consecutive-in-order*
-        # columns sharing one Program decode in a single batched launch.  Grouping
-        # only adjacent columns keeps the transfer/decode overlap: a global group
-        # spanning the whole order would force every transfer to finish before the
-        # first decode.  (Johnson's rule keys on (transfer, decode) times, which
-        # are equal for same-signature columns, so they end up adjacent anyway.)
+        # already split along the chunk axis); *consecutive-in-order* columns the
+        # plan marked batched-by-signature decode in a single vmap launch when
+        # they share one Program.  Grouping only adjacent columns keeps the
+        # transfer/decode overlap: a global group spanning the whole order would
+        # force every transfer to finish before the first decode.  (Johnson's
+        # rule keys on (transfer, decode) times, which are equal for
+        # same-signature columns, so they end up adjacent anyway.)
         units: list[tuple[str, Program | None, list[str]]] = []
         for name in order:
             if scheds[name] is not None:
                 units.append(("chunk", None, [name]))
                 continue
             prog = self._programs[name]
-            if (self.batch_columns and units and units[-1][0] == "whole"
-                    and units[-1][1] is prog):
+            if (decisions[name].decode_mode == planner_mod.BATCHED
+                    and units and units[-1][0] == "whole"
+                    and units[-1][1] is prog
+                    and decisions[units[-1][2][-1]].decode_mode
+                    == planner_mod.BATCHED):
                 units[-1][2].append(name)
             else:
                 units.append(("whole", prog, [name]))
 
-        window = self.prefetch_chunks
+        window = plan.window
         results: dict[str, ColumnExec] = {}
         for kind, prog, members in units:
             if kind == "chunk":
@@ -356,11 +451,14 @@ class StreamingExecutor:
             for m, arr in zip(members, outs):
                 enc = self._encoded[m]
                 transfer_s = issue_s[m] + residual_wait
-                self.timings[m] = (transfer_s, decode_s)
+                # actuals feed the cost model's calibration loop (and, via the
+                # aliased timings dict, future plans' measured jobs)
+                self.cost_model.observe(m, transfer_s, decode_s)
                 results[m] = ColumnExec(
                     name=m, array=arr, transfer_s=transfer_s, decode_s=decode_s,
                     compressed_bytes=enc.compressed_nbytes,
-                    plain_bytes=enc.plain_nbytes, n_chunks=self._n_chunks(m),
+                    plain_bytes=enc.plain_nbytes,
+                    n_chunks=self._n_chunks(m, decisions[m].chunk_bytes),
                     signature=self._graphs[m].signature,
                     batched_with=tuple(s for s in siblings if s != m))
         return results
@@ -409,7 +507,7 @@ class StreamingExecutor:
             decode_s = dispatch
         enc = self._encoded[name]
         transfer_s = issue_s[name] + residual
-        self.timings[name] = (transfer_s, decode_s)
+        self.cost_model.observe(name, transfer_s, decode_s)
         return ColumnExec(
             name=name, array=arr, transfer_s=transfer_s, decode_s=decode_s,
             compressed_bytes=enc.compressed_nbytes, plain_bytes=enc.plain_nbytes,
@@ -426,23 +524,20 @@ class StreamingExecutor:
         try:
             return self.run({name: enc})[name].array
         finally:
-            for store in (self._encoded, self._graphs, self._programs,
-                          self._chunk_counts, self._schedules, self.timings):
+            for store in (self._encoded, self._graphs, self._programs):
                 store.pop(name, None)
+            for store in (self._chunk_counts, self._schedules):
+                for key in [k for k in store if k[0] == name]:
+                    store.pop(key)
+            self.cost_model.forget(name)
 
     # ------------------------------------------------------------------- model
     def measured_jobs(self, names: Sequence[str] | None = None) -> list[scheduler.Job]:
-        """Scheduling jobs for a set of columns, in CONSISTENT units: measured
-        wall-clock only when every column has a measurement, chip-model estimates
-        for all otherwise.  Mixing the two (microsecond-scale model vs
-        millisecond-scale CPU measurements) would make Johnson's transfer-vs-decode
-        comparison arbitrary."""
+        """Scheduling jobs from the cost model, in CONSISTENT units: measured
+        wall-clock when every column has a measurement, EWMA-calibrated chip
+        estimates for all otherwise (see ``CostModel.jobs``)."""
         names = list(self._encoded) if names is None else list(names)
-        if all(n in self.timings for n in names):
-            est = {n: self.timings[n] for n in names}
-        else:
-            est = {n: self._estimate(n) for n in names}
-        return [scheduler.Job(n, est[n][0], est[n][1]) for n in names]
+        return self.cost_model.jobs(names)
 
     def modeled_makespan(self, names: Sequence[str] | None = None,
                          pipeline: bool = True, johnson: bool = True,

@@ -1,0 +1,247 @@
+"""Holistic execution planner (the paper's central thesis as a subsystem).
+
+``plan_execution`` turns per-column ``ColumnProfile``s + a ``CostModel`` + a
+scheduling policy into an ``ExecutionPlan``: per column a chunk size (per-column,
+not one global knob), a decode mode (whole-column / per-chunk / batched-by-
+signature), plus a global issue order and in-flight window -- all chosen by
+minimizing the modeled makespan under ``scheduler.simulate_stream``, the same
+per-chunk simulator every policy is scored with.
+
+The executor *consumes* plans (``StreamingExecutor.run(plan=...)``): planning is
+fully separated from execution, and measured actuals flow back into the
+``CostModel`` so the next plan is built from calibrated predictions.
+
+With ``policy="adaptive"`` the planner searches chunk configurations
+{per-column auto, all whole-column, global fixed} crossed with the candidate
+issue orders, so its simulated makespan is by construction <= min(FIFO,
+whole-column Johnson, fixed-chunk Johnson) under the shared model -- those
+baselines are also reported in ``ExecutionPlan.baselines`` for benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+from repro.core import scheduler
+from repro.core.costmodel import ColumnProfile, CostModel
+from repro.core.scheduler import ChunkInfo, SchedulingPolicy, get_policy
+
+DEFAULT_CHUNK_BYTES = 1 << 20
+# fixed candidate per-column chunk sizes for auto sizing (64 KiB .. 4 MiB);
+# _decide_auto additionally tries sizes splitting THIS column's tile bytes
+# into 2/4/8 decode chunks, so small columns (tiny TPC-H scales, CI) still
+# have chunkable candidates below the fixed ladder's floor
+CHUNK_CANDIDATES = (1 << 16, 1 << 18, 1 << 20, 1 << 22)
+MIN_CHUNK_BYTES = 1 << 12
+
+WHOLE, CHUNK, BATCHED = "whole", "chunk", "batched"
+
+
+@dataclasses.dataclass(frozen=True)
+class ColumnDecision:
+    """Planned treatment of one column."""
+
+    name: str
+    chunk_bytes: int | None       # transfer/decode chunk size for THIS column
+    n_chunks: int                 # decode chunks (chunk mode) / transfer pieces
+    decode_mode: str              # "whole" | "chunk" | "batched"
+    tail_frac: float = 1.0
+    est_transfer_s: float = 0.0
+    est_decode_s: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """The explainable artifact the executor consumes: order + per-column
+    decisions + in-flight window + the modeled makespan they were chosen by."""
+
+    order: tuple[str, ...]
+    decisions: Mapping[str, ColumnDecision]
+    policy: str
+    window: int
+    modeled_makespan_s: float
+    baselines: Mapping[str, float] = dataclasses.field(default_factory=dict)
+
+    def explain(self) -> str:
+        """Human-readable plan: why each column is treated the way it is."""
+        lines = [f"plan: policy={self.policy} window={self.window} "
+                 f"modeled_makespan={self.modeled_makespan_s * 1e3:.3f}ms"]
+        for ref, mk in sorted(self.baselines.items()):
+            lines.append(f"  baseline {ref:14s} {mk * 1e3:.3f}ms")
+        for i, name in enumerate(self.order):
+            d = self.decisions[name]
+            cb = "whole" if d.chunk_bytes is None else f"{d.chunk_bytes >> 10}KiB"
+            lines.append(
+                f"  {i:2d}. {name:20s} mode={d.decode_mode:7s} chunk={cb:>8s} "
+                f"n_chunks={d.n_chunks:3d} "
+                f"pred=({d.est_transfer_s * 1e3:.3f}ms,"
+                f"{d.est_decode_s * 1e3:.3f}ms)")
+        return "\n".join(lines)
+
+
+def _chunk_info(d: ColumnDecision, overhead_s: float) -> ChunkInfo:
+    return ChunkInfo(n_chunks=max(1, d.n_chunks),
+                     chunk_decode=d.decode_mode == CHUNK,
+                     tail_frac=d.tail_frac, launch_overhead_s=overhead_s)
+
+
+def _decide_fixed(p: ColumnProfile, t: float, d: float,
+                  chunk_bytes: int | None, chunk_decode: bool) -> ColumnDecision:
+    """Legacy-shaped decision: one global chunk size, decode mode from the
+    chunk_decode flag (per-chunk only where the graph supports it).  ``t``/``d``
+    are the same per-column times the makespan simulator scores with."""
+    if chunk_decode and chunk_bytes is not None:
+        k, tail = p.decode_chunking(chunk_bytes)
+        if k > 1:
+            return ColumnDecision(p.name, chunk_bytes, k, CHUNK, tail, t, d)
+    return ColumnDecision(p.name, chunk_bytes,
+                          p.n_transfer_chunks(chunk_bytes), WHOLE, 1.0, t, d)
+
+
+def _decide_auto(p: ColumnProfile, t: float, d: float, overhead: float,
+                 fixed_chunk_bytes: int | None) -> ColumnDecision:
+    """Per-column chunk size + decode mode minimizing the column's own modeled
+    pipeline time (ties break toward fewer launches)."""
+    job = scheduler.Job(p.name, t, d)
+    whole_cb = fixed_chunk_bytes or DEFAULT_CHUNK_BYTES
+    best = ColumnDecision(p.name, whole_cb, p.n_transfer_chunks(whole_cb),
+                          WHOLE, 1.0, t, d)
+    best_mk = scheduler.simulate_stream([job], [_chunk_info(best, overhead)])
+    cands = set(CHUNK_CANDIDATES) | {whole_cb}
+    if p.chunkable and p.per_elem_bytes > 0 and p.n_out > 0:
+        tile_bytes = p.per_elem_bytes * p.n_out
+        cands |= {max(MIN_CHUNK_BYTES, int(tile_bytes / k)) for k in (2, 4, 8)}
+    for cb in sorted(cands, reverse=True):
+        k, tail = p.decode_chunking(cb)
+        if k <= 1:
+            continue
+        cand = ColumnDecision(p.name, cb, k, CHUNK, tail, t, d)
+        mk = scheduler.simulate_stream([job], [_chunk_info(cand, overhead)])
+        if mk < best_mk - 1e-12:
+            best, best_mk = cand, mk
+    return best
+
+
+def _mark_batched(decisions: dict[str, ColumnDecision],
+                  profiles: Mapping[str, ColumnProfile]) -> None:
+    """Whole-mode columns sharing a structural signature decode in one vmap
+    launch; mark them so the executor groups them."""
+    by_sig: dict[str, list[str]] = {}
+    for name, d in decisions.items():
+        if d.decode_mode == WHOLE:
+            by_sig.setdefault(profiles[name].signature, []).append(name)
+    for names in by_sig.values():
+        if len(names) > 1:
+            for n in names:
+                decisions[n] = dataclasses.replace(decisions[n],
+                                                   decode_mode=BATCHED)
+
+
+def _window_for(decisions: Mapping[str, ColumnDecision]) -> int:
+    """In-flight transfer window: classic double buffering, deepened when
+    per-chunk columns stream many small pieces."""
+    ks = [d.n_chunks for d in decisions.values() if d.decode_mode == CHUNK]
+    if not ks:
+        return 2
+    return min(8, max(2, max(ks) // 8 + 2))
+
+
+def plan_execution(profiles: Mapping[str, ColumnProfile] | Sequence[ColumnProfile],
+                   cost_model: CostModel,
+                   policy: str | SchedulingPolicy = "adaptive",
+                   chunk_bytes: int | None | str = "auto",
+                   chunk_decode: bool = False,
+                   window: int | None = None,
+                   batch_columns: bool = True) -> ExecutionPlan:
+    """Choose, per column, chunk size / decode mode / issue order / window.
+
+    ``chunk_bytes`` may be an int (global fixed size), None (whole-blob
+    transfer) or "auto" (per-column sizing).  ``policy="adaptive"`` searches
+    chunk configurations x issue orders and keeps the modeled-makespan minimum;
+    fixed policies order the configuration implied by ``chunk_bytes``/
+    ``chunk_decode`` directly (the executor's legacy behaviour, now explicit).
+    """
+    if not isinstance(profiles, Mapping):
+        profiles = {p.name: p for p in profiles}
+    names = list(profiles)
+    for p in profiles.values():
+        if p.name not in cost_model.profiles:
+            cost_model.register(p)
+    pol = get_policy(policy)
+    jobs = cost_model.jobs(names)
+    # decisions are priced with the SAME per-column times the simulator scores
+    # with (predict() can disagree with jobs() before calibration)
+    times = {j.name: (j.transfer_s, j.decompress_s) for j in jobs}
+    overheads = [cost_model.launch_overhead_s(n) for n in names]
+
+    fixed_cb = chunk_bytes if isinstance(chunk_bytes, int) else \
+        (None if chunk_bytes is None else DEFAULT_CHUNK_BYTES)
+    auto = chunk_bytes == "auto"
+    executed_kind = "auto" if auto else \
+        ("fixed-chunk" if chunk_decode else "whole")
+
+    def decisions_of(kind: str) -> dict[str, ColumnDecision]:
+        # "fixed-chunk" honours chunk_bytes=None (whole-blob transfer stays
+        # whole-blob even with chunk_decode=True -- _decide_fixed degrades to
+        # whole mode)
+        if kind == "auto":
+            return {n: _decide_auto(profiles[n], *times[n],
+                                    cost_model.launch_overhead_s(n), fixed_cb)
+                    for n in names}
+        return {n: _decide_fixed(profiles[n], *times[n], fixed_cb,
+                                 kind == "fixed-chunk") for n in names}
+
+    def infos_of(decisions: dict[str, ColumnDecision]) -> list[ChunkInfo]:
+        return [_chunk_info(decisions[n], o) for n, o in zip(names, overheads)]
+
+    if len(names) <= 1:
+        # trivial plan: one (or zero) columns has exactly one order and no
+        # meaningful baselines -- skip the search (the per-request serve path)
+        decisions = decisions_of(executed_kind)
+        order = list(range(len(names)))
+        makespan_s = scheduler.simulate_stream(jobs, infos_of(decisions), order)
+        baselines: dict[str, float] = {}
+    else:
+        # shared-model baselines (whole-column FIFO/Johnson, fixed-chunk
+        # Johnson).  Every baseline is a configuration the search below may
+        # also pick, so the adaptive plan's makespan is <= min(baselines) by
+        # construction -- in particular the chunk-johnson baseline honours
+        # chunk_bytes=None (where it degrades to whole-column decode) rather
+        # than substituting a chunk size the caller forbade.
+        whole_dec = decisions_of("whole")
+        whole_infos = infos_of(whole_dec)
+        fixedc_dec = decisions_of("fixed-chunk")
+        baselines = {
+            "fifo": scheduler.simulate_stream(
+                jobs, whole_infos, scheduler.fifo_order(jobs)),
+            "johnson": scheduler.simulate_stream(
+                jobs, whole_infos, scheduler.johnson_order(jobs)),
+            "chunk-johnson": scheduler.ChunkJohnsonPolicy().modeled_makespan(
+                jobs, infos_of(fixedc_dec)),
+        }
+        if pol.name == "adaptive":
+            # global search: chunk configurations x candidate orders; includes
+            # the baseline configs, so the makespan is <= min(baselines)
+            search = [decisions_of("auto")] if auto else []
+            search += [whole_dec, fixedc_dec]
+            best_dec, best_order, best_mk = None, None, float("inf")
+            for dec in search:
+                infos = infos_of(dec)
+                order = pol.order(jobs, infos)
+                mk = scheduler.simulate_stream(jobs, infos, order)
+                if mk < best_mk - 1e-15:
+                    best_dec, best_order, best_mk = dec, order, mk
+            decisions, order, makespan_s = best_dec, best_order, best_mk
+        else:
+            decisions = decisions_of(executed_kind)
+            infos = infos_of(decisions)
+            order = pol.order(jobs, infos)
+            makespan_s = scheduler.simulate_stream(jobs, infos, order)
+
+    if batch_columns:
+        _mark_batched(decisions, profiles)
+    return ExecutionPlan(
+        order=tuple(names[i] for i in order), decisions=dict(decisions),
+        policy=pol.name, window=window if window is not None
+        else _window_for(decisions),
+        modeled_makespan_s=makespan_s, baselines=baselines)

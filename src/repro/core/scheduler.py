@@ -1,4 +1,4 @@
-"""Pipelining Layer (paper §3.3): Johnson's-rule ordering of transfer/decompress.
+"""Pipelining Layer (paper §3.3): scheduling policies over a two-machine flow shop.
 
 Each data block i is a job with two sequential operations on two "machines":
   machine 1 = host->device link (transfer time a_i),
@@ -8,9 +8,20 @@ the makespan-optimal order:  jobs with a_i <= b_i first, ascending a_i; then the
 descending b_i.  (The paper reports O(n); the textbook bound is O(n log n) for the
 sort -- we note the discrepancy and implement the optimal rule.)
 
-The same module simulates a pipeline's makespan for any order, which the tests use to
-verify optimality against brute force and the benchmarks use for the Fig. 8 / Fig. 20
-"Z vs C" ablation.
+The module has three parts:
+
+  * primitive orders and simulators (``johnson_order``, ``fifo_order``,
+    ``makespan``, ``simulate_stream``) -- ``simulate_stream`` is the generalized
+    simulator that models what the streaming executor actually does: transfer is
+    always chunk-granular, decode is chunk-granular (body launches plus an uneven
+    tail launch) only for columns running per-chunk decode;
+  * chunk-level job expansion (``chunk_jobs`` / ``column_of`` /
+    ``column_order``) used to derive column issue orders from chunk-granular
+    Johnson schedules;
+  * pluggable **policy objects** (``FifoPolicy``, ``JohnsonPolicy``,
+    ``ChunkJohnsonPolicy``, ``AdaptivePolicy``) sharing the one simulator -- the
+    planner (``core/planner.py``) scores and picks among them instead of the old
+    hard-coded executor heuristics.
 """
 from __future__ import annotations
 
@@ -77,39 +88,63 @@ def fifo_order(jobs: Sequence[Job]) -> list[int]:
     return list(range(len(jobs)))
 
 
-def chunk_jobs(jobs: Sequence[Job], n_chunks: Sequence[int]) -> list[Job]:
+CHUNK_SEP = "#"
+
+
+def _escape(name: str) -> str:
+    """Escape the chunk separator in a column name (``#`` -> ``##``)."""
+    return name.replace(CHUNK_SEP, CHUNK_SEP * 2)
+
+
+def _unescape(name: str) -> str:
+    return name.replace(CHUNK_SEP * 2, CHUNK_SEP)
+
+
+def chunk_jobs(jobs: Sequence[Job], n_chunks: Sequence[int],
+               tail_frac: Sequence[float] | None = None) -> list[Job]:
     """Split each column job into its chunk-level jobs.
 
-    The streaming executor transfers column ``j`` as ``n_chunks[j]`` fixed-size
-    pieces; chunk ``i`` of column ``name`` is named ``name#i``, with machine-1
-    (link) and machine-2 (decode) time divided evenly across the chunks.  Finer
-    jobs let the two-machine pipeline overlap *within* a column, which whole-column
-    jobs cannot: makespan(chunked, Johnson) <= makespan(whole, Johnson).
+    The streaming executor transfers column ``j`` as ``n_chunks[j]`` pieces and
+    -- for element-chunkable columns under per-chunk decode -- launches one
+    decode per transferred chunk, so the model here is chunk-granular on BOTH
+    machines: it is what ``StreamingExecutor.run(chunk_decode=True)`` executes,
+    not merely an unreachable bound.  Chunk ``i`` of column ``name`` is named
+    ``escape(name)#i`` (``#`` in column names is escaped as ``##`` so
+    ``column_of`` inverts the naming unambiguously).
 
-    Note the model is chunk-granular on BOTH machines, while the current executor
-    chunks only the transfer (each column still decodes in one launch after its
-    chunks reassemble) -- so the chunked makespan is the bound a chunk-granular
-    decoder would reach, not what ``StreamingExecutor.run`` delivers today.
+    ``tail_frac[j]`` in (0, 1] models the uneven final chunk the executor's
+    aligned chunk layout produces: chunks ``0..k-2`` carry one full share each
+    and the tail carries ``tail_frac`` of a share (total time is preserved).
+    Default is an even split.  Finer jobs let the two-machine pipeline overlap
+    *within* a column, which whole-column jobs cannot:
+    makespan(chunked, Johnson) <= makespan(whole, Johnson).
     """
     out: list[Job] = []
-    for j, k in zip(jobs, n_chunks):
+    tails = [1.0] * len(jobs) if tail_frac is None else list(tail_frac)
+    for j, k, tf in zip(jobs, n_chunks, tails):
         k = max(1, int(k))
-        out.extend(Job(f"{j.name}#{i}", j.transfer_s / k, j.decompress_s / k)
-                   for i in range(k))
+        tf = min(1.0, max(tf, 1e-9)) if k > 1 else 1.0
+        denom = (k - 1) + tf
+        base = _escape(j.name)
+        for i in range(k):
+            w = (tf if i == k - 1 else 1.0) / denom
+            out.append(Job(f"{base}{CHUNK_SEP}{i}",
+                           j.transfer_s * w, j.decompress_s * w))
     return out
 
 
 def column_of(chunk_name: str) -> str:
-    """Invert ``chunk_jobs`` naming: 'L_ORDERKEY#3' -> 'L_ORDERKEY'."""
-    return chunk_name.rsplit("#", 1)[0]
+    """Invert ``chunk_jobs`` naming: 'L_ORDERKEY#3' -> 'L_ORDERKEY' (unescaping
+    any ``##`` the column name's own ``#`` characters became)."""
+    return _unescape(chunk_name.rsplit(CHUNK_SEP, 1)[0])
 
 
 def column_order(chunk_names: Sequence[str]) -> list[str]:
     """Column issue order induced by a chunk-level schedule (first appearance).
 
     Johnson's rule keys only on (transfer, decompress), which are identical for every
-    chunk of one column, so a column's chunks stay contiguous and the induced order is
-    the order their first chunks hit the link.
+    full chunk of one column, so a column's chunks stay (near-)contiguous and the
+    induced order is the order their first chunks hit the link.
     """
     seen: set[str] = set()
     out: list[str] = []
@@ -119,3 +154,145 @@ def column_order(chunk_names: Sequence[str]) -> list[str]:
             seen.add(col)
             out.append(col)
     return out
+
+
+# ----------------------------------------------------- generalized simulator
+
+@dataclasses.dataclass(frozen=True)
+class ChunkInfo:
+    """Per-column chunking configuration for ``simulate_stream``.
+
+    ``n_chunks`` transfer pieces; ``chunk_decode`` selects per-chunk decode
+    (one body launch per chunk plus the uneven ``tail_frac`` tail launch)
+    versus one whole-column launch after the last chunk arrives;
+    ``launch_overhead_s`` is the cost of each decode launch beyond the first.
+    """
+
+    n_chunks: int = 1
+    chunk_decode: bool = False
+    tail_frac: float = 1.0
+    launch_overhead_s: float = 0.0
+
+
+def simulate_stream(jobs: Sequence[Job],
+                    infos: Sequence[ChunkInfo] | None = None,
+                    order: Sequence[int] | None = None) -> float:
+    """Makespan of the streaming executor's actual pipeline shape.
+
+    Transfer is serial on the link and always chunk-granular.  Decode of a
+    per-chunk column launches per transferred chunk (body launches + uneven
+    tail); a whole-decode column's single launch waits for its *last* chunk.
+    With default infos this reduces exactly to ``makespan``.
+    """
+    order = list(range(len(jobs))) if order is None else list(order)
+    infos = [ChunkInfo()] * len(jobs) if infos is None else list(infos)
+    t_link = 0.0
+    t_dev = 0.0
+    for idx in order:
+        j, info = jobs[idx], infos[idx]
+        k = max(1, int(info.n_chunks))
+        tf = min(1.0, max(info.tail_frac, 1e-9)) if k > 1 else 1.0
+        denom = (k - 1) + tf
+        weights = [1.0] * (k - 1) + [tf]
+        if info.chunk_decode and k > 1:
+            for i, w in enumerate(weights):
+                t_link += j.transfer_s * w / denom
+                t_dev = (max(t_dev, t_link) + j.decompress_s * w / denom
+                         + (info.launch_overhead_s if i else 0.0))
+        else:
+            for w in weights:
+                t_link += j.transfer_s * w / denom
+            t_dev = max(t_dev, t_link) + j.decompress_s
+    return t_dev
+
+
+# ------------------------------------------------------- scheduling policies
+
+class SchedulingPolicy:
+    """Order + makespan model for a set of column jobs.
+
+    ``order`` returns column indices; ``modeled_makespan`` scores the policy's
+    order under the shared ``simulate_stream`` simulator, so every policy is
+    judged by the same per-chunk pipeline model.
+    """
+
+    name = "base"
+
+    def order(self, jobs: Sequence[Job],
+              infos: Sequence[ChunkInfo] | None = None) -> list[int]:
+        raise NotImplementedError
+
+    def modeled_makespan(self, jobs: Sequence[Job],
+                         infos: Sequence[ChunkInfo] | None = None) -> float:
+        return simulate_stream(jobs, infos, self.order(jobs, infos))
+
+
+class FifoPolicy(SchedulingPolicy):
+    """Submission order -- the no-scheduler baseline."""
+
+    name = "fifo"
+
+    def order(self, jobs, infos=None):
+        return fifo_order(jobs)
+
+
+class JohnsonPolicy(SchedulingPolicy):
+    """Whole-column Johnson's rule (paper §3.3)."""
+
+    name = "johnson"
+
+    def order(self, jobs, infos=None):
+        return johnson_order(jobs)
+
+
+class ChunkJohnsonPolicy(SchedulingPolicy):
+    """Johnson's rule at chunk granularity; the induced column order issues
+    decode-heavy columns' first chunks ahead of transfer-heavy ones."""
+
+    name = "chunk-johnson"
+
+    def order(self, jobs, infos=None):
+        if infos is None:
+            return johnson_order(jobs)
+        cjobs = chunk_jobs(jobs, [i.n_chunks for i in infos],
+                           [i.tail_frac for i in infos])
+        corder = johnson_order(cjobs)
+        cols = column_order([cjobs[i].name for i in corder])
+        index = {j.name: i for i, j in enumerate(jobs)}
+        return [index[c] for c in cols]
+
+
+class AdaptivePolicy(SchedulingPolicy):
+    """Pick the best of the fixed policies *for this job set* by simulated
+    makespan -- never worse than any single one under the shared model."""
+
+    name = "adaptive"
+
+    def __init__(self):
+        self.candidates: tuple[SchedulingPolicy, ...] = (
+            FifoPolicy(), JohnsonPolicy(), ChunkJohnsonPolicy())
+
+    def order(self, jobs, infos=None):
+        best, best_mk = list(range(len(jobs))), float("inf")
+        for pol in self.candidates:
+            order = pol.order(jobs, infos)
+            mk = simulate_stream(jobs, infos, order)
+            if mk < best_mk:
+                best, best_mk = order, mk
+        return best
+
+
+POLICIES: dict[str, type[SchedulingPolicy]] = {
+    p.name: p for p in (FifoPolicy, JohnsonPolicy, ChunkJohnsonPolicy,
+                        AdaptivePolicy)}
+
+
+def get_policy(policy: str | SchedulingPolicy) -> SchedulingPolicy:
+    """Resolve a policy name (or pass an instance through)."""
+    if isinstance(policy, SchedulingPolicy):
+        return policy
+    try:
+        return POLICIES[policy]()
+    except KeyError:
+        raise ValueError(f"unknown scheduling policy {policy!r}; "
+                         f"known: {sorted(POLICIES)}") from None

@@ -92,10 +92,14 @@ ColumnResult = ColumnExec
 class ColumnPipeline:
     """Transfer + decompress a set of columns through the streaming executor.
 
-    Columns flow Plan -> DecodeGraph -> ProgramCache -> StreamingExecutor: one jit
-    per column *structure* (data-dependent meta rides as runtime operands), chunked
-    double-buffered transfer in chunk-level Johnson order, and same-signature
-    columns decoded in one batched launch.  ``chunk_decode=True`` additionally
+    Columns flow Plan -> DecodeGraph -> ProgramCache -> planner ->
+    StreamingExecutor: one jit per column *structure* (data-dependent meta rides
+    as runtime operands), and every scheduling decision (issue order, per-column
+    chunk size, decode mode, in-flight window) comes from an ``ExecutionPlan``
+    built by ``core/planner.py`` under the configured ``policy`` ("fifo",
+    "johnson", "chunk-johnson", or "adaptive" with ``chunk_bytes="auto"`` for
+    per-column sizing).  Same-signature columns decode in one batched launch.
+    ``chunk_decode=True`` additionally
     launches one decode per transferred chunk for element-chunkable columns, so
     transfer/decode overlap *within* a column (the measured counterpart of the
     ``Zc`` chunk-level makespan model).  Per-column (transfer_s, decode_s)
@@ -106,20 +110,22 @@ class ColumnPipeline:
 
     def __init__(self, plans: dict[str, Plan], backend: str = "jnp",
                  fuse: bool = True, pipeline: bool = True,
-                 chunk_bytes: int | None = 1 << 20, batch_columns: bool = True,
-                 chunk_decode: bool = False,
+                 chunk_bytes: int | None | str = 1 << 20,
+                 batch_columns: bool = True, chunk_decode: bool = False,
+                 policy: str = "chunk-johnson",
                  executor: StreamingExecutor | None = None):
         self.plans = plans
         self.executor = executor or StreamingExecutor(
             backend=backend, fuse=fuse, chunk_bytes=chunk_bytes,
             pipeline=pipeline, batch_columns=batch_columns,
-            chunk_decode=chunk_decode)
+            chunk_decode=chunk_decode, policy=policy)
         # mirror the *effective* config (an explicitly passed executor wins)
         self.backend = self.executor.backend
         self.fuse = self.executor.fuse
         self.pipeline = self.executor.pipeline
         self.chunk_bytes = self.executor.chunk_bytes
         self.chunk_decode = self.executor.chunk_decode
+        self.policy = self.executor.policy
         self._encoded: dict[str, plan_mod.Encoded] = {}
         self._decoders: dict[str, compiler.Program] = {}
 
@@ -159,18 +165,31 @@ class ColumnPipeline:
         t1 = time.perf_counter()
         out = prog(bufs)
         jax.block_until_ready(out)
-        self._timings[name] = (transfer_s, time.perf_counter() - t1)
+        # through observe(), not the raw dict: the measurement must also feed
+        # the cost model's EWMA calibration, like the executor's own actuals
+        self.executor.cost_model.observe(name, transfer_s,
+                                         time.perf_counter() - t1)
         return self._timings[name]
 
-    def run(self, order: list[str] | None = None) -> dict[str, ColumnResult]:
-        """Execute the pipeline; chunk-level Johnson order unless explicitly given.
+    def plan(self, policy: str | None = None, **kw):
+        """Build an ``ExecutionPlan`` over the registered columns (planner layer;
+        measured timings when a ``run`` has happened, calibrated chip estimates
+        otherwise).  Keyword overrides pass through to ``StreamingExecutor.plan``
+        (``chunk_bytes="auto"`` enables per-column chunk sizing)."""
+        return self.executor.plan(list(self._encoded), policy=policy, **kw)
 
-        The first run of fresh columns orders transfers by the chip-model estimate
-        (no pre-run profiling pass -- the old behaviour of transferring+decoding
-        every column once just to schedule it is exactly the double-measurement this
-        replaces); runs after a ``run`` or ``_measure`` use measured timings.
+    def run(self, order: list[str] | None = None,
+            plan=None) -> dict[str, ColumnResult]:
+        """Execute the pipeline under an ExecutionPlan (auto-built from the
+        configured policy unless given; an explicit ``order`` pins issue order).
+
+        The first run of fresh columns plans from the calibrated chip-model
+        estimate (no pre-run profiling pass -- the old behaviour of
+        transferring+decoding every column once just to schedule it is exactly
+        the double-measurement this replaces); runs after a ``run`` or
+        ``_measure`` plan from measured timings.
         """
-        return self.executor.run(self._encoded, order=order)
+        return self.executor.run(self._encoded, order=order, plan=plan)
 
     def modeled_makespan(self, pipeline: bool = True, johnson: bool = True,
                          chunked: bool = False) -> float:

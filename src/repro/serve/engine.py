@@ -39,6 +39,7 @@ class Request:
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, batch_slots: int = 4,
                  max_len: int = 512, eos: int = 0,
+                 decode_policy: str = "johnson",
                  executor: StreamingExecutor | None = None):
         self.cfg = cfg
         self.model = get_model(cfg)
@@ -54,11 +55,15 @@ class ServeEngine:
         # (prompts are small) with a bounded private ProgramCache -- every distinct
         # prompt LENGTH is still a distinct structural signature (shapes jit), so an
         # unbounded cache would grow one program per length for the life of the
-        # engine; within a length, operand-lifted meta makes all prompts share one
+        # engine; within a length, operand-lifted meta makes all prompts share one.
+        # Decode flows through the same planner layer as the column pipeline
+        # (``decode_policy``), so batched prompt ingestion inherits cost-model
+        # ordering for free -- a single prompt plans trivially to one whole decode
         from repro.core.compiler import ProgramCache
 
         self.executor = executor or StreamingExecutor(
-            chunk_bytes=None, cache=ProgramCache(max_programs=64))
+            chunk_bytes=None, cache=ProgramCache(max_programs=64),
+            policy=decode_policy)
 
     @property
     def decode_cache_stats(self) -> dict[str, int]:

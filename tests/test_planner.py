@@ -1,0 +1,312 @@
+"""Holistic execution planner: cost model calibration, policy objects over the
+generalized per-chunk simulator, plan optimality vs the fixed baselines, and
+plan round-tripping through the streaming executor.
+
+(Deliberately hypothesis-free -- these must run in environments where
+``test_scheduler.py`` importorskips.)
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import plan as P, scheduler
+from repro.core.compiler import ProgramCache
+from repro.core.costmodel import ColumnProfile, CostModel
+from repro.core.executor import StreamingExecutor
+from repro.core.planner import CHUNK, WHOLE, ExecutionPlan, plan_execution
+from repro.core.scheduler import (AdaptivePolicy, ChunkInfo, ChunkJohnsonPolicy,
+                                  FifoPolicy, JohnsonPolicy, chunk_jobs,
+                                  column_of, get_policy, makespan,
+                                  simulate_stream)
+
+
+# ------------------------------------------------------------ scheduler layer
+
+def test_simulate_stream_defaults_reduce_to_makespan():
+    rng = np.random.default_rng(0)
+    jobs = [scheduler.Job(str(i), float(a), float(b))
+            for i, (a, b) in enumerate(rng.uniform(0.01, 5.0, (8, 2)))]
+    order = scheduler.johnson_order(jobs)
+    assert simulate_stream(jobs, None, order) == pytest.approx(
+        makespan(jobs, order))
+
+
+def test_simulate_stream_chunk_decode_never_worse_than_whole():
+    """Per-chunk decode only adds overlap (zero launch overhead)."""
+    rng = np.random.default_rng(1)
+    for _ in range(50):
+        jobs = [scheduler.Job(str(i), float(a), float(b)) for i, (a, b)
+                in enumerate(rng.uniform(0.01, 5.0, (rng.integers(1, 6), 2)))]
+        ks = rng.integers(1, 9, len(jobs))
+        whole = [ChunkInfo(n_chunks=int(k)) for k in ks]
+        chunked = [ChunkInfo(n_chunks=int(k), chunk_decode=True) for k in ks]
+        order = list(range(len(jobs)))
+        assert (simulate_stream(jobs, chunked, order)
+                <= simulate_stream(jobs, whole, order) + 1e-9)
+
+
+def test_chunk_jobs_uneven_tail_preserves_totals():
+    jobs = [scheduler.Job("a", 4.0, 2.0), scheduler.Job("b", 1.0, 4.0)]
+    cjobs = chunk_jobs(jobs, [4, 3], tail_frac=[0.25, 1.0])
+    assert len(cjobs) == 7
+    assert sum(j.transfer_s for j in cjobs) == pytest.approx(5.0)
+    assert sum(j.decompress_s for j in cjobs) == pytest.approx(6.0)
+    # tail chunk of "a" carries a quarter share; body chunks a full share each
+    a_chunks = [j for j in cjobs if column_of(j.name) == "a"]
+    assert a_chunks[-1].transfer_s == pytest.approx(a_chunks[0].transfer_s / 4)
+
+
+def test_chunk_naming_escapes_separator():
+    """Column names containing '#' survive the chunk naming round trip."""
+    jobs = [scheduler.Job("tbl#col", 2.0, 1.0), scheduler.Job("plain", 1.0, 2.0)]
+    cjobs = chunk_jobs(jobs, [3, 2])
+    names = {column_of(j.name) for j in cjobs}
+    assert names == {"tbl#col", "plain"}
+    assert scheduler.column_order([j.name for j in cjobs]) == ["tbl#col", "plain"]
+    # pathological: name ending in the separator
+    assert column_of(chunk_jobs([scheduler.Job("x#", 1, 1)], [2])[0].name) == "x#"
+
+
+def test_policy_registry_and_adaptive_dominance():
+    rng = np.random.default_rng(2)
+    for name in ("fifo", "johnson", "chunk-johnson", "adaptive"):
+        assert get_policy(name).name == name
+    with pytest.raises(ValueError):
+        get_policy("nope")
+    for _ in range(30):
+        n = int(rng.integers(1, 7))
+        jobs = [scheduler.Job(str(i), float(a), float(b))
+                for i, (a, b) in enumerate(rng.uniform(0.01, 5.0, (n, 2)))]
+        infos = [ChunkInfo(n_chunks=int(k), chunk_decode=bool(c),
+                           tail_frac=float(t))
+                 for k, c, t in zip(rng.integers(1, 7, n),
+                                    rng.integers(0, 2, n),
+                                    rng.uniform(0.1, 1.0, n))]
+        mk_ad = AdaptivePolicy().modeled_makespan(jobs, infos)
+        for pol in (FifoPolicy(), JohnsonPolicy(), ChunkJohnsonPolicy()):
+            assert mk_ad <= pol.modeled_makespan(jobs, infos) + 1e-9
+
+
+# -------------------------------------------------------------- planner layer
+
+def _synthetic_profiles(rng, n):
+    """Profiles + injected measured timings for simulation-only planning."""
+    cm = CostModel()
+    profiles = {}
+    for i in range(n):
+        name = f"col{i}"
+        nbytes = int(rng.integers(1 << 16, 1 << 23))
+        profiles[name] = ColumnProfile(
+            name=name, compressed_nbytes=nbytes, plain_nbytes=4 * nbytes,
+            n_kernels=int(rng.integers(1, 4)), signature=f"sig{i}",
+            leaves=((nbytes // 4, nbytes),), chunkable=bool(rng.integers(0, 2)),
+            n_out=nbytes, per_elem_bytes=1.0, align=8)
+        cm.register(profiles[name])
+        cm.measured[name] = (float(rng.uniform(0.001, 0.05)),
+                             float(rng.uniform(0.001, 0.05)))
+    return profiles, cm
+
+
+def test_planner_never_exceeds_fixed_baselines():
+    """Adaptive plan's simulated makespan <= min(FIFO, whole-column Johnson,
+    fixed-chunk Johnson) on randomized (seeded) job sets."""
+    rng = np.random.default_rng(7)
+    for trial in range(25):
+        profiles, cm = _synthetic_profiles(rng, int(rng.integers(2, 9)))
+        ep = plan_execution(profiles, cm, policy="adaptive",
+                            chunk_bytes="auto")
+        assert ep.baselines.keys() == {"fifo", "johnson", "chunk-johnson"}
+        assert ep.modeled_makespan_s <= min(ep.baselines.values()) + 1e-9, \
+            f"trial {trial}: {ep.modeled_makespan_s} vs {ep.baselines}"
+        assert set(ep.order) == set(profiles)
+
+
+def test_single_column_plan_is_trivial():
+    """One column: one order, no baseline sweep (per-request serve path)."""
+    rng = np.random.default_rng(7)
+    profiles, cm = _synthetic_profiles(rng, 1)
+    ep = plan_execution(profiles, cm, policy="johnson", chunk_bytes=None)
+    assert ep.order == tuple(profiles) and ep.baselines == {}
+    (d,) = ep.decisions.values()
+    assert d.decode_mode == WHOLE and d.chunk_bytes is None
+
+
+def test_plan_is_explainable():
+    rng = np.random.default_rng(8)
+    profiles, cm = _synthetic_profiles(rng, 4)
+    ep = plan_execution(profiles, cm, policy="adaptive", chunk_bytes="auto")
+    text = ep.explain()
+    assert "policy=adaptive" in text and "baseline" in text
+    for name in profiles:
+        assert name in text
+
+
+def test_fixed_policies_preserve_legacy_shapes():
+    """Non-adaptive policies plan the configuration the knobs imply."""
+    rng = np.random.default_rng(9)
+    profiles, cm = _synthetic_profiles(rng, 5)
+    ep = plan_execution(profiles, cm, policy="fifo", chunk_bytes=None)
+    assert ep.order == tuple(profiles)          # submission order
+    assert all(d.decode_mode in (WHOLE, "batched") and d.chunk_bytes is None
+               for d in ep.decisions.values())
+    ep2 = plan_execution(profiles, cm, policy="johnson", chunk_bytes=1 << 18,
+                         chunk_decode=True)
+    chunked = [d for d in ep2.decisions.values() if d.decode_mode == CHUNK]
+    assert all(profiles[d.name].chunkable and d.n_chunks > 1 for d in chunked)
+
+
+# ----------------------------------------------------- executor round-tripping
+
+def test_plan_round_trips_through_executor():
+    """Plan says per-chunk => the executor's records show chunk_decoded with
+    the planned launch count; plan says whole => single launch."""
+    rng = np.random.default_rng(11)
+    encs = {
+        "big": P.encode(P.make_plan("bitpack"),
+                        rng.integers(0, 3000, 400_000).astype(np.int32)),
+        "small": P.encode(P.make_plan("bitpack"),
+                          rng.integers(0, 3000, 2_000).astype(np.int32)),
+    }
+    ex = StreamingExecutor(chunk_bytes=16384, chunk_decode=True,
+                           cache=ProgramCache())
+    for n, e in encs.items():
+        ex.compile(n, e)
+    ep = ex.plan()
+    assert ep.decisions["big"].decode_mode == CHUNK
+    assert ep.decisions["small"].decode_mode == WHOLE
+    results = ex.run(encs, plan=ep)
+    for n, e in encs.items():
+        np.testing.assert_array_equal(np.asarray(results[n].array),
+                                      P.decode_np(e))
+    assert results["big"].chunk_decoded
+    assert results["big"].decode_launches == ep.decisions["big"].n_chunks > 1
+    assert not results["small"].chunk_decoded
+    assert results["small"].decode_launches == 1
+    # forcing whole-column decode through the plan is honoured too
+    whole = dataclasses.replace(
+        ep, decisions={n: dataclasses.replace(d, decode_mode=WHOLE)
+                       for n, d in ep.decisions.items()})
+    res2 = ex.run(encs, plan=whole)
+    assert not res2["big"].chunk_decoded
+    np.testing.assert_array_equal(np.asarray(res2["big"].array),
+                                  P.decode_np(encs["big"]))
+
+
+def test_whole_blob_transfer_is_honoured_with_chunk_decode():
+    """chunk_bytes=None means whole-blob transfer -- chunk_decode=True must not
+    smuggle a default chunk size back in (the baseline substitutes one for
+    reporting only, never for execution)."""
+    rng = np.random.default_rng(14)
+    enc = P.encode(P.make_plan("bitpack"),
+                   rng.integers(0, 3000, 400_000).astype(np.int32))
+    ex = StreamingExecutor(chunk_bytes=None, chunk_decode=True,
+                           cache=ProgramCache())
+    res = ex.run({"c": enc})["c"]
+    assert not res.chunk_decoded and res.decode_launches == 1
+    ep = ex.plan()
+    assert ep.decisions["c"].chunk_bytes is None
+    assert ep.decisions["c"].decode_mode == WHOLE
+
+
+def test_adaptive_guarantee_holds_with_chunk_bytes_none():
+    """chunk_bytes=None constrains the baselines too: every reported baseline
+    is a configuration the search may pick, so the documented
+    planned <= min(baselines) invariant survives the no-chunking constraint."""
+    rng = np.random.default_rng(16)
+    for _ in range(10):
+        profiles, cm = _synthetic_profiles(rng, int(rng.integers(2, 7)))
+        ep = plan_execution(profiles, cm, policy="adaptive", chunk_bytes=None,
+                            chunk_decode=True)
+        assert ep.modeled_makespan_s <= min(ep.baselines.values()) + 1e-9
+        assert all(d.chunk_bytes is None for d in ep.decisions.values())
+
+
+def test_explicit_policy_wins_over_pipeline_false():
+    rng = np.random.default_rng(17)
+    ex = StreamingExecutor(pipeline=False, chunk_bytes=None,
+                           cache=ProgramCache())
+    for n in ("a", "b"):
+        ex.compile(n, P.encode(P.make_plan("bitpack"),
+                               rng.integers(0, 99, 4_000).astype(np.int32)))
+    assert ex.plan().policy == "fifo"             # constructor default degrades
+    assert ex.plan(policy="johnson").policy == "johnson"   # explicit arg wins
+
+
+def test_run_rejects_plan_missing_columns():
+    rng = np.random.default_rng(15)
+    mk = lambda: P.encode(P.make_plan("bitpack"),
+                          rng.integers(0, 100, 5_000).astype(np.int32))
+    ex = StreamingExecutor(chunk_bytes=None, cache=ProgramCache())
+    ex.compile("a", mk())
+    stale = ex.plan()
+    with pytest.raises(ValueError, match="does not cover"):
+        ex.run({"a": ex._encoded["a"], "b": mk()}, plan=stale)
+
+
+def test_executor_feeds_actuals_back_into_cost_model():
+    """CostModel predictions tighten after a measured run (EWMA feedback)."""
+    rng = np.random.default_rng(12)
+    encs = {f"c{i}": P.encode(P.make_plan("bitpack"),
+                              rng.integers(0, 1000, 50_000).astype(np.int32))
+            for i in range(3)}
+    ex = StreamingExecutor(chunk_bytes=8192, cache=ProgramCache())
+    for n, e in encs.items():
+        ex.compile(n, e)
+    cm = ex.cost_model
+    raw_pred = {n: cm.predict(n) for n in encs}
+    assert cm.n_observed == 0 and cm.transfer_scale == 1.0
+    results = ex.run(encs)
+    assert cm.n_observed == len(encs)
+    assert set(cm.measured) == set(encs)
+    # after observation, predictions ARE the measurements for seen columns...
+    for n, r in results.items():
+        assert cm.predict(n) == (r.transfer_s, r.decode_s)
+    # ...and the calibrated estimate for an UNSEEN same-shaped column moved
+    # toward wall-clock scale (CPU device_put is far slower than the chip model)
+    new = P.encode(P.make_plan("bitpack"),
+                   rng.integers(0, 1000, 50_000).astype(np.int32))
+    ex.compile("fresh", new)
+    fresh_pred = cm.predict("fresh")
+    meas_t = np.mean([r.transfer_s for r in results.values()])
+    raw_t = raw_pred["c0"][0]
+    assert (abs(np.log(fresh_pred[0] / meas_t))
+            < abs(np.log(raw_t / meas_t))), \
+        "calibrated transfer prediction must be tighter than the raw model"
+
+
+def test_cost_model_jobs_unit_consistency():
+    rng = np.random.default_rng(13)
+    profiles, cm = _synthetic_profiles(rng, 3)
+    names = list(profiles)
+    # all measured -> jobs reflect measurements exactly
+    jobs = cm.jobs(names)
+    for j in jobs:
+        assert (j.transfer_s, j.decompress_s) == cm.measured[j.name]
+    # one unmeasured -> every job switches to the calibrated estimate
+    del cm.measured[names[0]]
+    jobs = cm.jobs(names)
+    for j in jobs:
+        t, d = cm.raw_estimate(j.name)
+        assert j.transfer_s == pytest.approx(t * cm.transfer_scale)
+        assert j.decompress_s == pytest.approx(d * cm.decode_scale)
+
+
+def test_pipeline_policy_threads_through():
+    """ColumnPipeline(policy=...) reaches the executor; on the TPC-H Q1 column
+    set the adaptive plan's simulated makespan <= every fixed baseline."""
+    from repro.data.columns import TABLE2_PLANS
+    from repro.data.tpch import QUERY_COLUMNS, generate
+
+    cols = generate(scale=0.002, seed=3)
+    names = QUERY_COLUMNS[1]
+    from repro.data.loader import ColumnPipeline
+    pipe = ColumnPipeline({n: TABLE2_PLANS[n] for n in names},
+                          chunk_bytes="auto", policy="adaptive")
+    pipe.compress({n: cols[n] for n in names})
+    results = pipe.run()
+    for n in names:
+        np.testing.assert_array_equal(np.asarray(results[n].array), cols[n])
+    ep = pipe.plan()
+    assert isinstance(ep, ExecutionPlan) and ep.policy == "adaptive"
+    assert ep.modeled_makespan_s <= min(ep.baselines.values()) + 1e-9
