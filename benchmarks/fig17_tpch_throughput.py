@@ -14,9 +14,18 @@ compiles -- where the meta-as-constant scheme recompiled each one.
 
 The ``costmodel`` row streams each column's measured decode into the planner's
 ``CostModel`` and reports the per-column prediction error before vs after the
-EWMA calibration warms up -- the feedback loop fig19's planner schedules by."""
+EWMA calibration warms up -- the feedback loop fig19's planner schedules by.
+
+The ``cost_persistence`` row saves the warmed model and loads it into a FRESH
+``CostModel`` (a new process's planning state): predictions for the same column
+structures must come back from the persisted per-signature history, not the raw
+chip model.  The ``group_chunk`` row decodes each group-chunkable column
+(CHUNK_GROUP: ANS chunk grids here) whole vs group-boundary-streamed and
+asserts bit-equality -- the measured counterpart of what used to be model-only."""
 from __future__ import annotations
 
+import os
+import tempfile
 import time
 
 import jax
@@ -27,6 +36,8 @@ from repro.core import plan as P
 from repro.core.compiler import (ProgramCache, compile_blob, compile_decoder,
                                  device_buffers)
 from repro.core.costmodel import CostModel, profile_from
+from repro.core.executor import StreamingExecutor
+from repro.core.ir import CHUNK_GROUP
 from repro.data.columns import TABLE2_PLANS
 from repro.data.tpch import generate
 
@@ -88,6 +99,58 @@ def main(quick: bool = False) -> list[str]:
         "fig17/operand_reuse", 0.0,
         f"twin_columns={twins};new_compiles={stats['misses'] - misses_before};"
         f"hits={stats['hits']}"))
+    # --- cost-model persistence: a fresh model plans from saved history ---
+    fd, cache_path = tempfile.mkstemp(suffix=".json")
+    os.close(fd)
+    try:
+        cm.save(cache_path)
+        fresh = CostModel.load(cache_path)
+        hist_errs = []
+        for name in names:
+            enc = P.encode(TABLE2_PLANS[name], cols[name])
+            prog = compile_blob(enc, backend="jnp", fuse=True, cache=cache)
+            fresh.register(profile_from(name, enc, prog.graph))
+            t_meas, d_meas = cm.measured[name]
+            _, d_hist = fresh.predict(name)   # from persisted signature stats
+            hist_errs.append(abs(d_hist / max(d_meas, 1e-12) - 1.0))
+        rows.append(row(
+            "fig17/cost_persistence", 0.0,
+            f"signatures={len(fresh.sig_stats)};"
+            f"mean_err_from_history={float(np.mean(hist_errs)):.2f};"
+            f"n_observed={fresh.n_observed}"))
+    finally:
+        os.unlink(cache_path)
+    # --- group-boundary chunked decode, measured (CHUNK_GROUP columns) ---
+    from repro.core import costmodel as costmodel_mod
+    from repro.core.ir import group_chunk_layout
+
+    for name in names:
+        enc = P.encode(TABLE2_PLANS[name], cols[name])
+        lay = group_chunk_layout(compile_blob(enc, cache=cache).graph)
+        if lay is None:
+            continue
+        # span size from the column's own group geometry (~4 spans), so the
+        # row engages at every benchmark scale
+        bpg = costmodel_mod.group_bytes_per_group(lay, P.host_operands(enc))
+        cb = max(256, int(np.ceil(bpg * max(1, lay.n_groups // 4))))
+        ex = StreamingExecutor(chunk_bytes=cb, chunk_decode=True,
+                               cache=ProgramCache())
+        ex.compile(name, enc)
+        if ex.graph(name).chunkability != CHUNK_GROUP:
+            continue
+        if ex.chunk_schedule(name) is None:
+            continue
+        res = ex.run({name: enc})[name]        # cold: traces span programs
+        np.testing.assert_array_equal(np.asarray(res.array),
+                                      P.decode_np(enc), err_msg=name)
+        t0 = time.perf_counter()
+        res = ex.run({name: enc})[name]        # warm group-streamed wall-clock
+        t_group = time.perf_counter() - t0
+        rows.append(row(
+            f"fig17/group_chunk/{name}", t_group,
+            f"launches={res.decode_launches};spans={res.n_chunks};"
+            f"gbps={gbps(enc.plain_nbytes, max(t_group, 1e-9)):.2f};"
+            f"bit_exact=1"))
     return rows
 
 

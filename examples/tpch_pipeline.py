@@ -7,6 +7,7 @@ the JAX mini-engine.  Compares noCOMP / cascaded-baseline / ZipFlow movement cos
 Run:  PYTHONPATH=src python examples/tpch_pipeline.py [--scale 0.01]
 """
 import argparse
+import os
 import time
 
 import jax
@@ -15,6 +16,7 @@ import numpy as np
 
 from repro.data.queries import q1_engine, q6_engine
 from repro.core import plan as P
+from repro.core.costmodel import CostModel
 from repro.data.columns import TABLE2_PLANS
 from repro.data.loader import ColumnPipeline
 from repro.data.tpch import QUERY_COLUMNS, generate
@@ -24,8 +26,9 @@ ap.add_argument("--scale", type=float, default=0.01)
 ap.add_argument("--chunk-kib", type=int, default=1024,
                 help="streaming transfer chunk size (KiB); 0 = whole-blob")
 ap.add_argument("--chunk-decode", action="store_true",
-                help="launch one decode per transferred chunk (element-chunkable "
-                     "columns; others fall back to whole-column decode)")
+                help="launch one decode per transferred chunk (element- and "
+                     "group-chunkable columns; others fall back to "
+                     "whole-column decode)")
 ap.add_argument("--policy", default="chunk-johnson",
                 choices=["fifo", "johnson", "chunk-johnson", "adaptive"],
                 help="scheduling policy for the execution planner; 'adaptive' "
@@ -34,8 +37,23 @@ ap.add_argument("--policy", default="chunk-johnson",
 ap.add_argument("--auto-chunks", action="store_true",
                 help="let the planner size chunks per column (overrides "
                      "--chunk-kib)")
+ap.add_argument("--cost-cache", default="",
+                help="path to a persisted CostModel (JSON): loaded before "
+                     "planning so a fresh process plans from calibrated "
+                     "history, saved back (updated) on exit")
 args = ap.parse_args()
 chunk_bytes = "auto" if args.auto_chunks else (args.chunk_kib * 1024 or None)
+
+cost_model = None
+if args.cost_cache:
+    if os.path.exists(args.cost_cache):
+        cost_model = CostModel.load(args.cost_cache)
+        print(f"cost cache: loaded {args.cost_cache} "
+              f"({len(cost_model.sig_stats)} signatures, "
+              f"{cost_model.n_observed} prior observations)")
+    else:
+        cost_model = CostModel()
+        print(f"cost cache: {args.cost_cache} not found, starting cold")
 
 cols = generate(scale=args.scale, seed=0)
 print(f"generated TPC-H-like tables at scale {args.scale} "
@@ -48,7 +66,8 @@ for q, engine in ((1, q1_engine), (6, q6_engine)):
 
     pipe = ColumnPipeline({n: TABLE2_PLANS[n] for n in names},
                           chunk_bytes=chunk_bytes,
-                          chunk_decode=args.chunk_decode, policy=args.policy)
+                          chunk_decode=args.chunk_decode, policy=args.policy,
+                          cost_model=cost_model)
     ratios = pipe.compress(qcols)
     comp_bytes = sum(pipe._encoded[n].compressed_nbytes for n in names)
     t0 = time.perf_counter()
@@ -90,3 +109,9 @@ for q, engine in ((1, q1_engine), (6, q6_engine)):
           + " ".join(f"{k}={v * 1e3:.1f}ms" for k, v in sorted(ep.baselines.items())))
     for line in ep.explain().splitlines():
         print(f"     {line}")
+
+if args.cost_cache and cost_model is not None:
+    cost_model.save(args.cost_cache)
+    print(f"\ncost cache: saved {args.cost_cache} "
+          f"({len(cost_model.sig_stats)} signatures, "
+          f"{cost_model.n_observed} observations)")

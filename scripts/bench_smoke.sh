@@ -4,10 +4,17 @@
 # BENCH_fig19.json, so every PR leaves a machine-readable perf datapoint
 # (wall-clock is CPU-noisy; the planned-vs-baseline fields are deterministic
 # given the measured timings and are the regression-relevant signal).
+#
+# Guards (exit non-zero, failing CI loudly):
+#   * planned makespan must not exceed the FIFO baseline on any row -- the
+#     adaptive planner's documented invariant under the shared model;
+#   * the GP-column Zc_run row (measured group-boundary chunked decode over
+#     Group-Parallel / Non-Parallel columns) must be present.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} python - <<'EOF'
 import json
+import sys
 
 from benchmarks import fig19_e2e
 
@@ -21,9 +28,29 @@ for line in rows:
         out[key] = {k: fields[k] for k in
                     ("Z_run", "Zc_run", "planned", "measured",
                      "plan_fifo", "plan_johnson", "auto_chunk_kib",
-                     "chunk_cols", "launches") if k in fields}
+                     "chunk_cols", "launches", "gp_cols", "gp_chunk_cols")
+                    if k in fields}
+    elif key == "gp_columns":
+        out["gp_columns"] = {k: fields[k] for k in
+                             ("Zc_run", "gp_cols", "gp_chunk_cols")
+                             if k in fields}
+failures = []
+for key, fields in out.items():
+    if not key.startswith("q"):
+        continue
+    planned = float(fields["planned"].rstrip("s"))
+    fifo = float(fields["plan_fifo"].rstrip("s"))
+    if planned > fifo * (1 + 1e-6):
+        failures.append(f"{key}: planned {planned:.6f}s > FIFO {fifo:.6f}s")
+if "gp_columns" not in out:
+    failures.append("missing GP-column Zc_run row")
 with open("BENCH_fig19.json", "w") as f:
     json.dump(out, f, indent=2, sort_keys=True)
     f.write("\n")
-print(f"bench-smoke: wrote BENCH_fig19.json ({len(out)} queries)")
+print(f"bench-smoke: wrote BENCH_fig19.json ({len(out)} rows)")
+if failures:
+    print("bench-smoke: GUARD FAILED:\n  " + "\n  ".join(failures),
+          file=sys.stderr)
+    sys.exit(1)
+print("bench-smoke: planned <= FIFO on every row; GP Zc_run recorded")
 EOF

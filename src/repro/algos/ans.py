@@ -59,13 +59,15 @@ def normalize_freqs(counts: np.ndarray) -> np.ndarray:
     return freqs
 
 
-def encode_chunks_np(syms: np.ndarray, freq: np.ndarray, cum: np.ndarray
-                     ) -> tuple[np.ndarray, np.ndarray]:
+def encode_chunks_np(syms: np.ndarray, freq: np.ndarray, cum: np.ndarray,
+                     return_wcount: bool = False):
     """Vectorized (across chunks) rANS encode.
 
     syms: (n_chunks, chunk_size) uint8.  Returns (streams, states):
     streams (max_words, n_chunks) uint16 in *decoder consumption order*, states
-    (n_chunks,) uint32 final encoder states (= decoder initial states).
+    (n_chunks,) uint32 final encoder states (= decoder initial states).  With
+    ``return_wcount`` also returns the actual per-chunk word counts (the stripe
+    pads every chunk to the maximum; wcount is the pre-padding truth).
     """
     n_chunks, cs = syms.shape
     x = np.full(n_chunks, L, dtype=np.uint64)
@@ -91,6 +93,8 @@ def encode_chunks_np(syms: np.ndarray, freq: np.ndarray, cum: np.ndarray
     streams = np.where(take >= 0,
                        emitted[np.clip(take, 0, cs), lanes[None, :]],
                        np.uint16(0)).astype(np.uint16)
+    if return_wcount:
+        return streams, x.astype(np.uint32), wcount
     return streams, x.astype(np.uint32)
 
 
@@ -146,6 +150,13 @@ def decode_chunks_jnp(streams: jnp.ndarray, states: jnp.ndarray, sym: jnp.ndarra
 class AnsCodec:
     name = "ans"
     pattern = "np"
+    # host-side planning metadata: actual per-chunk compressed word counts (the
+    # per-group compressed-byte offsets are cumsum(group_words) * 2).  Identified
+    # by dtype/shape only, never by value, and never transferred.  Not yet read
+    # by the planner -- it prices the max_words-padded stripe, which is what
+    # actually transfers today; the counts exist for the unpadded-stripe layout
+    # (ROADMAP), where real per-group offsets replace the padding.
+    host_meta = ("group_words",)
 
     def encode(self, arr: np.ndarray, chunk_size: int = 4096,
                **_: Any) -> tuple[dict[str, np.ndarray], dict]:
@@ -159,13 +170,15 @@ class AnsCodec:
         freq = normalize_freqs(counts)
         cum = np.concatenate([[0], np.cumsum(freq)[:-1]])
         sym_tab = np.repeat(np.arange(256, dtype=np.uint8), freq)
-        streams, states = encode_chunks_np(padded.reshape(n_chunks, cs), freq, cum)
+        streams, states, wcount = encode_chunks_np(
+            padded.reshape(n_chunks, cs), freq, cum, return_wcount=True)
         return ({"streams": streams, "states": states,
                  "sym_tab": sym_tab.astype(np.uint8),
                  "freq_tab": freq.astype(np.uint16),
                  "cum_tab": cum.astype(np.uint16)},
                 {"chunk_size": cs, "n_chunks": n_chunks, "n_bytes": n_bytes,
-                 "itemsize": int(np.dtype(arr.dtype).itemsize)})
+                 "itemsize": int(np.dtype(arr.dtype).itemsize),
+                 "group_words": wcount.astype(np.int64)})
 
     def decode_np(self, bufs: dict[str, np.ndarray], meta: dict, n: int,
                   dtype: Any) -> np.ndarray:
@@ -188,7 +201,8 @@ class AnsCodec:
             sym_tab=buf_names["sym_tab"], freq_tab=buf_names["freq_tab"],
             cum_tab=buf_names["cum_tab"], chunk_size=int(meta["chunk_size"]),
             n_chunks=int(meta["n_chunks"]), out=bytes_name, n_out=n_bytes,
-            out_dtype=jnp.uint8, name="ans-decode")]
+            out_dtype=jnp.uint8, host_group_words=meta.get("group_words"),
+            name="ans-decode")]
         if itemsize > 1:
             out_dt = (jnp.dtype(enc.dtype)
                       if np.dtype(enc.dtype).itemsize <= 4 else jnp.int32)

@@ -48,14 +48,17 @@ def deltastride_encode_np(flat: np.ndarray):
 class DeltaStrideCodec:
     name = "deltastride"
     pattern = "gp"
+    # per-group output offsets, host planning data (see RleCodec.host_meta)
+    host_meta = ("group_presum",)
 
     def encode(self, arr: np.ndarray, **_: Any) -> tuple[dict[str, np.ndarray], dict]:
         flat = np.asarray(arr).reshape(-1)
         starts, strides, counts = deltastride_encode_np(flat)
+        presum = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
         return ({"starts": starts.astype(np.int32),
                  "strides": strides.astype(np.int32),
                  "counts": counts.astype(np.int32)},
-                {"n_groups": int(counts.size)})
+                {"n_groups": int(counts.size), "group_presum": presum})
 
     def decode_np(self, bufs: dict[str, np.ndarray], meta: dict, n: int,
                   dtype: Any) -> np.ndarray:
@@ -91,7 +94,9 @@ class DeltaStrideCodec:
             value_specs=(BufSpec("tile"), BufSpec("tile")),
             value_fn=value_fn, map_fn=map_fn,
             out=out_name, n_out=enc.n, out_dtype=out_dt,
-            n_groups=int(enc.meta["n_groups"]), name="deltastride-expand")
+            n_groups=int(enc.meta["n_groups"]),
+            host_group_presum=enc.meta.get("group_presum"),
+            name="deltastride-expand")
         gp._identity_values = False  # type: ignore[attr-defined]
         return [
             Aux(fn=presum, inputs=(buf_names["counts"],), out=presum_name,

@@ -27,12 +27,18 @@ def rle_encode_np(flat: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
 class RleCodec:
     name = "rle"
     pattern = "gp"
+    # host-side planning metadata: per-group output offsets (and thus, through the
+    # 1-row-per-group leaf layout, per-group compressed-byte offsets).  Identified
+    # like a lifted operand -- by dtype/shape, never by value -- so blobs differing
+    # only in run structure still share one compiled program (see ir._meta_tokens).
+    host_meta = ("group_presum",)
 
     def encode(self, arr: np.ndarray, **_: Any) -> tuple[dict[str, np.ndarray], dict]:
         flat = np.asarray(arr).reshape(-1)
         values, counts = rle_encode_np(flat)
+        presum = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
         return ({"values": values, "counts": counts.astype(np.int32)},
-                {"n_groups": int(values.size)})
+                {"n_groups": int(values.size), "group_presum": presum})
 
     def decode_np(self, bufs: dict[str, np.ndarray], meta: dict, n: int,
                   dtype: Any) -> np.ndarray:
@@ -58,7 +64,8 @@ class RleCodec:
             presum=presum_name, value_inputs=(buf_names["values"],),
             value_specs=(BufSpec("tile"),), value_fn=value_fn, map_fn=map_fn,
             out=out_name, n_out=enc.n, out_dtype=out_dt,
-            n_groups=int(enc.meta["n_groups"]), name="rle-expand")
+            n_groups=int(enc.meta["n_groups"]),
+            host_group_presum=enc.meta.get("group_presum"), name="rle-expand")
         gp._identity_values = True  # type: ignore[attr-defined]
         return [
             Aux(fn=presum, inputs=(buf_names["counts"],), out=presum_name,

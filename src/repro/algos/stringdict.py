@@ -26,6 +26,8 @@ _TOKEN_RE = re.compile(rb"[^ .]*[ .]|[^ .]+$")
 class StringDictCodec:
     name = "stringdict"
     pattern = "gp"
+    # per-token output byte offsets, host planning data (see RleCodec.host_meta)
+    host_meta = ("group_presum",)
 
     def encode(self, arr: np.ndarray, **_: Any) -> tuple[dict[str, np.ndarray], dict]:
         raw = np.ascontiguousarray(np.asarray(arr)).view(np.uint8).reshape(-1)
@@ -40,10 +42,13 @@ class StringDictCodec:
         lengths = np.fromiter((len(w) for w in words), dtype=np.int32,
                               count=len(words))
         dict_offsets = np.concatenate([[0], np.cumsum(lengths)]).astype(np.int32)
+        presum = np.concatenate(
+            [[0], np.cumsum(lengths[index], dtype=np.int64)]).astype(np.int64)
         return ({"index": index, "dict_chars": dict_chars,
                  "dict_offsets": dict_offsets},
                 {"n_tokens": len(tokens), "n_words": len(words),
-                 "n_bytes": raw.size, "itemsize": int(np.dtype(arr.dtype).itemsize)})
+                 "n_bytes": raw.size, "itemsize": int(np.dtype(arr.dtype).itemsize),
+                 "group_presum": presum})
 
     def decode_np(self, bufs: dict[str, np.ndarray], meta: dict, n: int,
                   dtype: Any) -> np.ndarray:
@@ -85,6 +90,7 @@ class StringDictCodec:
             value_specs=(BufSpec("tile"),), value_fn=value_fn, map_fn=map_fn,
             out=out_name, n_out=n_bytes, out_dtype=jnp.uint8, n_groups=n_tokens,
             extra_inputs=(buf_names["dict_chars"], buf_names["dict_offsets"]),
+            host_group_presum=enc.meta.get("group_presum"),
             name="stringdict-expand")
         gp._identity_values = True  # type: ignore[attr-defined]
         return [

@@ -30,8 +30,8 @@ import jax.numpy as jnp
 from repro.core import fusion as fusion_mod
 from repro.core import plan as plan_mod
 from repro.core.geometry import DEFAULT_CHIP, Geometry, chip as chip_spec, native_config
-from repro.core.ir import DecodeGraph, element_chunk_layout
-from repro.core.patterns import Aux, Ctx, Stage
+from repro.core.ir import DecodeGraph, element_chunk_layout, group_chunk_layout
+from repro.core.patterns import Aux, Ctx, GroupParallel, Stage
 
 
 def _run_stage(st: Stage, bufs: dict[str, jnp.ndarray], backend: str,
@@ -180,6 +180,146 @@ def compile_chunk_graph(graph: DecodeGraph, chunk_elems: int,
     return ChunkProgram(fn=fn, graph=graph, chunk_elems=int(chunk_elems), jit=jit)
 
 
+# ------------------------------------------------------- group-boundary chunks
+
+@dataclasses.dataclass
+class PrologueProgram:
+    """One-shot decode of everything upstream of a graph's group stage: presum
+    auxes and nested child decodes, over whole-resident leaves.  Returns the
+    resident intermediates the per-span launches gather from."""
+
+    fn: Callable[[dict[str, jnp.ndarray]], dict[str, jnp.ndarray]]
+    graph: DecodeGraph
+    jit: bool = True
+    calls: int = 0
+
+    def __call__(self, bufs: dict[str, jnp.ndarray]) -> dict[str, jnp.ndarray]:
+        self.calls += 1
+        return self.fn(bufs)
+
+
+def compile_group_prologue(graph: DecodeGraph, jit: bool = True
+                           ) -> PrologueProgram | None:
+    """Compile the prologue of a group-chunkable graph (None when the group
+    stage is first and nothing precedes it, e.g. plain ANS)."""
+    layout = group_chunk_layout(graph)
+    if layout is None:
+        raise ValueError(f"graph {graph.nesting!r} is not group-chunkable")
+    if layout.stage_index == 0 or not layout.resident:
+        return None
+    pro = graph.stages[: layout.stage_index]
+    needed = layout.resident
+
+    def run_prologue(bufs: dict[str, jnp.ndarray]) -> dict[str, jnp.ndarray]:
+        env = dict(bufs)
+        for st in pro:
+            env[st.out] = st.run_jnp(env)
+        return {nm: env[nm] for nm in needed}
+
+    fn = jax.jit(run_prologue) if jit else run_prologue
+    return PrologueProgram(fn=fn, graph=graph, jit=jit)
+
+
+@dataclasses.dataclass
+class GroupChunkProgram:
+    """Per-span decode program for group-boundary chunking: one launch decodes
+    the ``g_size`` whole groups starting at group ``g_start``, producing
+    ``pad_elems`` output elements of which the first ``n_valid`` are real
+    (uneven group sizes pad body launches to a shared shape; the executor trims
+    before concatenating).  ``out_start``/``g_start``/``n_valid`` are traced
+    scalars, so ONE program serves every body span (and a second the tail)."""
+
+    fn: Callable[..., jnp.ndarray]
+    graph: DecodeGraph
+    g_size: int
+    pad_elems: int
+    jit: bool = True
+    calls: int = 0
+
+    def __call__(self, bufs: dict[str, jnp.ndarray], out_start, g_start,
+                 n_valid) -> jnp.ndarray:
+        self.calls += 1
+        return self.fn(bufs, out_start, g_start, n_valid)
+
+
+def compile_group_chunk_graph(graph: DecodeGraph, g_size: int, pad_elems: int,
+                              jit: bool = True) -> GroupChunkProgram:
+    """Compile the per-span variant of a group-chunkable graph.
+
+    The group stage re-evaluates its closures at the span's GLOBAL output
+    indices: a Group-Parallel span searches the whole-resident presum (so group
+    id and in-group position are exactly the whole-column values) and gathers
+    sliced value leaves at span-local offsets; a Non-Parallel span lockstep-
+    decodes its own column slice of the stripe.  Trailing Fully-Parallel stages
+    use the element path's addressing.  Bitwise equality with whole-column
+    decode holds by construction: same closures, same global indices, exact
+    group-aligned slices."""
+    layout = group_chunk_layout(graph)
+    if layout is None:
+        raise ValueError(f"graph {graph.nesting!r} is not group-chunkable")
+    gst = graph.stages[layout.stage_index]
+    post = graph.stages[layout.stage_index + 1:]
+    g_size = int(g_size)
+    pad_elems = int(pad_elems)
+
+    def decode_span(bufs: dict[str, jnp.ndarray], out_start, g_start,
+                    n_valid) -> jnp.ndarray:
+        env = dict(bufs)
+        j = jnp.arange(pad_elems, dtype=jnp.int32)
+        # clamp padding lanes to the last valid element: always in-bounds, and
+        # the executor trims [:n_valid] before concatenation
+        out_idx = out_start + jnp.minimum(j, jnp.maximum(n_valid - 1, 0))
+        if isinstance(gst, GroupParallel):
+            presum = env[gst.presum]
+            g = jnp.searchsorted(presum, out_idx, side="right").astype(
+                jnp.int32) - 1
+            pos = out_idx - presum[g]
+            starts = tuple(
+                (g_start * spec.num) // spec.den if nm in layout.sliced else 0
+                for nm, spec in zip(gst.value_inputs, gst.value_specs))
+            ctx = Ctx(out_idx=out_idx, starts=starts)
+            gval = gst.value_fn(ctx, g, *[env[nm] for nm in gst.value_inputs])
+            extras = [env[nm] for nm in gst.extra_inputs]
+            out = gst.map_fn(ctx, gval, pos, g, *extras).astype(gst.out_dtype)
+        else:                                   # NonParallel span
+            from repro.algos.ans import decode_chunks_jnp  # avoids import cycle
+
+            syms = decode_chunks_jnp(
+                env[gst.streams], env[gst.states], env[gst.sym_tab],
+                env[gst.freq_tab], env[gst.cum_tab], gst.chunk_size)
+            flat = syms.reshape(-1)             # g_size * chunk_size local bytes
+            byte0 = g_start * gst.chunk_size
+            if gst.out_map is not None:
+                bctx = Ctx(out_idx=byte0 + jnp.arange(flat.shape[0],
+                                                      dtype=jnp.int32),
+                           starts=(None,))
+                flat = gst.out_map(bctx, flat)
+            out = flat.astype(gst.out_dtype)
+            if not post:                        # final out must be pad-shaped
+                out = out[jnp.minimum(j, jnp.maximum(n_valid - 1, 0))]
+        env[gst.out] = out
+        produced = {gst.out}
+        for st in post:
+            starts = []
+            for nm, spec in zip(st.inputs, st.specs):
+                if spec.kind == "full":
+                    starts.append(None)
+                elif nm in produced:
+                    # local intermediate whose global origin is the span start
+                    starts.append((out_start * spec.num) // spec.den)
+                else:
+                    starts.append(None)
+            ctx = Ctx(out_idx=out_idx, starts=tuple(starts))
+            out = st.fn(ctx, *[env[nm] for nm in st.inputs]).astype(st.out_dtype)
+            env[st.out] = out
+            produced.add(st.out)
+        return out
+
+    fn = jax.jit(decode_span) if jit else decode_span
+    return GroupChunkProgram(fn=fn, graph=graph, g_size=g_size,
+                             pad_elems=pad_elems, jit=jit)
+
+
 def _geometry_key(geometry: dict[str, Geometry] | None):
     if geometry is None:
         return None
@@ -272,6 +412,27 @@ class ProgramCache:
         key = (graph.signature, "chunk", int(chunk_elems), jit)
         return self._get(key, lambda: compile_chunk_graph(
             graph, chunk_elems, jit=jit))
+
+    def get_group_chunk(self, graph: DecodeGraph, g_size: int, pad_elems: int,
+                        jit: bool = True) -> GroupChunkProgram:
+        """Cached group-span program: one per (structure, groups-per-span,
+        padded output shape) -- every body span of a column (and of every
+        same-signature column with the same span geometry) shares one trace."""
+        key = (graph.signature, "gchunk", int(g_size), int(pad_elems), jit)
+        return self._get(key, lambda: compile_group_chunk_graph(
+            graph, g_size, pad_elems, jit=jit))
+
+    def get_group_prologue(self, graph: DecodeGraph,
+                           jit: bool = True) -> PrologueProgram | None:
+        """Cached prologue program for a group-chunkable graph; None when the
+        group stage is first (nothing upstream to decode)."""
+        layout = group_chunk_layout(graph)
+        if layout is None:
+            raise ValueError(f"graph {graph.nesting!r} is not group-chunkable")
+        if layout.stage_index == 0 or not layout.resident:
+            return None
+        key = (graph.signature, "gprologue", jit)
+        return self._get(key, lambda: compile_group_prologue(graph, jit=jit))
 
 
 # Process-wide default cache: the ``compile_decoder`` shim and every executor that

@@ -26,13 +26,15 @@ executed chunk counts.
 from __future__ import annotations
 
 import dataclasses
+import json
 import math
+import os
 from typing import Mapping, Sequence
 
 import numpy as np
 
 from repro.core import scheduler
-from repro.core.geometry import DEFAULT_CHIP, chip as chip_spec
+from repro.core.geometry import DEFAULT_CHIP, chip as chip_spec, native_subtile
 
 
 def rows_per_chunk(shape0: int, nbytes: int, chunk_bytes: int) -> int:
@@ -52,6 +54,43 @@ def aligned_chunk_elems(chunk_bytes: int, per_elem_bytes: float,
     return max(align, elems)
 
 
+def groups_per_chunk(chunk_bytes: int, bytes_per_group: float,
+                     align: int) -> int:
+    """Whole groups per decode span: ~chunk_bytes of streamed group bytes,
+    rounded to the group-boundary alignment -- the group-path sibling of
+    ``aligned_chunk_elems``, shared by ``executor._build_schedule`` and
+    ``ColumnProfile.decode_chunking`` so planned span counts equal executed."""
+    g = int(chunk_bytes / max(bytes_per_group, 1e-9)) // align * align
+    return max(align, g)
+
+
+# output-pad granularity for uneven group spans: body launches pad to a shared
+# lane-aligned shape so ONE compiled program serves every body span
+GROUP_PAD_ELEMS = 128
+
+
+def pad_group_elems(elems: int) -> int:
+    return max(GROUP_PAD_ELEMS,
+               -(-int(elems) // GROUP_PAD_ELEMS) * GROUP_PAD_ELEMS)
+
+
+def group_bytes_per_group(layout, ops: Mapping[str, np.ndarray]) -> float:
+    """Streamed (sliced-leaf) compressed bytes per group for a GroupChunkLayout:
+    axis-0 leaves contribute ``num/den`` rows per group, axis-1 leaves (the ANS
+    stripe) one column per group.  Shared by profile_from (predicts) and the
+    executor's schedule builder (slices)."""
+    total = 0.0
+    for nm, spec in layout.sliced.items():
+        arr = np.asarray(ops[nm])
+        if layout.axes.get(nm, 0) == 1:
+            total += float(arr.shape[0]) * arr.dtype.itemsize
+        else:
+            row = arr.dtype.itemsize * (int(np.prod(arr.shape[1:]))
+                                        if arr.ndim > 1 else 1)
+            total += spec.num / spec.den * row
+    return total
+
+
 @dataclasses.dataclass(frozen=True)
 class ColumnProfile:
     """Planner-facing static summary of one compressed column."""
@@ -68,6 +107,16 @@ class ColumnProfile:
     n_out: int = 0
     per_elem_bytes: float = 0.0   # compressed tile bytes per output element
     align: int = 1                # output-element chunk-boundary granularity
+    # group-chunkable decode (ir.GroupChunkLayout: GP expansions, ANS chunk grids)
+    group_chunkable: bool = False
+    n_groups: int = 0
+    group_bytes: float = 0.0      # streamed (sliced-leaf) bytes per group
+    group_align: int = 1          # group-boundary alignment
+    pattern: str = "fp"           # dominant stage pattern ("fp" | "gp" | "np")
+    # per-group output offsets (len n_groups+1), planning data -- excluded from
+    # equality so same-structure profiles with different run data still compare
+    group_out_presum: np.ndarray | None = dataclasses.field(
+        default=None, compare=False, repr=False)
 
     def n_transfer_chunks(self, chunk_bytes: int | None) -> int:
         """Transfer pieces ``split_chunks`` issues for this column's leaves.
@@ -84,44 +133,119 @@ class ColumnProfile:
                                                        chunk_bytes))
         return max(1, total)
 
+    def _group_spans(self, chunk_bytes: int) -> tuple[int, int] | None:
+        """(groups_per_span, n_spans) for group-boundary chunking, or None when
+        the column decodes whole -- mirrors ``StreamingExecutor._build_schedule``."""
+        if (not self.group_chunkable or self.n_groups <= 1
+                or self.group_bytes <= 0):
+            return None
+        G = groups_per_chunk(chunk_bytes, self.group_bytes, self.group_align)
+        if G >= self.n_groups:
+            return None
+        return G, math.ceil(self.n_groups / G)
+
     def decode_chunking(self, chunk_bytes: int | None) -> tuple[int, float]:
         """(n_chunks, tail_frac) the per-chunk decode path produces, mirroring
         ``StreamingExecutor._build_schedule``; (1, 1.0) when the column decodes
         whole (not chunkable, chunking off, or one chunk covers the column)."""
-        if (not self.chunkable or chunk_bytes is None or self.n_out <= 0
-                or self.per_elem_bytes <= 0):
+        if chunk_bytes is None:
             return 1, 1.0
-        chunk_elems = aligned_chunk_elems(chunk_bytes, self.per_elem_bytes,
-                                          self.align)
-        if chunk_elems >= self.n_out:
+        if self.chunkable and self.n_out > 0 and self.per_elem_bytes > 0:
+            chunk_elems = aligned_chunk_elems(chunk_bytes, self.per_elem_bytes,
+                                              self.align)
+            if chunk_elems >= self.n_out:
+                return 1, 1.0
+            k = math.ceil(self.n_out / chunk_elems)
+            tail = self.n_out - (k - 1) * chunk_elems
+            return k, tail / chunk_elems
+        spans = self._group_spans(chunk_bytes)
+        if spans is None:
             return 1, 1.0
-        k = math.ceil(self.n_out / chunk_elems)
-        tail = self.n_out - (k - 1) * chunk_elems
-        return k, tail / chunk_elems
+        G, k = spans
+        ps = self.group_out_presum
+        if ps is None or k <= 1:
+            return k, 1.0
+        bounds = list(range(0, self.n_groups, G)) + [self.n_groups]
+        sizes = np.diff(np.asarray(ps, dtype=np.float64)[bounds])
+        body = float(np.mean(sizes[:-1])) if len(sizes) > 1 else float(sizes[0])
+        tail = float(sizes[-1]) / max(body, 1e-9)
+        return k, float(min(1.0, max(tail, 1e-3)))
+
+    def chunk_weights(self, chunk_bytes: int | None
+                      ) -> tuple[tuple[float, float], ...]:
+        """Per-chunk (transfer, decode) weight pairs for ``simulate_stream``'s
+        uneven-chunk model, or () for the uniform-body + tail default.
+
+        Group spans are genuinely uneven: transfer follows the streamed bytes
+        per span (whole-resident leaves all land ahead of span 0), decode
+        follows each span's output elements from the group-boundary prefix
+        sums.  Element chunks keep the closed-form uniform+tail model."""
+        if chunk_bytes is None:
+            return ()
+        spans = self._group_spans(chunk_bytes)
+        if spans is None or self.group_out_presum is None:
+            return ()
+        G, k = spans
+        if k <= 1:
+            return ()
+        ps = np.asarray(self.group_out_presum, dtype=np.float64)
+        bounds = list(range(0, self.n_groups, G)) + [self.n_groups]
+        out_sizes = np.diff(ps[bounds])
+        g_sizes = np.diff(bounds).astype(np.float64)
+        whole_bytes = max(
+            0.0, self.compressed_nbytes - self.group_bytes * self.n_groups)
+        transfer = g_sizes * self.group_bytes
+        transfer[0] += whole_bytes
+        t_tot = float(transfer.sum()) or 1.0
+        d_tot = float(out_sizes.sum()) or 1.0
+        return tuple((float(t) / t_tot, float(d) / d_tot)
+                     for t, d in zip(transfer, out_sizes))
 
 
 def profile_from(name: str, enc, graph) -> ColumnProfile:
     """Build a ColumnProfile from an Encoded blob + its DecodeGraph."""
     from repro.core import plan as plan_mod
-    from repro.core.ir import element_chunk_layout
+    from repro.core.ir import element_chunk_layout, group_chunk_layout
+    from repro.core.patterns import GroupParallel, NonParallel
 
     flat = plan_mod.flat_buffers(enc)
     leaves = tuple((int(v.shape[0]) if v.ndim else 1, int(v.nbytes))
                    for v in flat.values())
     layout = element_chunk_layout(graph)
     per_elem, align = 0.0, 1
+    glayout = None
+    n_groups, g_bytes, g_align, presum = 0, 0.0, 1, None
+    pattern = "fp"
     if layout is not None:
         ops = plan_mod.host_operands(enc)
         for nm, spec in layout.tiled.items():
             num = int(ops[spec.num_op][0]) if spec.num_op else int(spec.num)
             per_elem += num / spec.den * np.dtype(ops[nm].dtype).itemsize
         align = int(layout.align)
+    else:
+        glayout = group_chunk_layout(graph)
+        if glayout is not None:
+            ops = plan_mod.host_operands(enc)
+            n_groups = int(glayout.n_groups)
+            g_bytes = group_bytes_per_group(glayout, ops)
+            g_align = int(glayout.align_groups)
+            presum = np.asarray(glayout.group_presum, dtype=np.int64)
+            pattern = glayout.kind
+        else:
+            for st in graph.stages:
+                if isinstance(st, NonParallel):
+                    pattern = "np"
+                elif isinstance(st, GroupParallel) and pattern == "fp":
+                    pattern = "gp"
     return ColumnProfile(
         name=name, compressed_nbytes=int(enc.compressed_nbytes),
         plain_nbytes=int(enc.plain_nbytes), n_kernels=int(graph.n_kernels),
         signature=graph.signature, leaves=leaves,
         chunkable=layout is not None, n_out=int(graph.n_out),
-        per_elem_bytes=per_elem, align=align)
+        per_elem_bytes=per_elem, align=align,
+        group_chunkable=glayout is not None, n_groups=n_groups,
+        group_bytes=g_bytes, group_align=g_align, pattern=pattern,
+        group_out_presum=presum)
 
 
 class CostModel:
@@ -142,6 +266,10 @@ class CostModel:
         self.n_observed = 0
         self.profiles: dict[str, ColumnProfile] = {}
         self.measured: dict[str, tuple[float, float]] = {}
+        # per-SIGNATURE running means of measured (transfer_s, decode_s): the
+        # persistent half of the feedback loop -- a fresh process planning the
+        # same column structures starts from history (``save``/``load``)
+        self.sig_stats: dict[str, dict[str, float]] = {}
 
     # -------------------------------------------------------------- registry
     def register(self, profile: ColumnProfile) -> None:
@@ -162,10 +290,16 @@ class CostModel:
         return transfer, decode
 
     def predict(self, name: str) -> tuple[float, float]:
-        """Best available (transfer_s, decode_s): measured when we have it,
-        EWMA-calibrated chip model otherwise."""
+        """Best available (transfer_s, decode_s): measured this process when we
+        have it, the signature's persisted running mean (same structure = same
+        shapes, so the history is directly comparable wall-clock) otherwise,
+        EWMA-calibrated chip model as the fallback."""
         if name in self.measured:
             return self.measured[name]
+        p = self.profiles.get(name)
+        if p is not None and p.signature in self.sig_stats:
+            s = self.sig_stats[p.signature]
+            return float(s["transfer_s"]), float(s["decode_s"])
         t, d = self.raw_estimate(name)
         return t * self.transfer_scale, d * self.decode_scale
 
@@ -182,6 +316,13 @@ class CostModel:
         self.measured[name] = (float(transfer_s), float(decode_s))
         if name not in self.profiles:
             return
+        sig = self.profiles[name].signature
+        if sig:
+            s = self.sig_stats.setdefault(
+                sig, {"n": 0.0, "transfer_s": 0.0, "decode_s": 0.0})
+            s["n"] += 1.0
+            s["transfer_s"] += (transfer_s - s["transfer_s"]) / s["n"]
+            s["decode_s"] += (decode_s - s["decode_s"]) / s["n"]
         raw_t, raw_d = self.raw_estimate(name)
         a = self.alpha if self.n_observed else 1.0   # first sample snaps
         if raw_t > 0 and transfer_s > 0:
@@ -189,6 +330,84 @@ class CostModel:
         if raw_d > 0 and decode_s > 0:
             self.decode_scale += a * (decode_s / raw_d - self.decode_scale)
         self.n_observed += 1
+
+    # -------------------------------------------------------- candidate ladder
+    def chunk_ladder(self, p: ColumnProfile, max_candidates: int = 12
+                     ) -> tuple[int, ...]:
+        """Per-column chunk-size candidates (bytes), tied to this column's
+        decode geometry instead of a fixed 64KiB-4MiB ladder.
+
+        Element-chunkable columns snap to kernel tile multiples: doublings of
+        lcm(boundary alignment, the chip's native <L,S,C> sub-tile S*C), so
+        every decode launch covers whole kernel tiles.  Group-chunkable columns
+        snap to group-boundary prefix sums: doublings of the group alignment,
+        priced through the streamed bytes per group.  Both ladders are pruned
+        with the CALIBRATED launch-overhead estimate -- a candidate whose
+        per-chunk decode would be dominated by launch overhead is dropped, so
+        the ladder tightens per pattern as the EWMA loop warms up."""
+        if p.name not in self.profiles:
+            self.register(p)
+        _, d_est = self.predict(p.name)
+        overhead = (p.n_kernels * self.spec.grid_step_overhead_ns * 1e-9
+                    * self.decode_scale)
+        cands: list[tuple[int, float]] = []   # (bytes, decode-work fraction)
+        if p.chunkable and p.per_elem_bytes > 0 and p.n_out > 1:
+            base = math.lcm(max(1, p.align),
+                            native_subtile(p.pattern, self.spec.name))
+            elems = base
+            while elems < p.n_out and len(cands) < max_candidates:
+                cands.append((max(1, math.ceil(elems * p.per_elem_bytes)),
+                              elems / p.n_out))
+                elems *= 2
+        elif p.group_chunkable and p.group_bytes > 0 and p.n_groups > 1:
+            g = max(1, p.group_align)
+            while g < p.n_groups and len(cands) < max_candidates:
+                cands.append((max(1, math.ceil(g * p.group_bytes)),
+                              g / p.n_groups))
+                g *= 2
+        if not cands:
+            return ()
+        kept = [cb for cb, frac in cands
+                if d_est <= 0 or d_est * frac >= 2.0 * overhead]
+        return tuple(sorted(set(kept or [cands[-1][0]])))
+
+    # ------------------------------------------------------------ persistence
+    def save(self, path: str) -> None:
+        """Serialize the calibration state (EWMA scales + per-signature timing
+        summaries) as JSON, so a fresh process plans from history -- the
+        per-chip profile role the paper's per-GPU tuning plays."""
+        data = {
+            "chip": self.spec.name, "alpha": self.alpha,
+            "transfer_scale": self.transfer_scale,
+            "decode_scale": self.decode_scale,
+            "n_observed": self.n_observed,
+            "signatures": self.sig_stats,
+        }
+        tmp = f"{path}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(data, f, indent=2, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, path)
+
+    @classmethod
+    def load(cls, path: str) -> "CostModel":
+        """Rebuild a CostModel from ``save`` output.  Profiles and per-column
+        measurements are process-local and start empty; the calibration scales
+        and signature histories carry over, so the very first plan of a fresh
+        process is already in wall-clock units."""
+        with open(path) as f:
+            data = json.load(f)
+        cm = cls(chip=data.get("chip", DEFAULT_CHIP),
+                 alpha=float(data.get("alpha", 0.4)))
+        cm.transfer_scale = float(data.get("transfer_scale", 1.0))
+        cm.decode_scale = float(data.get("decode_scale", 1.0))
+        cm.n_observed = int(data.get("n_observed", 0))
+        cm.sig_stats = {
+            sig: {"n": float(s.get("n", 0.0)),
+                  "transfer_s": float(s.get("transfer_s", 0.0)),
+                  "decode_s": float(s.get("decode_s", 0.0))}
+            for sig, s in data.get("signatures", {}).items()}
+        return cm
 
     # ------------------------------------------------------------- job views
     def jobs(self, names: Sequence[str]) -> list[scheduler.Job]:

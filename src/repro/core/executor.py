@@ -21,8 +21,12 @@ to auto-planning).  Given a plan over a set of compressed blobs it
        transfer/decode overlap *within* a column, the configuration the fig19
        ``Zc`` model describes.  Chunk slices are coordinated through the
        graph's ``ChunkLayout`` so outputs concatenate to exactly the one-shot
-       result; graphs that are not element-chunkable (Group-Parallel, ANS, Aux
-       stages) fall back to one whole-column launch.
+       result.  Group-chunkable graphs (RLE/DeltaStride expansions, ANS chunk
+       grids -- ``ir.group_chunk_layout``) stream at group boundaries instead:
+       a one-shot prologue decodes the whole-resident metadata (presums, nested
+       children), then each transferred span of whole groups decodes in its own
+       body/tail launch, outputs concatenated on device.  Graphs with neither
+       layout (e.g. delta's cumsum) fall back to one whole-column launch.
      * **whole-column / batched-by-signature**: chunks reassemble on device and
        the column decodes in one launch; adjacent plan-marked "batched" columns
        sharing one Program stack into ONE launch (``Program.batched``, vmap over
@@ -52,7 +56,7 @@ from repro.core import plan as plan_mod, scheduler
 from repro.core.compiler import DEFAULT_CACHE, Program, ProgramCache
 from repro.core.costmodel import CostModel, profile_from
 from repro.core.geometry import DEFAULT_CHIP
-from repro.core.ir import DecodeGraph, element_chunk_layout
+from repro.core.ir import DecodeGraph, element_chunk_layout, group_chunk_layout
 from repro.core.planner import ExecutionPlan
 
 
@@ -72,12 +76,26 @@ def split_chunks(arr: np.ndarray, chunk_bytes: int | None) -> list[np.ndarray]:
 @dataclasses.dataclass(frozen=True)
 class ChunkSchedule:
     """Coordinated per-chunk slicing for one column (resolved from the graph's
-    ChunkLayout and the column's actual meta operand values)."""
+    chunk layout and the column's actual operand values / group metadata).
+
+    ``kind="element"`` is the Fully-Parallel path: every chunk covers a fixed
+    element range and ``out_sizes == pad_sizes``.  ``kind="group"`` is the
+    group-boundary path: chunk k decodes the ``g_sizes[k]`` whole groups from
+    ``g_starts[k]`` in its own launch, producing ``pad_sizes[k]`` elements of
+    which ``out_sizes[k]`` are valid (uneven group sizes pad body launches to
+    one shared shape -- ONE body program plus one tail program per structure);
+    ``axes`` gives per-leaf slice axes (the ANS stripe slices columns).
+    """
 
     out_starts: tuple[int, ...]
     out_sizes: tuple[int, ...]
     slices: dict[str, list[tuple[int, int]]]   # tile leaf -> per-chunk [lo, hi)
     whole: tuple[str, ...]                     # transferred once, shared by chunks
+    kind: str = "element"                      # "element" | "group"
+    g_starts: tuple[int, ...] = ()             # group path: span start groups
+    g_sizes: tuple[int, ...] = ()              # group path: groups per span
+    pad_sizes: tuple[int, ...] = ()            # group path: padded launch elems
+    axes: dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def n_chunks(self) -> int:
@@ -222,7 +240,7 @@ class StreamingExecutor:
         graph = self._graphs[name]
         layout = element_chunk_layout(graph)
         if layout is None:
-            return None
+            return self._build_group_schedule(name, chunk_bytes)
         ops = plan_mod.host_operands(self._encoded[name])
         # resolve tile ratios (operand-driven ratios use this column's meta value)
         ratios: dict[str, tuple[int, int]] = {}
@@ -254,6 +272,66 @@ class StreamingExecutor:
             slices[nm] = per
         return ChunkSchedule(out_starts=out_starts, out_sizes=out_sizes,
                              slices=slices, whole=layout.whole)
+
+    def _build_group_schedule(self, name: str,
+                              chunk_bytes: int) -> ChunkSchedule | None:
+        """Group-boundary schedule: spans of whole groups sized to ~chunk_bytes
+        of streamed group bytes, boundaries snapped to the encoder-emitted
+        group-boundary prefix sums -- via the same shared formulas
+        (``costmodel.groups_per_chunk`` / ``group_bytes_per_group``) the
+        planner's ``ColumnProfile`` predicts with, so planned span counts equal
+        executed span counts."""
+        graph = self._graphs[name]
+        layout = group_chunk_layout(graph)
+        if layout is None:
+            return None
+        ops = plan_mod.host_operands(self._encoded[name])
+        n_groups = int(layout.n_groups)
+        bpg = costmodel.group_bytes_per_group(layout, ops)
+        if bpg <= 0 or n_groups <= 1:
+            return None
+        G = costmodel.groups_per_chunk(chunk_bytes, bpg, layout.align_groups)
+        if G >= n_groups:
+            return None                  # degenerate: one span = whole column
+        presum = np.asarray(layout.group_presum, dtype=np.int64)
+        g_starts = tuple(range(0, n_groups, G))
+        g_sizes = tuple(min(G, n_groups - s) for s in g_starts)
+        out_starts = tuple(int(presum[s]) for s in g_starts)
+        out_sizes = tuple(int(presum[s + z] - presum[s])
+                          for s, z in zip(g_starts, g_sizes))
+        if min(out_sizes) <= 0:
+            return None                  # empty span (defensive; groups are >=1)
+        if layout.elems_per_group:
+            # uniform groups (ANS chunk grid): launches produce exactly the
+            # decoded span, no padding needed
+            pad_sizes = tuple(z * layout.elems_per_group for z in g_sizes)
+        else:
+            body = [sz for sz, z in zip(out_sizes, g_sizes) if z == G]
+            body_pad = costmodel.pad_group_elems(max(body)) if body else 0
+            pad_sizes = tuple(
+                body_pad if z == G else costmodel.pad_group_elems(sz)
+                for sz, z in zip(out_sizes, g_sizes))
+        slices: dict[str, list[tuple[int, int]]] = {}
+        for nm, spec in layout.sliced.items():
+            arr = ops[nm]
+            axis = layout.axes.get(nm, 0)
+            length = int(arr.shape[axis])
+            per = []
+            for s, z in zip(g_starts, g_sizes):
+                if axis == 1:
+                    per.append((s, s + z))          # stripe: exact columns
+                    continue
+                lo = (s * spec.num) // spec.den
+                # the final span takes the remaining rows (incl. guard words);
+                # interior boundaries are group-aligned so slices are integral
+                hi = length if s + z >= n_groups \
+                    else ((s + z) * spec.num) // spec.den
+                per.append((lo, max(hi, lo + 1)))
+            slices[nm] = per
+        return ChunkSchedule(
+            out_starts=out_starts, out_sizes=out_sizes, slices=slices,
+            whole=layout.whole, kind="group", g_starts=g_starts,
+            g_sizes=g_sizes, pad_sizes=pad_sizes, axes=dict(layout.axes))
 
     def issue_order(self, names: Sequence[str] | None = None) -> list[str]:
         """Column issue order from the configured scheduling policy."""
@@ -353,7 +431,11 @@ class StreamingExecutor:
                 for i in range(sched.n_chunks):
                     for k, per in sched.slices.items():
                         lo, hi = per[i]
-                        piece = np.asarray(ops[k])[lo:hi]
+                        arr = np.asarray(ops[k])
+                        # group-path leaves may slice off axis 0 (ANS stripes
+                        # hand each span its own column block)
+                        piece = (arr[lo:hi] if sched.axes.get(k, 0) == 0
+                                 else np.ascontiguousarray(arr[:, lo:hi]))
                         host[name].setdefault(k, []).append(piece)
                         transfer_items.append((name, k, i, piece))
                     ends.append(len(transfer_items))
@@ -405,7 +487,9 @@ class StreamingExecutor:
         for kind, prog, members in units:
             if kind == "chunk":
                 name = members[0]
-                results[name] = self._run_chunked(
+                runner = (self._run_group_chunked
+                          if scheds[name].kind == "group" else self._run_chunked)
+                results[name] = runner(
                     name, scheds[name], device[name], chunk_ends[name],
                     issue_until, issue_s, window)
                 continue
@@ -513,6 +597,77 @@ class StreamingExecutor:
             compressed_bytes=enc.compressed_nbytes, plain_bytes=enc.plain_nbytes,
             n_chunks=K, signature=graph.signature,
             decode_launches=K, chunk_decoded=True)
+
+    def _run_group_chunked(self, name: str, sched: ChunkSchedule,
+                           device_col: dict[str, list], ends: list[int],
+                           issue_until, issue_s: dict[str, float],
+                           window: int) -> ColumnExec:
+        """Group-boundary streaming decode of one column.
+
+        The prologue (presum auxes, nested child decodes) launches once over
+        the whole-resident buffers ahead of span 0; then span k's decode (a
+        body or tail GroupChunkProgram over whole groups) launches while spans
+        k+1..k+w are still in flight.  Launch outputs are padded to the shared
+        body shape, trimmed to each span's true size and concatenated on
+        device -- bitwise identical to the whole-column result."""
+        graph = self._graphs[name]
+        K = sched.n_chunks
+        residual = 0.0
+        dispatch = 0.0
+        cold = False
+        whole_bufs: dict[str, jnp.ndarray] | None = None
+        resident: dict[str, jnp.ndarray] = {}
+        pro_prog = self.cache.get_group_prologue(graph)
+        launches = []     # (GroupChunkProgram, bufs, args) kept for warm re-time
+        outs = []
+        for k in range(K):
+            issue_until(ends[k] + window)
+            t0 = time.perf_counter()
+            if whole_bufs is None:     # issued ahead of span 0 by construction
+                whole_bufs = {nm: device_col[nm][0] for nm in sched.whole}
+                jax.block_until_ready(list(whole_bufs.values()))
+            pieces = {nm: device_col[nm][k] for nm in sched.slices}
+            jax.block_until_ready(list(pieces.values()))
+            residual += time.perf_counter() - t0
+            t0 = time.perf_counter()
+            if k == 0 and pro_prog is not None:
+                cold = cold or pro_prog.calls == 0
+                resident = pro_prog(whole_bufs)    # async one-shot prologue
+            prog = self.cache.get_group_chunk(graph, sched.g_sizes[k],
+                                              sched.pad_sizes[k])
+            cold = cold or prog.calls == 0
+            bufs = {**whole_bufs, **resident, **pieces}
+            args = (np.int32(sched.out_starts[k]), np.int32(sched.g_starts[k]),
+                    np.int32(sched.out_sizes[k]))
+            outs.append(prog(bufs, *args))   # async launch; k+1 still in flight
+            dispatch += time.perf_counter() - t0
+            launches.append((prog, bufs, args))
+        t0 = time.perf_counter()
+        trimmed = [o if int(p) == int(s) else o[:int(s)]
+                   for o, p, s in zip(outs, sched.pad_sizes, sched.out_sizes)]
+        arr = trimmed[0] if K == 1 else jnp.concatenate(trimmed)
+        jax.block_until_ready(arr)
+        dispatch += time.perf_counter() - t0
+        if cold:      # first use traced+compiled: re-run warm so cached timings
+            t0 = time.perf_counter()              # model decode, not jit
+            res2 = pro_prog(whole_bufs) if pro_prog is not None else {}
+            outs2 = [p({**b, **res2}, *a) for p, b, a in launches]
+            outs2 = [o if int(pd) == int(s) else o[:int(s)] for o, pd, s
+                     in zip(outs2, sched.pad_sizes, sched.out_sizes)]
+            jax.block_until_ready(outs2[0] if K == 1
+                                  else jnp.concatenate(outs2))
+            decode_s = time.perf_counter() - t0
+        else:
+            decode_s = dispatch
+        enc = self._encoded[name]
+        transfer_s = issue_s[name] + residual
+        self.cost_model.observe(name, transfer_s, decode_s)
+        return ColumnExec(
+            name=name, array=arr, transfer_s=transfer_s, decode_s=decode_s,
+            compressed_bytes=enc.compressed_nbytes, plain_bytes=enc.plain_nbytes,
+            n_chunks=K, signature=graph.signature,
+            decode_launches=K + (1 if pro_prog is not None else 0),
+            chunk_decoded=True)
 
     def run_one(self, enc: plan_mod.Encoded, name: str = "_single") -> jnp.ndarray:
         """Decode a single blob through the cache (serving-path helper).

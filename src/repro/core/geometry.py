@@ -19,6 +19,7 @@ here tuned per TPU generation.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Callable, Iterable
 
@@ -189,3 +190,15 @@ def native_config(pattern: str, spec: ChipSpec, n_elems: int = 1 << 24,
     """Best geometry under the analytic model -- a chip's 'Native Config' (§5.5)."""
     space = list(SPACES[pattern](spec, itemsize))
     return min(space, key=lambda g: analytic_cost_ns(pattern, g, n_elems, itemsize, spec))
+
+
+@functools.lru_cache(maxsize=None)
+def native_subtile(pattern: str, chip_name: str = DEFAULT_CHIP,
+                   itemsize: int = 4) -> int:
+    """S*C of the chip's native config: the elements one grid-step sub-tile
+    covers (one L-loop iteration).  The planner's chunk-size ladder snaps
+    element-chunk boundaries to multiples of this, so every streamed decode
+    launch covers whole kernel tiles of the pattern it runs."""
+    pat = pattern if pattern in SPACES else "fp"
+    g = native_config(pat, CHIPS[chip_name], itemsize=itemsize)
+    return int(g.S) * int(g.C)

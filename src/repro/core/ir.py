@@ -33,7 +33,7 @@ import numpy as np
 
 from repro.core import registry
 from repro.core.patterns import (CHUNK_ELEMENT, CHUNK_GROUP, CHUNK_NONE,
-                                 FullyParallel, Stage)
+                                 FullyParallel, GroupParallel, NonParallel, Stage)
 
 if TYPE_CHECKING:  # avoid a hard import cycle with repro.core.plan
     from repro.core.plan import Encoded
@@ -96,24 +96,39 @@ class DecodeGraph:
 
     @property
     def chunkability(self) -> str:
-        """Finest output boundary every stage supports: CHUNK_ELEMENT if all stages
-        split anywhere, CHUNK_GROUP if the coarsest constraint is group boundaries,
-        CHUNK_NONE if any stage needs the whole buffer."""
+        """Finest output boundary the EXECUTOR can split this graph at:
+        CHUNK_ELEMENT if every stage splits anywhere, CHUNK_GROUP when the graph
+        admits a group-boundary streaming recipe (``group_chunk_layout``: a final
+        Group-Parallel / Non-Parallel stage with group-sliceable leaves, everything
+        upstream decoded once as a whole-resident prologue), CHUNK_NONE
+        otherwise."""
         levels = {st.chunkability for st in self.stages}
-        if CHUNK_NONE in levels or not levels:
+        if not levels:
             return CHUNK_NONE
-        return CHUNK_GROUP if CHUNK_GROUP in levels else CHUNK_ELEMENT
+        if levels == {CHUNK_ELEMENT}:
+            return CHUNK_ELEMENT
+        return CHUNK_GROUP if group_chunk_layout(self) is not None else CHUNK_NONE
 
 
 # ------------------------------------------------------------------- signature
 
-def _meta_tokens(meta: dict[str, Any], lifted: dict[str, Any]) -> Iterator[str]:
+def _meta_tokens(meta: dict[str, Any], lifted: dict[str, Any],
+                 host: tuple[str, ...] = ()) -> Iterator[str]:
     for k in sorted(meta):
         if k in lifted:
             # lifted meta is a runtime operand: dtype/shape are identity, the value
             # is not -- this is what lets N blobs differing only in a scalar share
             # one compiled program
             yield f"{k}~operand:{np.dtype(lifted[k]).str}:(1,)"
+            continue
+        if k in host:
+            # host planning meta (per-group offsets): operand-style identity --
+            # dtype/shape only, never the values.  The shape is already pinned by
+            # structural meta (n_groups / n_chunks), so two blobs differing only
+            # in run structure DATA still share one compiled program; unlike a
+            # lifted operand it never transfers (the device derives it itself).
+            v = np.asarray(meta[k])
+            yield f"{k}~host:{v.dtype.str}:{tuple(v.shape)}"
             continue
         v = meta[k]
         if isinstance(v, np.ndarray):
@@ -134,8 +149,10 @@ def _meta_tokens(meta: dict[str, Any], lifted: dict[str, Any]) -> Iterator[str]:
 
 def _encoded_tokens(enc: "Encoded") -> Iterator[str]:
     yield f"codec={enc.codec};n={enc.n};dtype={np.dtype(enc.dtype).str}"
-    lifted = getattr(registry.get(enc.codec), "lifted_meta", {})
-    yield from _meta_tokens(enc.meta, lifted)
+    codec = registry.get(enc.codec)
+    lifted = getattr(codec, "lifted_meta", {})
+    host = tuple(getattr(codec, "host_meta", ()))
+    yield from _meta_tokens(enc.meta, lifted, host)
     for name in sorted(enc.buffers):
         b = enc.buffers[name]
         yield f"buf:{name}:{tuple(b.shape)}:{np.dtype(b.dtype).str}"
@@ -212,9 +229,8 @@ def element_chunk_layout(graph: DecodeGraph) -> ChunkLayout | None:
     CHUNK_ELEMENT declaration), every stage produces the full output length (so a
     chunk of the final output maps to the same element range at every stage), every
     tile input is either a leaf buffer sliced proportionally or an intermediate
-    consumed positionally, and all leaves are 1-D.  Group-boundary chunking
-    (CHUNK_GROUP) is declared by the IR but not yet exploited by the executor --
-    those graphs fall back to one whole-column launch.
+    consumed positionally, and all leaves are 1-D.  Graphs with a Group-Parallel /
+    Non-Parallel stage take the group-boundary path instead (``group_chunk_layout``).
     """
     if graph.chunkability != CHUNK_ELEMENT:
         return None
@@ -252,3 +268,188 @@ def element_chunk_layout(graph: DecodeGraph) -> ChunkLayout | None:
         if ms.name not in whole and ms.name not in tiled:
             whole.append(ms.name)
     return ChunkLayout(align=align, tiled=dict(tiled), whole=tuple(whole))
+
+
+# --------------------------------------------------------- group-chunk analysis
+
+@dataclasses.dataclass(frozen=True)
+class GroupChunkLayout:
+    """Static recipe for group-boundary chunked streaming decode.
+
+    The graph is split at its LAST group-bearing stage (Group-Parallel or
+    Non-Parallel): every stage before it is the **prologue** -- decoded once,
+    whole, from whole-resident leaves (presum auxes, nested child decodes) --
+    and the group stage (plus any trailing Fully-Parallel stages consumed
+    positionally) relaunches per span of whole groups.  ``sliced`` maps each
+    leaf buffer consumed per-group (RLE values at ``num/den`` rows per group,
+    ANS states at one row per group, ANS stream stripes at one *column* per
+    group -- see ``axes``) to its BufSpec; those are the bytes that stream
+    chunk-by-chunk while earlier spans decode.  ``resident`` names prologue
+    intermediates the span launches gather from at global group indices.
+
+    ``group_presum`` is the host-side per-group output offset table (len
+    ``n_groups + 1``, ``group_presum[-1] == n_out``) the encoders emit
+    (operand-style identity: dtype/shape, never value); span boundaries snap to
+    it.  ``elems_per_group > 0`` marks uniform groups (ANS chunk grids), where
+    the table is affine and body spans share one compiled program without
+    padding.
+    """
+
+    kind: str                     # "gp" | "np"
+    stage_index: int              # index of the group stage in graph.stages
+    n_groups: int
+    elems_per_group: int          # uniform output elems per group (np); 0 = data-dep
+    sliced: dict[str, Any]        # leaf -> BufSpec (per-GROUP tiling ratio)
+    axes: dict[str, int]          # leaf -> slice axis (ANS stripes slice axis 1)
+    whole: tuple[str, ...]        # leaves + meta operands transferred whole
+    resident: tuple[str, ...]     # prologue intermediates span launches consume
+    align_groups: int             # group-boundary alignment (lcm of sliced dens)
+    group_presum: Any = dataclasses.field(default=None, compare=False)
+
+
+def _post_stages_ok(graph: DecodeGraph, g_idx: int) -> bool:
+    """Trailing stages must be Fully-Parallel over the full output, consuming
+    the group stage's output positionally (static tile ratio) and everything
+    else whole-resident -- the addressing the span programs can reproduce."""
+    produced = {st.out for st in graph.stages[: g_idx + 1]}
+    for st in graph.stages[g_idx + 1:]:
+        if not isinstance(st, FullyParallel) or int(st.n_out) != int(graph.n_out):
+            return False
+        for name, spec in zip(st.inputs, st.specs):
+            if name in produced:
+                if spec.kind != "tile" or spec.num_op:
+                    return False
+            elif spec.kind != "full":
+                return False
+        produced.add(st.out)
+    return True
+
+
+def group_chunk_layout(graph: DecodeGraph) -> GroupChunkLayout | None:
+    """Derive the group-boundary streaming recipe, or None (whole-column decode).
+
+    Eligibility is deliberately conservative: one group stage (the last
+    Group-Parallel / Non-Parallel in the list), trailing stages positional
+    Fully-Parallel, host group metadata present, and at least one leaf that is
+    actually group-sliceable -- a layout with nothing to stream would only add
+    launch overhead, so such graphs report CHUNK_NONE and decode whole.
+
+    Memoized per graph: the analysis allocates an O(n_groups) presum and is
+    reached from ``chunkability``, the profile builder, the schedule builder
+    and every span-program cache lookup -- once per graph is enough.  Safe
+    because graphs are never mutated after lowering/fusion, and
+    ``dataclasses.replace`` (how fusion rewrites) does not copy the cache.
+    """
+    cached = graph.__dict__.get("_group_layout", False)
+    if cached is not False:
+        return cached
+    layout = _group_chunk_layout(graph)
+    graph.__dict__["_group_layout"] = layout
+    return layout
+
+
+def _group_chunk_layout(graph: DecodeGraph) -> GroupChunkLayout | None:
+    stages = graph.stages
+    g_idx = -1
+    for i, st in enumerate(stages):
+        if isinstance(st, (GroupParallel, NonParallel)):
+            g_idx = i
+    if g_idx < 0 or int(graph.n_out) <= 0:
+        return None
+    gst = stages[g_idx]
+    if not _post_stages_ok(graph, g_idx):
+        return None
+    leaf_shapes = {b.name: b.shape for b in graph.buffers}
+    produced_before = {st.out for st in stages[:g_idx]}
+
+    sliced: dict[str, Any] = {}
+    axes: dict[str, int] = {}
+    align = 1
+    resident: list[str] = []
+
+    def _resident(name: str) -> None:
+        if name in produced_before and name not in resident:
+            resident.append(name)
+
+    if isinstance(gst, GroupParallel):
+        n_groups = int(gst.n_groups)
+        presum = getattr(gst, "host_group_presum", None)
+        if presum is None or n_groups <= 0:
+            return None
+        presum = np.asarray(presum)
+        if presum.shape != (n_groups + 1,) or int(presum[-1]) != int(gst.n_out):
+            return None
+        if int(gst.n_out) != int(graph.n_out):
+            return None          # trailing stages must preserve the length
+        _resident(gst.presum)
+        if gst.presum not in produced_before and gst.presum not in leaf_shapes:
+            return None          # presum neither computed upstream nor a leaf
+        for name, spec in zip(gst.value_inputs, gst.value_specs):
+            if (name in leaf_shapes and spec.kind == "tile" and not spec.num_op
+                    and len(leaf_shapes[name]) == 1):
+                sliced[name] = spec
+                axes[name] = 0
+                align = math.lcm(align, int(spec.den))
+            else:
+                _resident(name)
+        for name in gst.extra_inputs:
+            _resident(name)
+        elems_per_group = 0
+    else:                        # NonParallel: groups are the ANS chunks
+        n_groups = int(gst.n_chunks)
+        cs = int(gst.chunk_size)
+        if n_groups <= 0 or cs <= 0:
+            return None
+        if len(leaf_shapes.get(gst.streams, ())) != 2 \
+                or len(leaf_shapes.get(gst.states, ())) != 1:
+            return None
+        # bytes -> final elements: trailing reassemble widens by its tile num
+        itemsize = 1
+        for st in stages[g_idx + 1:]:
+            for name, spec in zip(st.inputs, st.specs):
+                if name == gst.out:
+                    itemsize = int(spec.num) // max(1, int(spec.den))
+        if itemsize <= 0 or cs % itemsize:
+            return None
+        from repro.core.patterns import BufSpec
+        sliced[gst.streams] = BufSpec("tile")
+        axes[gst.streams] = 1    # stripe: one column per group
+        sliced[gst.states] = BufSpec("tile")
+        axes[gst.states] = 0
+        elems_per_group = cs // itemsize
+        presum = np.minimum(
+            np.arange(n_groups + 1, dtype=np.int64) * elems_per_group,
+            int(graph.n_out))
+        if int(presum[-1]) != int(graph.n_out):
+            return None
+    if n_groups <= 1 or not sliced:
+        return None
+    # prologue stages may consume anything EXCEPT a sliced leaf (they run before
+    # chunk 0, over whole buffers); un-slice on conflict
+    pro_inputs: set[str] = set()
+    for st in stages[:g_idx]:
+        if isinstance(st, GroupParallel):
+            pro_inputs.update((st.presum,) + st.value_inputs + st.extra_inputs)
+        elif isinstance(st, NonParallel):
+            pro_inputs.update((st.streams, st.states, st.sym_tab, st.freq_tab,
+                               st.cum_tab))
+        else:                    # FullyParallel / Aux
+            pro_inputs.update(getattr(st, "inputs", ()))
+    for name in list(sliced):
+        if name in pro_inputs:
+            del sliced[name]
+            axes.pop(name, None)
+    if not sliced:
+        return None
+    # trailing-FP full inputs that are prologue intermediates ride resident too
+    for st in stages[g_idx + 1:]:
+        for name in st.inputs:
+            _resident(name)
+    whole = tuple([b.name for b in graph.buffers if b.name not in sliced]
+                  + [ms.name for ms in graph.meta_specs])
+    return GroupChunkLayout(
+        kind="gp" if isinstance(gst, GroupParallel) else "np",
+        stage_index=g_idx, n_groups=n_groups, elems_per_group=elems_per_group,
+        sliced=dict(sliced), axes=dict(axes), whole=whole,
+        resident=tuple(resident), align_groups=align,
+        group_presum=np.asarray(presum, dtype=np.int64))

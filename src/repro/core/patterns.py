@@ -37,9 +37,11 @@ import numpy as np
 # --- chunkability levels (what output boundaries a stage can be split at) ---
 # FullyParallel stages evaluate out[i] independently, so any element boundary works;
 # GroupParallel can only split where whole groups do (data-dependent boundaries);
-# NonParallel (chunked serial decode) and Aux (whole-array ops) only decode whole
-# buffers.  The streaming executor uses these declarations to pick the per-chunk
-# decode path or fall back to one whole-column launch.
+# NonParallel is serial *within* an ANS chunk but its chunks are mutually
+# independent, so it also splits at group (= ANS chunk) boundaries; Aux
+# (whole-array ops) only decodes whole buffers.  The streaming executor uses these
+# declarations (via ``ir.element_chunk_layout`` / ``ir.group_chunk_layout``) to
+# pick a per-chunk decode path or fall back to one whole-column launch.
 CHUNK_ELEMENT = "element"
 CHUNK_GROUP = "group"
 CHUNK_NONE = "none"
@@ -150,6 +152,13 @@ class GroupParallel(Stage):
     n_groups: int = 0
     extra_inputs: tuple[str, ...] = ()  # whole-buffer metadata (dictionaries, offsets)
     name: str = "gp"
+    # per-group output offsets ([0, c_0, c_0+c_1, ...], len n_groups+1) computed by
+    # the ENCODER on the host -- the run/chunk metadata group-boundary chunking
+    # plans with (ir.group_chunk_layout).  Host-side planning data only: it is
+    # identified like a lifted operand (dtype/shape, never value -- see
+    # ir._meta_tokens host_meta handling), so it does not enter program identity,
+    # and it never transfers (the device recomputes presum from counts).
+    host_group_presum: Any = None
     chunkability = CHUNK_GROUP   # splits only where whole groups do
 
     def run_jnp(self, bufs: dict[str, jnp.ndarray]) -> jnp.ndarray:
@@ -188,7 +197,16 @@ class NonParallel(Stage):
     n_out: int = 0
     out_dtype: Any = jnp.uint8
     name: str = "np"
-    chunkability = CHUNK_NONE   # whole-buffer only (stripes interleave all chunks)
+    # actual (pre-padding) compressed word count per chunk, host planning data
+    # emitted by the encoder (per-group compressed-byte offsets = cumsum * 2);
+    # identified by dtype/shape only, never transferred.  Recorded for the
+    # unpadded-stripe follow-on (ROADMAP) -- today's planner prices the padded
+    # stripe that actually transfers, so nothing reads it yet.
+    host_group_words: Any = None
+    # serial within a chunk, but chunks are independent: splits where whole
+    # chunks (= groups) do.  The stripe layout interleaves chunks along axis 1,
+    # so a group span is a column slice streams[:, g0:g1].
+    chunkability = CHUNK_GROUP
 
     def run_jnp(self, bufs: dict[str, jnp.ndarray]) -> jnp.ndarray:
         from repro.algos.ans import decode_chunks_jnp  # avoids import cycle

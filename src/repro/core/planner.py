@@ -27,10 +27,11 @@ from repro.core.costmodel import ColumnProfile, CostModel
 from repro.core.scheduler import ChunkInfo, SchedulingPolicy, get_policy
 
 DEFAULT_CHUNK_BYTES = 1 << 20
-# fixed candidate per-column chunk sizes for auto sizing (64 KiB .. 4 MiB);
-# _decide_auto additionally tries sizes splitting THIS column's tile bytes
-# into 2/4/8 decode chunks, so small columns (tiny TPC-H scales, CI) still
-# have chunkable candidates below the fixed ladder's floor
+# legacy fixed ladder (64 KiB .. 4 MiB), kept only as the fallback when a
+# column's geometry-tied ladder is empty (e.g. profiles with no tile info);
+# ``CostModel.chunk_ladder`` supplies the real candidates: element chunks
+# snapped to kernel tile multiples, group chunks snapped to group-boundary
+# prefix sums, both pruned by the calibrated launch-overhead estimate
 CHUNK_CANDIDATES = (1 << 16, 1 << 18, 1 << 20, 1 << 22)
 MIN_CHUNK_BYTES = 1 << 12
 
@@ -48,6 +49,8 @@ class ColumnDecision:
     tail_frac: float = 1.0
     est_transfer_s: float = 0.0
     est_decode_s: float = 0.0
+    # per-chunk (transfer, decode) fractions for uneven group spans; () = uniform
+    weights: tuple[tuple[float, float], ...] = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,7 +85,20 @@ class ExecutionPlan:
 def _chunk_info(d: ColumnDecision, overhead_s: float) -> ChunkInfo:
     return ChunkInfo(n_chunks=max(1, d.n_chunks),
                      chunk_decode=d.decode_mode == CHUNK,
-                     tail_frac=d.tail_frac, launch_overhead_s=overhead_s)
+                     tail_frac=d.tail_frac, launch_overhead_s=overhead_s,
+                     weights=d.weights)
+
+
+def _chunk_decision(p: ColumnProfile, t: float, d: float,
+                    chunk_bytes: int) -> ColumnDecision | None:
+    """CHUNK-mode decision at one candidate size, or None when the column would
+    decode whole anyway (covers both element- and group-chunkable graphs; the
+    per-chunk weights carry the uneven group-span byte counts to the model)."""
+    k, tail = p.decode_chunking(chunk_bytes)
+    if k <= 1:
+        return None
+    return ColumnDecision(p.name, chunk_bytes, k, CHUNK, tail, t, d,
+                          weights=p.chunk_weights(chunk_bytes))
 
 
 def _decide_fixed(p: ColumnProfile, t: float, d: float,
@@ -91,31 +107,40 @@ def _decide_fixed(p: ColumnProfile, t: float, d: float,
     chunk_decode flag (per-chunk only where the graph supports it).  ``t``/``d``
     are the same per-column times the makespan simulator scores with."""
     if chunk_decode and chunk_bytes is not None:
-        k, tail = p.decode_chunking(chunk_bytes)
-        if k > 1:
-            return ColumnDecision(p.name, chunk_bytes, k, CHUNK, tail, t, d)
+        cand = _chunk_decision(p, t, d, chunk_bytes)
+        if cand is not None:
+            return cand
     return ColumnDecision(p.name, chunk_bytes,
                           p.n_transfer_chunks(chunk_bytes), WHOLE, 1.0, t, d)
 
 
 def _decide_auto(p: ColumnProfile, t: float, d: float, overhead: float,
-                 fixed_chunk_bytes: int | None) -> ColumnDecision:
+                 fixed_chunk_bytes: int | None,
+                 cost_model: CostModel) -> ColumnDecision:
     """Per-column chunk size + decode mode minimizing the column's own modeled
-    pipeline time (ties break toward fewer launches)."""
+    pipeline time (ties break toward fewer launches).
+
+    Candidates come from ``CostModel.chunk_ladder``: element-chunk sizes
+    snapped to kernel tile multiples (core/geometry.py), group-chunk sizes
+    snapped to group-boundary prefix sums, both tuned by the calibrated cost
+    model; the legacy fixed ladder only backstops profiles without geometry."""
     job = scheduler.Job(p.name, t, d)
     whole_cb = fixed_chunk_bytes or DEFAULT_CHUNK_BYTES
     best = ColumnDecision(p.name, whole_cb, p.n_transfer_chunks(whole_cb),
                           WHOLE, 1.0, t, d)
     best_mk = scheduler.simulate_stream([job], [_chunk_info(best, overhead)])
-    cands = set(CHUNK_CANDIDATES) | {whole_cb}
-    if p.chunkable and p.per_elem_bytes > 0 and p.n_out > 0:
-        tile_bytes = p.per_elem_bytes * p.n_out
-        cands |= {max(MIN_CHUNK_BYTES, int(tile_bytes / k)) for k in (2, 4, 8)}
+    cands = set(cost_model.chunk_ladder(p))
+    if not cands:
+        cands = set(CHUNK_CANDIDATES)
+        if p.chunkable and p.per_elem_bytes > 0 and p.n_out > 0:
+            tile_bytes = p.per_elem_bytes * p.n_out
+            cands |= {max(MIN_CHUNK_BYTES, int(tile_bytes / k))
+                      for k in (2, 4, 8)}
+    cands.add(whole_cb)
     for cb in sorted(cands, reverse=True):
-        k, tail = p.decode_chunking(cb)
-        if k <= 1:
+        cand = _chunk_decision(p, t, d, cb)
+        if cand is None:
             continue
-        cand = ColumnDecision(p.name, cb, k, CHUNK, tail, t, d)
         mk = scheduler.simulate_stream([job], [_chunk_info(cand, overhead)])
         if mk < best_mk - 1e-12:
             best, best_mk = cand, mk
@@ -186,7 +211,8 @@ def plan_execution(profiles: Mapping[str, ColumnProfile] | Sequence[ColumnProfil
         # whole mode)
         if kind == "auto":
             return {n: _decide_auto(profiles[n], *times[n],
-                                    cost_model.launch_overhead_s(n), fixed_cb)
+                                    cost_model.launch_overhead_s(n), fixed_cb,
+                                    cost_model)
                     for n in names}
         return {n: _decide_fixed(profiles[n], *times[n], fixed_cb,
                                  kind == "fixed-chunk") for n in names}

@@ -166,12 +166,32 @@ class ChunkInfo:
     (one body launch per chunk plus the uneven ``tail_frac`` tail launch)
     versus one whole-column launch after the last chunk arrives;
     ``launch_overhead_s`` is the cost of each decode launch beyond the first.
+    ``weights`` optionally replaces the uniform-body + tail split with explicit
+    per-chunk (transfer, decode) fractions -- group-boundary chunks are
+    genuinely uneven (data-dependent group sizes, whole-resident prologue bytes
+    all ahead of span 0), so the simulator models per-chunk byte counts rather
+    than assuming even splits.  Fractions are normalized per machine; ignored
+    unless ``len(weights) == n_chunks``.
     """
 
     n_chunks: int = 1
     chunk_decode: bool = False
     tail_frac: float = 1.0
     launch_overhead_s: float = 0.0
+    weights: tuple[tuple[float, float], ...] = ()
+
+
+def _chunk_fractions(info: ChunkInfo, k: int) -> tuple[list[float], list[float]]:
+    """Per-chunk (transfer, decode) fractions, each summing to 1."""
+    w = info.weights
+    if w and len(w) == k:
+        ts = sum(x[0] for x in w) or 1.0
+        ds = sum(x[1] for x in w) or 1.0
+        return [x[0] / ts for x in w], [x[1] / ds for x in w]
+    tf = min(1.0, max(info.tail_frac, 1e-9)) if k > 1 else 1.0
+    denom = (k - 1) + tf
+    frac = [1.0 / denom] * (k - 1) + [tf / denom]
+    return frac, list(frac)
 
 
 def simulate_stream(jobs: Sequence[Job],
@@ -181,8 +201,9 @@ def simulate_stream(jobs: Sequence[Job],
 
     Transfer is serial on the link and always chunk-granular.  Decode of a
     per-chunk column launches per transferred chunk (body launches + uneven
-    tail); a whole-decode column's single launch waits for its *last* chunk.
-    With default infos this reduces exactly to ``makespan``.
+    tail, or explicit per-chunk weights for group-boundary spans); a
+    whole-decode column's single launch waits for its *last* chunk.  With
+    default infos this reduces exactly to ``makespan``.
     """
     order = list(range(len(jobs))) if order is None else list(order)
     infos = [ChunkInfo()] * len(jobs) if infos is None else list(infos)
@@ -191,17 +212,14 @@ def simulate_stream(jobs: Sequence[Job],
     for idx in order:
         j, info = jobs[idx], infos[idx]
         k = max(1, int(info.n_chunks))
-        tf = min(1.0, max(info.tail_frac, 1e-9)) if k > 1 else 1.0
-        denom = (k - 1) + tf
-        weights = [1.0] * (k - 1) + [tf]
+        tw, dw = _chunk_fractions(info, k)
         if info.chunk_decode and k > 1:
-            for i, w in enumerate(weights):
-                t_link += j.transfer_s * w / denom
-                t_dev = (max(t_dev, t_link) + j.decompress_s * w / denom
+            for i in range(k):
+                t_link += j.transfer_s * tw[i]
+                t_dev = (max(t_dev, t_link) + j.decompress_s * dw[i]
                          + (info.launch_overhead_s if i else 0.0))
         else:
-            for w in weights:
-                t_link += j.transfer_s * w / denom
+            t_link += j.transfer_s
             t_dev = max(t_dev, t_link) + j.decompress_s
     return t_dev
 

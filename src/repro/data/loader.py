@@ -105,7 +105,8 @@ class ColumnPipeline:
     ``Zc`` chunk-level makespan model).  Per-column (transfer_s, decode_s)
     measurements are cached on the instance -- ``run`` and ``modeled_makespan``
     reuse the executor's timings instead of re-transferring and re-decoding every
-    column per call.
+    column per call.  ``cost_model`` lets a persisted model (``CostModel.load``)
+    seed planning from a previous process's calibrated history.
     """
 
     def __init__(self, plans: dict[str, Plan], backend: str = "jnp",
@@ -113,12 +114,13 @@ class ColumnPipeline:
                  chunk_bytes: int | None | str = 1 << 20,
                  batch_columns: bool = True, chunk_decode: bool = False,
                  policy: str = "chunk-johnson",
-                 executor: StreamingExecutor | None = None):
+                 executor: StreamingExecutor | None = None,
+                 cost_model=None):
         self.plans = plans
         self.executor = executor or StreamingExecutor(
             backend=backend, fuse=fuse, chunk_bytes=chunk_bytes,
             pipeline=pipeline, batch_columns=batch_columns,
-            chunk_decode=chunk_decode, policy=policy)
+            chunk_decode=chunk_decode, policy=policy, cost_model=cost_model)
         # mirror the *effective* config (an explicitly passed executor wins)
         self.backend = self.executor.backend
         self.fuse = self.executor.fuse

@@ -105,6 +105,22 @@ class Instr:
     op: str
     operands: list[str]
     attrs: str
+    # per-operand type text parsed from the operand expression itself (newer HLO
+    # prints "f32[2,3]{1,0} %name"); "" when the reference carries no type
+    operand_types: list[str] = dataclasses.field(default_factory=list)
+
+
+def _operand_ref(arg: str) -> str:
+    """Instruction reference inside an operand expression.
+
+    HLO operand spellings drift across XLA versions: "%name", "name",
+    "f32[256,512]{1,0} %name".  Match structurally -- the reference is the last
+    %-token (or last whitespace token) -- instead of assuming any one format.
+    """
+    if "%" in arg:
+        return arg[arg.rfind("%") + 1:].strip()
+    toks = arg.split()
+    return toks[-1] if toks else arg
 
 
 @dataclasses.dataclass
@@ -164,18 +180,30 @@ class HloCostModel:
             if parsed is None:
                 continue
             name, type_str, op, args, attrs = parsed
-            operands = [a.strip().lstrip("%") for a in _split_args(args)]
-            self.comps[cur].append(Instr(name, type_str, op, operands, attrs))
+            raw_args = _split_args(args)
+            operands = [_operand_ref(a) for a in raw_args]
+            # keep any inline operand type: authoritative when the ref table has
+            # no entry (e.g. cross-computation refs)
+            op_types = ["" if _SHAPE_RE.search(a) is None
+                        else a[:a.rfind("%")].strip() if "%" in a else a
+                        for a in raw_args]
+            self.comps[cur].append(Instr(name, type_str, op, operands, attrs,
+                                         op_types))
         # register parameter types as pseudo-instructions
         for cname, decls in params.items():
             for pname, ptype in decls:
                 self.comps[cname].insert(0, Instr(pname, ptype, "parameter", [],
                                                   ""))
 
-    def _operand_type(self, comp: str, ref: str) -> str:
-        # refs look like "name" or "name.1"; may include shape prefix already
+    def _operand_type(self, comp: str, ref: str, inline: str = "") -> str:
+        # refs look like "name" or "name.1"; the operand expression may carry
+        # the type inline, which wins when the ref table has no entry
         t = self._types.get((comp, ref))
-        return t or ""
+        return t or inline or ""
+
+    def _operand_type_at(self, comp: str, ins: Instr, i: int) -> str:
+        inline = ins.operand_types[i] if i < len(ins.operand_types) else ""
+        return self._operand_type(comp, ins.operands[i], inline)
 
     # ------------------------------------------------------------------- costs
     def _dot_flops(self, comp: str, ins: Instr) -> float:
@@ -183,7 +211,7 @@ class HloCostModel:
         n_out = 1
         for d in out_dims:
             n_out *= d
-        lhs_type = self._operand_type(comp, ins.operands[0]) if ins.operands else ""
+        lhs_type = self._operand_type_at(comp, ins, 0) if ins.operands else ""
         lhs_dims = _shape_dims(lhs_type)
         cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.attrs)
         k = 1
@@ -226,7 +254,8 @@ class HloCostModel:
             c.flops = self._dot_flops(comp, ins)
         # bytes: operands + output at the executable level
         out_b = _type_bytes(ins.type_str)
-        in_b = sum(_type_bytes(self._operand_type(comp, r)) for r in ins.operands)
+        in_b = sum(_type_bytes(self._operand_type_at(comp, ins, i))
+                   for i in range(len(ins.operands)))
         if op == "fusion":
             c.bytes = out_b + in_b
             return c

@@ -41,6 +41,13 @@ def _leaf_paths(tree) -> list[tuple[str, Any]]:
     return out
 
 
+def _json_meta(meta: dict) -> bytes:
+    """Codec meta as JSON, minus ndarray-valued host planning data (per-group
+    offsets etc.) -- decode_np only reads the scalar structural fields."""
+    return json.dumps({k: v for k, v in meta.items()
+                       if not isinstance(v, np.ndarray)}).encode()
+
+
 def _encode_leaf(arr: np.ndarray) -> dict[str, np.ndarray | bytes | str]:
     """Byte-plane + ZipFlow-encode one array; returns npz-ready dict."""
     raw = np.ascontiguousarray(arr)
@@ -54,7 +61,7 @@ def _encode_leaf(arr: np.ndarray) -> dict[str, np.ndarray | bytes | str]:
             planes["hi_codec"] = "ans"
             for k, v in plan_mod.flat_buffers(enc).items():
                 planes[f"hi.{k}"] = v
-            planes["hi_meta"] = json.dumps(enc.meta).encode()
+            planes["hi_meta"] = _json_meta(enc.meta)
         else:
             planes["hi_codec"] = "raw"
             planes["hi.raw"] = hi
@@ -65,7 +72,7 @@ def _encode_leaf(arr: np.ndarray) -> dict[str, np.ndarray | bytes | str]:
         if enc.compressed_nbytes < raw.nbytes:
             out = {f"bp.{k}": v for k, v in plan_mod.flat_buffers(enc).items()}
             out["hi_codec"] = "bitpack"
-            out["bp_meta"] = json.dumps(enc.meta).encode()
+            out["bp_meta"] = _json_meta(enc.meta)
             return out
     return {"hi_codec": "raw2", "raw": raw}
 

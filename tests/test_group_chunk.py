@@ -1,0 +1,280 @@
+"""Group-boundary chunked decode (the CHUNK_GROUP tentpole).
+
+Pins the invariants: (1) group-chunked streaming decode is bitwise-identical to
+whole-column decode for Group-Parallel (RLE, DeltaStride) and Non-Parallel (ANS)
+graphs, including uneven tail spans and the ANS end-of-stream trim; (2) the
+planner's profile mirrors the executor's schedule (planned span counts ==
+executed launches) and selects chunk mode for a CHUNK_GROUP graph when the
+model favors it; (3) the geometry-tied candidate ladder is actually aligned --
+element candidates to kernel tile multiples, group candidates to group-boundary
+prefix sums; (4) body/tail span programs are shared across same-structure
+columns; (5) cost-model persistence round-trips scales + per-signature timings.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import plan as P
+from repro.core.compiler import ProgramCache
+from repro.core.costmodel import (ColumnProfile, CostModel,
+                                  aligned_chunk_elems, groups_per_chunk)
+from repro.core.executor import StreamingExecutor
+from repro.core.geometry import native_subtile
+from repro.core.ir import CHUNK_GROUP, group_chunk_layout
+from repro.core.planner import CHUNK, plan_execution
+
+mp = P.make_plan
+
+
+def _rle_column(rng, n_groups=500, max_run=120):
+    return np.repeat(rng.integers(0, 50, n_groups),
+                     rng.integers(1, max_run, n_groups)).astype(np.int32)
+
+
+# ----------------------------------------------------------- bitwise identity
+
+def test_rle_group_chunk_bitexact(rng):
+    """Skewed run lengths + uneven tail span: group-chunked == whole-column."""
+    arr = _rle_column(rng, n_groups=501)
+    enc = P.encode(mp("rle"), arr)
+    whole = StreamingExecutor(chunk_bytes=None, cache=ProgramCache())
+    chunked = StreamingExecutor(chunk_bytes=256, chunk_decode=True,
+                                cache=ProgramCache())
+    chunked.compile("c", enc)
+    assert chunked.graph("c").chunkability == CHUNK_GROUP
+    sched = chunked.chunk_schedule("c")
+    assert sched is not None and sched.kind == "group" and sched.n_chunks > 2
+    assert sched.g_sizes[-1] < sched.g_sizes[0]        # uneven tail span
+    a = np.asarray(whole.run({"c": enc})["c"].array)
+    res = chunked.run({"c": enc})["c"]
+    assert res.chunk_decoded and res.decode_launches > 2
+    np.testing.assert_array_equal(np.asarray(res.array), a)
+    np.testing.assert_array_equal(np.asarray(res.array), arr)
+
+
+def test_ans_group_chunk_bitexact(rng):
+    """ANS chunk-grid spans (stripe column slices): bit-exact incl. the
+    end-of-stream trim, for multi-byte and single-byte dtypes."""
+    for dtype, n, cb in ((np.int32, 30_000, 4096), (np.uint8, 3_001, 512)):
+        arr = rng.integers(0, 40, n).astype(dtype)
+        enc = P.encode(P.Plan("ans", params={"chunk_size": 512}), arr)
+        ex = StreamingExecutor(chunk_bytes=cb, chunk_decode=True,
+                               cache=ProgramCache())
+        ex.compile("c", enc)
+        assert ex.graph("c").chunkability == CHUNK_GROUP
+        res = ex.run({"c": enc})["c"]
+        assert res.chunk_decoded and res.decode_launches > 1, dtype
+        np.testing.assert_array_equal(np.asarray(res.array), arr)
+        np.testing.assert_array_equal(np.asarray(res.array), P.decode_np(enc))
+
+
+def test_deltastride_group_chunk_bitexact(rng):
+    mono = np.arange(80_000, dtype=np.int32)
+    mono[17::97] += 3
+    enc = P.encode(mp("deltastride"), mono)
+    ex = StreamingExecutor(chunk_bytes=2048, chunk_decode=True,
+                           cache=ProgramCache())
+    res = ex.run({"c": enc})["c"]
+    assert res.chunk_decoded and res.decode_launches > 1
+    np.testing.assert_array_equal(np.asarray(res.array), mono)
+
+
+def test_group_chunk_programs_shared_across_columns(rng):
+    """Same-structure RLE columns share prologue + body/tail span programs."""
+    cache = ProgramCache()
+    ex = StreamingExecutor(chunk_bytes=256, chunk_decode=True, cache=cache)
+    counts = rng.integers(1, 60, 400)
+    # values cycle so no adjacent runs merge: every column has exactly 400
+    # groups with the same counts -> identical structure (and signature)
+    encs = {f"c{i}": P.encode(mp("rle"),
+                              np.repeat((np.arange(400) + i) % 50,
+                                        counts).astype(np.int32))
+            for i in range(3)}
+    results = ex.run(encs)
+    for n, enc in encs.items():
+        assert results[n].chunk_decoded, n
+        np.testing.assert_array_equal(np.asarray(results[n].array),
+                                      P.decode_np(enc))
+    # whole program (compile) + prologue + body + tail span programs, shared:
+    # 3 columns x K spans hit <= 4 cache entries
+    assert cache.stats["misses"] <= 4
+    assert cache.stats["hits"] >= 2 * (results["c0"].decode_launches - 2)
+
+
+# ------------------------------------------------------------ planner mirror
+
+def test_planner_mirrors_executor_span_counts(rng):
+    """Profile-predicted span counts == executed decode launches (minus the
+    one-shot prologue), through a real plan round trip."""
+    arr = _rle_column(rng, n_groups=800)
+    ans = rng.integers(0, 40, 60_000).astype(np.int32)
+    ex = StreamingExecutor(chunk_bytes="auto", chunk_decode=True,
+                           policy="adaptive", cache=ProgramCache())
+    ex.compile("rle", P.encode(mp("rle"), arr))
+    ex.compile("ans", P.encode(P.Plan("ans", params={"chunk_size": 1024}), ans))
+    # inject measurements WITHOUT calibration (scales stay 1.0) so the modeled
+    # launch overhead is the raw chip estimate and overlap wins
+    ex.cost_model.measured["rle"] = (0.05, 0.05)
+    ex.cost_model.measured["ans"] = (0.04, 0.06)
+    ep = ex.plan()
+    assert ep.decisions["rle"].decode_mode == CHUNK
+    assert ep.decisions["ans"].decode_mode == CHUNK
+    assert ep.modeled_makespan_s <= min(ep.baselines.values()) + 1e-9
+    res = ex.run(plan=ep)
+    for n, extra in (("rle", 1), ("ans", 0)):       # rle has a presum prologue
+        d, r = ep.decisions[n], res[n]
+        assert r.chunk_decoded, n
+        assert r.decode_launches == d.n_chunks + extra, n
+    np.testing.assert_array_equal(np.asarray(res["rle"].array), arr)
+    np.testing.assert_array_equal(np.asarray(res["ans"].array), ans)
+
+
+def test_chunk_decision_carries_uneven_weights(rng):
+    """Group decisions model per-chunk byte counts, not uniform splits: the
+    whole-resident bytes land ahead of span 0 and decode follows the
+    group-boundary prefix sums."""
+    arr = _rle_column(rng, n_groups=600)
+    ex = StreamingExecutor(chunk_bytes=512, chunk_decode=True,
+                           policy="chunk-johnson", cache=ProgramCache())
+    ex.compile("rle", P.encode(mp("rle"), arr))
+    ex.cost_model.measured["rle"] = (0.05, 0.05)
+    ep = ex.plan()
+    d = ep.decisions["rle"]
+    assert d.decode_mode == CHUNK and len(d.weights) == d.n_chunks
+    t, dws = zip(*d.weights)
+    assert t[0] > t[1]                      # span 0 carries the resident bytes
+    assert abs(sum(t) - 1.0) < 1e-9 and abs(sum(dws) - 1.0) < 1e-9
+    sched = ex.chunk_schedule("rle", d.chunk_bytes)
+    np.testing.assert_allclose(
+        dws, np.asarray(sched.out_sizes) / sum(sched.out_sizes), rtol=1e-9)
+
+
+# ----------------------------------------------------------- geometry ladder
+
+def test_geometry_ladder_is_aligned():
+    """Element candidates snap to kernel tile multiples, group candidates to
+    group-boundary (alignment-multiple) spans -- under the same shared formulas
+    the executor slices with."""
+    cm = CostModel()
+    tile = native_subtile("fp", cm.spec.name)
+    elem_p = ColumnProfile(
+        name="e", compressed_nbytes=1 << 22, plain_nbytes=1 << 24, n_kernels=1,
+        signature="sig-e", leaves=((1 << 20, 1 << 22),), chunkable=True,
+        n_out=1 << 22, per_elem_bytes=1.0, align=32)
+    ladder = cm.chunk_ladder(elem_p)
+    assert ladder, "element ladder must not be empty"
+    for cb in ladder:
+        elems = aligned_chunk_elems(cb, elem_p.per_elem_bytes, elem_p.align)
+        assert elems % tile == 0 and elems % elem_p.align == 0, (cb, elems)
+    presum = np.arange(0, 4097 * 7, 7, dtype=np.int64)
+    group_p = ColumnProfile(
+        name="g", compressed_nbytes=1 << 16, plain_nbytes=1 << 20, n_kernels=2,
+        signature="sig-g", leaves=((4096, 1 << 16),), group_chunkable=True,
+        n_out=int(presum[-1]), n_groups=4096, group_bytes=4.0, group_align=8,
+        pattern="gp", group_out_presum=presum)
+    gladder = cm.chunk_ladder(group_p)
+    assert gladder, "group ladder must not be empty"
+    for cb in gladder:
+        g = groups_per_chunk(cb, group_p.group_bytes, group_p.group_align)
+        assert g % group_p.group_align == 0 and g < group_p.n_groups, (cb, g)
+
+
+def test_ladder_prunes_overhead_dominated_candidates():
+    """After calibration inflates the launch-overhead estimate, tiny candidates
+    (per-chunk decode < 2x overhead) drop off the ladder."""
+    cm = CostModel()
+    p = ColumnProfile(
+        name="e", compressed_nbytes=1 << 20, plain_nbytes=1 << 22, n_kernels=4,
+        signature="s", leaves=((1 << 18, 1 << 20),), chunkable=True,
+        n_out=1 << 20, per_elem_bytes=1.0, align=8)
+    cm.register(p)
+    full = cm.chunk_ladder(p)
+    cm.observe("e", 0.1, 0.1)               # decode_scale explodes (CPU-like)
+    pruned = cm.chunk_ladder(p)
+    assert len(pruned) <= len(full)
+    assert min(pruned) >= min(full)
+
+
+# ------------------------------------------------------------- persistence
+
+def test_cost_model_save_load_roundtrip(rng, tmp_path):
+    """A fresh process (new CostModel) plans from persisted history: scales and
+    per-signature timing summaries survive; predictions for a same-structure
+    column match the stored means."""
+    arr = _rle_column(rng, n_groups=300)
+    enc = P.encode(mp("rle"), arr)
+    ex = StreamingExecutor(chunk_bytes=None, cache=ProgramCache())
+    ex.run({"c": enc})
+    cm = ex.cost_model
+    path = str(tmp_path / "cost.json")
+    cm.save(path)
+    with open(path) as f:
+        data = json.load(f)
+    assert data["n_observed"] >= 1 and data["signatures"]
+
+    cm2 = CostModel.load(path)
+    assert cm2.n_observed == cm.n_observed
+    assert cm2.transfer_scale == pytest.approx(cm.transfer_scale)
+    assert cm2.decode_scale == pytest.approx(cm.decode_scale)
+    # a fresh executor over the SAME structure predicts the persisted means
+    ex2 = StreamingExecutor(chunk_bytes=None, cache=ProgramCache(),
+                            cost_model=cm2)
+    ex2.compile("fresh", P.encode(mp("rle"), arr))
+    sig = ex2.graph("fresh").signature
+    assert sig in cm2.sig_stats
+    t, d = cm2.predict("fresh")
+    assert t == pytest.approx(cm2.sig_stats[sig]["transfer_s"])
+    assert d == pytest.approx(cm2.sig_stats[sig]["decode_s"])
+    # and jobs() stays in consistent wall-clock units without re-measuring
+    jobs = cm2.jobs(["fresh"])
+    assert jobs[0].transfer_s == pytest.approx(t)
+
+
+def test_plan_survives_forced_whole_mode(rng):
+    """Forcing whole decode through the plan bypasses group chunking."""
+    arr = _rle_column(rng, n_groups=400)
+    enc = P.encode(mp("rle"), arr)
+    ex = StreamingExecutor(chunk_bytes=256, chunk_decode=True,
+                           cache=ProgramCache())
+    ex.compile("c", enc)
+    ep = ex.plan()
+    from repro.core.planner import WHOLE
+    whole = dataclasses.replace(
+        ep, decisions={n: dataclasses.replace(d, decode_mode=WHOLE)
+                       for n, d in ep.decisions.items()})
+    res = ex.run({"c": enc}, plan=whole)["c"]
+    assert not res.chunk_decoded and res.decode_launches == 1
+    np.testing.assert_array_equal(np.asarray(res.array), arr)
+
+
+def test_tpch_group_columns_bitexact_under_auto_plan():
+    """TPC-H: every column decodes bit-identically under the adaptive auto
+    plan, and the ANS column (L_RETURNFLAG) is group-chunkable."""
+    from repro.data.columns import TABLE2_PLANS
+    from repro.data.loader import ColumnPipeline
+    from repro.data.tpch import generate
+
+    cols = generate(scale=0.002, seed=5)
+    names = ["L_RETURNFLAG", "L_ORDERKEY", "L_QUANTITY"]
+    pipe = ColumnPipeline({n: TABLE2_PLANS[n] for n in names},
+                          chunk_bytes="auto", chunk_decode=True,
+                          policy="adaptive")
+    pipe.compress({n: cols[n] for n in names})
+    assert pipe.executor.graph("L_RETURNFLAG").chunkability == CHUNK_GROUP
+    assert group_chunk_layout(pipe.executor.graph("L_RETURNFLAG")) is not None
+    results = pipe.run()
+    for n in names:
+        np.testing.assert_array_equal(np.asarray(results[n].array), cols[n],
+                                      err_msg=n)
+    ep = pipe.plan()
+    assert ep.modeled_makespan_s <= min(ep.baselines.values()) + 1e-9
+    # force the group-streamed path on the ANS column (span = one group) and
+    # compare bit-for-bit against the whole-column result
+    enc = P.encode(TABLE2_PLANS["L_RETURNFLAG"], cols["L_RETURNFLAG"])
+    ex = StreamingExecutor(chunk_bytes=256, chunk_decode=True,
+                           cache=ProgramCache())
+    res = ex.run({"c": enc})["c"]
+    assert res.chunk_decoded and res.decode_launches > 1
+    np.testing.assert_array_equal(np.asarray(res.array), cols["L_RETURNFLAG"])

@@ -3,8 +3,9 @@
 Pins the tentpole invariants: (1) data-dependent meta (bitpack bit_width/base,
 delta base) is a runtime operand, so blobs differing only in those values share ONE
 compiled program; (2) the per-chunk decode path is bitwise-identical to one-shot
-decode for every element-chunkable TPC-H Q1 nesting; (3) non-chunkable nestings
-(Group-Parallel, ANS, Aux-bearing graphs) fall back cleanly to whole-column decode.
+decode for every element-chunkable TPC-H Q1 nesting; (3) nestings with neither an
+element nor a group chunk layout fall back cleanly to whole-column decode
+(group-boundary streaming itself is pinned by tests/test_group_chunk.py).
 """
 import numpy as np
 import pytest
@@ -111,19 +112,20 @@ def test_per_chunk_decode_matches_whole_column(rng):
 
 
 def test_non_chunkable_nestings_fall_back(rng):
-    """GroupParallel/NonParallel/Aux graphs declare their chunkability and the
-    executor falls back to one whole-column launch -- still bitwise-correct."""
+    """Graphs with neither an element nor a group chunk layout fall back to one
+    whole-column launch -- still bitwise-correct.
+
+    rle with bit-packed leaves has nothing group-sliceable (the packed counts
+    feed the presum prologue whole, the packed values ride as an operand-ratio
+    tile), and delta's cumsum is whole-array: both report CHUNK_NONE.  Plain
+    ANS *is* group-chunkable now -- covered in tests/test_group_chunk.py."""
     from repro.core.patterns import GroupParallel
 
-    # rle's expansion stage declares group-boundary chunkability, but its presum
-    # Aux is whole-array, so the GRAPH is non-chunkable (declared, not exploited)
     cases = {
         "rle": (P.Plan("rle", children={"counts": mp("bitpack"),
                                         "values": mp("bitpack")}),
                 np.repeat(rng.integers(0, 50, 300), rng.integers(1, 60, 300))
                 .astype(np.int32)),
-        "ans": (P.Plan("ans", params={"chunk_size": 512}),
-                rng.integers(0, 40, 30_000).astype(np.int32)),
         "delta": (P.Plan("delta", children={"deltas": mp("bitpack")}),
                   np.cumsum(rng.integers(0, 4, 30_000)).astype(np.int32)),
     }
