@@ -1,7 +1,13 @@
 """Paper Fig. 18 + Eq. 2: kernel-fusion ablation on the three nested functions
 (Float2Int+BP on L_EXTENDEDPRICE, Dictionary+BP on L_SHIPDATE, RLE+BP on
 L_ORDERKEY).  Reports measured CPU speedup, stage counts, and the Eq.-2 modeled
-HBM-traffic ratio."""
+HBM-traffic ratio.
+
+The ``q6_operator_fusion`` row extends the ablation across the codec/operator
+boundary: TPC-H Q6's scan-filter-aggregate grafted onto its four columns'
+decode graphs (``core.query.lower_query``), comparing HBM traffic before
+operator fusion (every decoded column and predicate mask round-trips HBM)
+against the fused graph (leaf reads + partial-aggregate lanes only)."""
 from __future__ import annotations
 
 from benchmarks.common import row, time_fn
@@ -9,8 +15,10 @@ from repro.core import plan as P
 from repro.core.compiler import compile_decoder, device_buffers
 from repro.core.fusion import fuse, hbm_traffic_bytes
 from repro.core.plan import lower
+from repro.core.query import lower_query
 from repro.data.columns import TABLE2_PLANS
-from repro.data.tpch import generate
+from repro.data.queries import Q6_PLAN
+from repro.data.tpch import QUERY_COLUMNS, generate
 
 CASES = {"f2i+bp": "L_EXTENDEDPRICE", "dict+bp": "L_SHIPDATE",
          "rle+bp": "L_ORDERKEY"}
@@ -33,6 +41,19 @@ def main(quick: bool = False) -> list[str]:
             f"fig18/{label}", t_f,
             f"speedup={t_u / t_f:.2f};kernels={dec_u.n_kernels}->"
             f"{dec_f.n_kernels};eq2_traffic_ratio={traffic_ratio:.2f}"))
+    # codec x operator fusion (Q6 grafted onto its columns' decode graphs):
+    # before/after HBM-traffic delta of the whole fused-query stage list
+    encs = {n: P.encode(TABLE2_PLANS[n], cols[n]) for n in QUERY_COLUMNS[6]}
+    fq = lower_query(Q6_PLAN, encs)
+    pre = hbm_traffic_bytes(fq.prefuse_stages, fq.operands)
+    post = hbm_traffic_bytes(fq.graph.stages, fq.operands)
+    plain = sum(e.plain_nbytes for e in encs.values())
+    rows.append(row(
+        "fig18/q6_operator_fusion", 0.0,
+        f"traffic_before={pre};traffic_after={post};"
+        f"ratio={pre / max(post, 1):.2f};"
+        f"stages={len(fq.prefuse_stages)}->{len(fq.graph.stages)};"
+        f"decoded_bytes_never_written={plain}"))
     return rows
 
 

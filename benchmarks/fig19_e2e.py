@@ -46,11 +46,20 @@ from repro.core.compiler import compile_decoder, device_buffers
 from repro.core.ir import CHUNK_GROUP
 from repro.data.columns import TABLE2_PLANS
 from repro.data.loader import ColumnPipeline
-from repro.data.tpch import QUERY_COLUMNS, generate
+from repro.data.tpch import QUERY_COLUMNS, generate, scale_columns
 from benchmarks.fig16_tpch_ratio import CASCADED
 
 
-from repro.data.queries import ENGINES, q1_engine, q6_engine  # noqa: E402
+from repro.data.queries import ENGINES, QUERY_PLANS, q1_engine, q6_engine  # noqa: E402
+
+# lineitem scale-up factors toward SF>=1 row counts (``tpch.scale_columns``
+# tiles the generated distributions; only the L_* columns scale, so the
+# ANS-heavy O_COMMENT text column does not blow up the unrelated queries)
+SCALE_FACTOR_QUICK = 24      # 0.002 base -> ~290k lineitem rows
+SCALE_FACTOR_FULL = 4        # 0.01 base  -> ~240k lineitem rows, 22 queries
+
+# queries executed decode-fused (operators grafted onto the decode graphs)
+FUSED_QUERIES = (1, 6)
 
 
 def best_cascaded_plan(arr):
@@ -76,6 +85,9 @@ def _move_raw(cols):
 
 def main(quick: bool = False) -> list[str]:
     cols = generate(scale=0.002 if quick else 0.01, seed=0)
+    cols = scale_columns(cols,
+                         SCALE_FACTOR_QUICK if quick else SCALE_FACTOR_FULL,
+                         [n for n in cols if n.startswith("L_")])
     rows = []
     queries = [1, 6, 13] if quick else sorted(QUERY_COLUMNS)
     speedups = []
@@ -151,6 +163,43 @@ def main(quick: bool = False) -> list[str]:
             jax.block_until_ready(eng(
                 {k: jnp.asarray(v) for k, v in qcols.items()}))
             t_engine = time.perf_counter() - t0
+        # --- decode-fused query execution (late materialization): the query's
+        # operators ride the per-chunk decode launches; only partial-aggregate
+        # lanes reach HBM.  Compared against materialize-then-query on the SAME
+        # warm planned pipeline (transfer+decode+engine), both best-of-3. ---
+        fused_fields = ""
+        if q in FUSED_QUERIES:
+            qp = QUERY_PLANS[q]
+            ep_q = pipe_zc.query_plan(qp)   # fused-vs-materialize per column
+            qe = pipe_zc.run_query(qp)      # cold: traces the chunk programs
+            ref = eng({k: jnp.asarray(v) for k, v in qcols.items()})
+            np.testing.assert_allclose(np.asarray(qe.result), np.asarray(ref),
+                                       rtol=1e-4, err_msg=f"q{q} fused")
+            # interleave the two timed paths (best-of-5 each) so slow drift on
+            # a noisy host hits both equally
+            tf, tm = [], []
+            for _ in range(5):
+                t0 = time.perf_counter()
+                qe = pipe_zc.run_query(qp)
+                tf.append(time.perf_counter() - t0)
+                t0 = time.perf_counter()
+                res_m = pipe_zc.run(plan=ep)
+                jax.block_until_ready(eng({n: res_m[n].array for n in names}))
+                tm.append(time.perf_counter() - t0)
+            t_fused, t_mat = min(tf), min(tm)
+            n_fused = sum(d.fused for d in ep_q.decisions.values())
+            fused_fields = (
+                f";fused={t_fused:.4f}s;materialized={t_mat:.4f}s;"
+                f"fused_sel={qe.selectivity:.4f};"
+                f"fused_cols={n_fused}/{len(names)}")
+            rows.append(row(
+                f"fig19/fused_q{q}", t_fused,
+                f"fused={t_fused:.4f}s;materialized={t_mat:.4f}s;"
+                f"sel={qe.selectivity:.4f};chunks={qe.n_chunks};"
+                f"launches={qe.decode_launches};"
+                f"traffic={qe.traffic_bytes};"
+                f"prefuse_traffic={qe.prefuse_traffic_bytes};"
+                f"never_materialized={qe.plain_bytes}"))
         total_z = t_z + t_engine
         total_n = t_casc + t_engine
         speedups.append(total_n / max(total_z, 1e-9))
@@ -167,7 +216,8 @@ def main(quick: bool = False) -> list[str]:
             f"auto_chunk_kib={'/'.join(str(s) for s in auto_sizes)};"
             f"chunk_cols={chunked_cols}/{len(names)};launches={launches};"
             f"gp_cols={len(gp_cols)};gp_chunk_cols={len(gp_chunk_cols)};"
-            f"engine={t_engine:.4f}s;zipflow_vs_cascaded={speedups[-1]:.2f}x"))
+            f"engine={t_engine:.4f}s;zipflow_vs_cascaded={speedups[-1]:.2f}x"
+            + fused_fields))
     rows.append(row("fig19/MEAN_speedup_vs_cascaded", 0.0,
                     f"x{float(np.mean(speedups)):.2f}"))
     # GP-column Zc_run: the measured planned path over Group-Parallel /

@@ -9,7 +9,9 @@
 #   * planned makespan must not exceed the FIFO baseline on any row -- the
 #     adaptive planner's documented invariant under the shared model;
 #   * the GP-column Zc_run row (measured group-boundary chunked decode over
-#     Group-Parallel / Non-Parallel columns) must be present.
+#     Group-Parallel / Non-Parallel columns) must be present;
+#   * the decode-fused Q6 row must be present and fused must not be slower
+#     than materialize-then-query (the late-materialization win, measured).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} python - <<'EOF'
@@ -24,11 +26,17 @@ for line in rows:
     name, _, derived = line.split(",", 2)
     key = name.split("/", 1)[1]
     fields = dict(kv.split("=", 1) for kv in derived.split(";") if "=" in kv)
-    if key.startswith("q"):
+    if key.startswith("fused_q"):
+        out[key] = {k: fields[k] for k in
+                    ("fused", "materialized", "sel", "chunks", "launches",
+                     "traffic", "prefuse_traffic", "never_materialized")
+                    if k in fields}
+    elif key.startswith("q"):
         out[key] = {k: fields[k] for k in
                     ("Z_run", "Zc_run", "planned", "measured",
                      "plan_fifo", "plan_johnson", "auto_chunk_kib",
-                     "chunk_cols", "launches", "gp_cols", "gp_chunk_cols")
+                     "chunk_cols", "launches", "gp_cols", "gp_chunk_cols",
+                     "fused", "materialized", "fused_sel", "fused_cols")
                     if k in fields}
     elif key == "gp_columns":
         out["gp_columns"] = {k: fields[k] for k in
@@ -36,7 +44,7 @@ for line in rows:
                              if k in fields}
 failures = []
 for key, fields in out.items():
-    if not key.startswith("q"):
+    if not key.startswith("q") or key.startswith("fused_"):
         continue
     planned = float(fields["planned"].rstrip("s"))
     fifo = float(fields["plan_fifo"].rstrip("s"))
@@ -44,6 +52,19 @@ for key, fields in out.items():
         failures.append(f"{key}: planned {planned:.6f}s > FIFO {fifo:.6f}s")
 if "gp_columns" not in out:
     failures.append("missing GP-column Zc_run row")
+if "fused_q6" not in out:
+    failures.append("missing decode-fused Q6 row")
+else:
+    fused = float(out["fused_q6"]["fused"].rstrip("s"))
+    mat = float(out["fused_q6"]["materialized"].rstrip("s"))
+    if fused > mat:
+        failures.append(
+            f"fused Q6 {fused:.4f}s slower than materialized {mat:.4f}s")
+    traffic = int(out["fused_q6"]["traffic"])
+    pre = int(out["fused_q6"]["prefuse_traffic"])
+    if traffic >= pre:
+        failures.append(
+            f"fused Q6 traffic {traffic} not below pre-fusion {pre}")
 with open("BENCH_fig19.json", "w") as f:
     json.dump(out, f, indent=2, sort_keys=True)
     f.write("\n")
@@ -52,5 +73,6 @@ if failures:
     print("bench-smoke: GUARD FAILED:\n  " + "\n  ".join(failures),
           file=sys.stderr)
     sys.exit(1)
-print("bench-smoke: planned <= FIFO on every row; GP Zc_run recorded")
+print("bench-smoke: planned <= FIFO on every row; GP Zc_run recorded; "
+      "fused Q6 beats materialize-then-query")
 EOF

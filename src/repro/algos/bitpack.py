@@ -112,4 +112,47 @@ class BitpackCodec:
             elementwise=False, name="bitpack")]
 
 
+def compare_stage(enc, packed_name: str, bw_name: str, base_name: str,
+                  out_name: str, lo: int | None, hi: int | None) -> FullyParallel:
+    """Compressed-domain range predicate: ``lo <= value < hi`` evaluated on the
+    packed words *pre-widening* -- the unpacked field ``v`` is compared against
+    the rebased bounds ``lo - base`` / ``hi - base`` without ever materializing
+    the decoded ``v + base`` column.  ``None`` bounds are open.  The bounds are
+    baked into the closure (they are part of the query's identity, which the
+    fused graph's signature digests), while ``base`` stays a lifted operand so
+    blobs sharing the structure share the program."""
+
+    def fn(ctx: Ctx, packed: jnp.ndarray, bw_op: jnp.ndarray,
+           base_op: jnp.ndarray) -> jnp.ndarray:
+        bw = bw_op[0]
+        i = ctx.out_idx
+        start = ctx.starts[0] if ctx.starts and ctx.starts[0] is not None else 0
+        frac = (i & 31) * bw
+        w = (i >> 5) * bw + (frac >> 5) - start
+        off = (frac & 31).astype(jnp.uint32)
+        last = packed.shape[0] - 1
+        lo_w = packed[w] >> off
+        hi_shift = (jnp.uint32(32) - off) & jnp.uint32(31)
+        hi_w = jnp.where(off == 0, jnp.uint32(0),
+                         packed[jnp.minimum(w + 1, last)] << hi_shift)
+        mask = jnp.where(bw >= 32, jnp.uint32(0xFFFFFFFF),
+                         (jnp.uint32(1) << (bw.astype(jnp.uint32)
+                                            & jnp.uint32(31))) - jnp.uint32(1))
+        v = ((lo_w | hi_w) & mask).astype(jnp.int64)
+        base = base_op[0].astype(jnp.int64)
+        sel = jnp.ones(i.shape, jnp.bool_)
+        if lo is not None:
+            sel = sel & (v >= jnp.int64(int(lo)) - base)
+        if hi is not None:
+            sel = sel & (v < jnp.int64(int(hi)) - base)
+        return sel
+
+    return FullyParallel(
+        fn=fn, inputs=(packed_name, bw_name, base_name),
+        specs=(BufSpec("tile", den=32, num_op=bw_name),
+               BufSpec("full"), BufSpec("full")),
+        out=out_name, n_out=enc.n, out_dtype=jnp.bool_,
+        elementwise=False, name=f"bitpack-cmp[{lo},{hi})")
+
+
 register(BitpackCodec())

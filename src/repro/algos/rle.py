@@ -75,4 +75,58 @@ class RleCodec:
         ]
 
 
+def run_reduce_graph(enc, pred_fn, proj_fns, digest: str, prefix: str = "root"):
+    """Per-run fused aggregation for an RLE column (never per-row).
+
+    A predicate over an RLE column is constant within a run, so a predicated
+    sum collapses to run-length-weighted arithmetic over the RUN axis:
+
+        partial[l] = sum_g counts_g * pred(values_g) * proj_l(values_g)
+
+    The runs' values/counts children decode at run granularity (n_groups
+    elements) and feed a terminal ``Reduce`` with ``n_in = n_groups`` -- the
+    expansion to ``enc.n`` rows never happens, and chunked execution streams
+    RUN spans.  Returns a fused, Reduce-terminated ``DecodeGraph`` whose final
+    lane is the run-length-weighted selected-row count (selectivity feedback).
+    ``digest`` distinguishes queries on structurally identical blobs."""
+    import dataclasses
+
+    from repro.core import fusion, ir as ir_mod, plan as plan_mod
+    from repro.core.patterns import Reduce, arg_at
+
+    n_groups = int(enc.meta["n_groups"])
+    stages: list = []
+    names: dict[str, str] = {}
+    for slot in ("values", "counts"):
+        if slot in enc.children:
+            out = f"{prefix}/{slot}.runs"
+            stages += plan_mod.lower(enc.children[slot],
+                                     prefix=f"{prefix}/{slot}", out_name=out)
+            names[slot] = out
+        elif slot in enc.buffers:
+            names[slot] = f"{prefix}.{slot}"
+        else:
+            raise ValueError(f"rle blob has no {slot!r} child or buffer")
+    # children lowered on their own Encoded have n == n_groups, so every stage
+    # works the RUN axis; guard against anything expanding to the row axis
+    for st in stages:
+        if enc.n != n_groups and getattr(st, "n_out", 0) == enc.n:
+            raise ValueError(f"per-run path leaked a per-row stage: {st.name}")
+
+    def fn(ctx: Ctx, vals: jnp.ndarray, cnts: jnp.ndarray) -> jnp.ndarray:
+        v = arg_at(ctx, 0, vals)
+        w = pred_fn(v).astype(jnp.float32) * arg_at(ctx, 1, cnts).astype(jnp.float32)
+        lanes = [jnp.sum(p(v).astype(jnp.float32) * w) for p in proj_fns]
+        return jnp.stack(lanes + [jnp.sum(w)])
+
+    red = Reduce(fn=fn, inputs=(names["values"], names["counts"]),
+                 specs=(BufSpec("tile"), BufSpec("tile")),
+                 n_in=n_groups, out=f"{prefix}.agg", n_out=len(proj_fns) + 1,
+                 out_dtype=jnp.float32, name="rle-run-reduce")
+    graph = ir_mod.graph_from_encoded(enc, stages + [red])
+    graph = dataclasses.replace(
+        graph, signature=f"{graph.signature}+runq:{digest}")
+    return fusion.fuse_graph(graph)
+
+
 register(RleCodec())

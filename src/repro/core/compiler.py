@@ -30,7 +30,8 @@ import jax.numpy as jnp
 from repro.core import fusion as fusion_mod
 from repro.core import plan as plan_mod
 from repro.core.geometry import DEFAULT_CHIP, Geometry, chip as chip_spec, native_config
-from repro.core.ir import DecodeGraph, element_chunk_layout, group_chunk_layout
+from repro.core.ir import (DecodeGraph, element_chunk_layout, group_chunk_layout,
+                           query_chunk_layout)
 from repro.core.patterns import Aux, Ctx, GroupParallel, Stage
 
 
@@ -178,6 +179,76 @@ def compile_chunk_graph(graph: DecodeGraph, chunk_elems: int,
 
     fn = jax.jit(decode_chunk) if jit else decode_chunk
     return ChunkProgram(fn=fn, graph=graph, chunk_elems=int(chunk_elems), jit=jit)
+
+
+@dataclasses.dataclass
+class QueryChunkProgram:
+    """Per-chunk fused-query program: one launch evaluates scan-filter-aggregate
+    over item rows [out_start, out_start + chunk_elems) and returns a PARTIAL
+    AGGREGATE vector (``graph.n_out`` accumulator lanes), not decoded rows.
+    The executor sums partials across chunks on device; the decompressed
+    columns never exist at HBM.  Body and tail chunks share programs per size
+    like ``ChunkProgram``."""
+
+    fn: Callable[[dict[str, jnp.ndarray], Any], jnp.ndarray]
+    graph: DecodeGraph
+    chunk_elems: int
+    jit: bool = True
+    calls: int = 0
+
+    def __call__(self, bufs: dict[str, jnp.ndarray], out_start) -> jnp.ndarray:
+        self.calls += 1
+        return self.fn(bufs, out_start)
+
+
+def compile_query_chunk_graph(graph: DecodeGraph, chunk_elems: int,
+                              jit: bool = True) -> QueryChunkProgram:
+    """Compile the per-chunk variant of a fused-query (Reduce-terminated) graph.
+
+    Same addressing as ``compile_chunk_graph`` over the Reduce's ITEM axis,
+    plus "row" inputs: decoded resident columns ride whole and are gathered at
+    the chunk's global row indices (start 0)."""
+    layout = query_chunk_layout(graph)
+    if layout is None:
+        raise ValueError(f"graph {graph.nesting!r} is not query-chunkable")
+    stages = graph.stages
+    # single-chunk program: the only start ever passed is 0, so bake it in as a
+    # Python int -- every input offset folds to a constant and XLA's gather
+    # simplifier turns ``block[iota - 0]`` into a plain read, where a traced
+    # start forces real gathers through the whole fused body (measurably
+    # slower on CPU)
+    static0 = int(chunk_elems) >= int(stages[-1].n_in)
+
+    def partial_chunk(bufs: dict[str, jnp.ndarray], out_start) -> jnp.ndarray:
+        if static0:
+            out_start = 0
+        out_idx = out_start + jnp.arange(chunk_elems, dtype=jnp.int32)
+        env = dict(bufs)
+        produced: set[str] = set()
+        out = None
+        for st in stages:
+            starts = []
+            for nm, spec in zip(st.inputs, st.specs):
+                if nm in produced or spec.kind == "full":
+                    starts.append(None)     # positionally aligned / whole-resident
+                elif spec.kind == "row":
+                    starts.append(0)        # decoded resident: global gather
+                elif static0:
+                    starts.append(0)
+                elif spec.num_op:
+                    num = env[spec.num_op][0]
+                    starts.append((out_start * num) // spec.den)
+                else:
+                    starts.append((out_start * spec.num) // spec.den)
+            ctx = Ctx(out_idx=out_idx, starts=tuple(starts))
+            out = st.fn(ctx, *[env[nm] for nm in st.inputs]).astype(st.out_dtype)
+            env[st.out] = out
+            produced.add(st.out)
+        return out
+
+    fn = jax.jit(partial_chunk) if jit else partial_chunk
+    return QueryChunkProgram(fn=fn, graph=graph, chunk_elems=int(chunk_elems),
+                             jit=jit)
 
 
 # ------------------------------------------------------- group-boundary chunks
@@ -411,6 +482,14 @@ class ProgramCache:
         every chunk at that size across all same-signature columns."""
         key = (graph.signature, "chunk", int(chunk_elems), jit)
         return self._get(key, lambda: compile_chunk_graph(
+            graph, chunk_elems, jit=jit))
+
+    def get_query_chunk(self, graph: DecodeGraph, chunk_elems: int,
+                        jit: bool = True) -> QueryChunkProgram:
+        """Cached fused-query chunk program: one per (structure, chunk size);
+        body chunks share one program, the uneven tail gets a second."""
+        key = (graph.signature, "qchunk", int(chunk_elems), jit)
+        return self._get(key, lambda: compile_query_chunk_graph(
             graph, chunk_elems, jit=jit))
 
     def get_group_chunk(self, graph: DecodeGraph, g_size: int, pad_elems: int,

@@ -68,6 +68,9 @@ def groups_per_chunk(chunk_bytes: int, bytes_per_group: float,
 # lane-aligned shape so ONE compiled program serves every body span
 GROUP_PAD_ELEMS = 128
 
+# prior for query predicate selectivity before any fused run has been observed
+DEFAULT_SELECTIVITY = 0.5
+
 
 def pad_group_elems(elems: int) -> int:
     return max(GROUP_PAD_ELEMS,
@@ -89,6 +92,16 @@ def group_bytes_per_group(layout, ops: Mapping[str, np.ndarray]) -> float:
                                         if arr.ndim > 1 else 1)
             total += spec.num / spec.den * row
     return total
+
+
+def serial_host() -> bool:
+    """True when host->device "transfer" and decode share ONE resource (a
+    CPU-only backend: device_put is a memcpy on the same cores that decode),
+    so the two-machine flow-shop overlap ``simulate_stream`` models does not
+    exist and chunked execution can only add launch overhead."""
+    import jax
+
+    return jax.default_backend() == "cpu"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -270,6 +283,9 @@ class CostModel:
         # persistent half of the feedback loop -- a fresh process planning the
         # same column structures starts from history (``save``/``load``)
         self.sig_stats: dict[str, dict[str, float]] = {}
+        # per-SIGNATURE EWMA of observed query selectivity (fused runs report
+        # selected_rows / n_rows from the Reduce count lane)
+        self.selectivity: dict[str, float] = {}
 
     # -------------------------------------------------------------- registry
     def register(self, profile: ColumnProfile) -> None:
@@ -303,6 +319,33 @@ class CostModel:
         t, d = self.raw_estimate(name)
         return t * self.transfer_scale, d * self.decode_scale
 
+    def selectivity_for(self, name: str) -> float:
+        """Learned predicate selectivity for this column's signature, or the
+        ``DEFAULT_SELECTIVITY`` prior when no fused run has reported one."""
+        p = self.profiles.get(name)
+        if p is not None and p.signature in self.selectivity:
+            return self.selectivity[p.signature]
+        return DEFAULT_SELECTIVITY
+
+    def fused_decode_s(self, name: str, sel: float | None = None) -> float:
+        """Decode-fused cost: the fused chunk program still reads every
+        compressed byte, but the decoded column is consumed in registers
+        instead of being written to (and re-read from) HBM -- only the rows
+        the predicate keeps do downstream aggregate arithmetic, so the
+        plain-side traffic scales with selectivity."""
+        sel = self.selectivity_for(name) if sel is None else float(sel)
+        sel = min(1.0, max(0.0, sel))
+        p = self.profiles[name]
+        _, d = self.predict(name)
+        traffic = p.compressed_nbytes + p.plain_nbytes
+        return d * (p.compressed_nbytes + sel * p.plain_nbytes) / max(traffic, 1)
+
+    def query_read_s(self, name: str) -> float:
+        """What materialize-then-query pays on top of decode: the query
+        operator re-reads the full decoded column from HBM."""
+        p = self.profiles[name]
+        return p.plain_nbytes / (self.spec.hbm_gbps * 1e9) * self.decode_scale
+
     def launch_overhead_s(self, name: str) -> float:
         """Cost of one *extra* decode launch (per-chunk decode dispatches the
         column's kernels once per chunk instead of once)."""
@@ -330,6 +373,19 @@ class CostModel:
         if raw_d > 0 and decode_s > 0:
             self.decode_scale += a * (decode_s / raw_d - self.decode_scale)
         self.n_observed += 1
+
+    def observe_selectivity(self, name: str, sel: float) -> None:
+        """Fold a fused run's measured selectivity (Reduce count lane /
+        n_rows) into the per-signature EWMA the fused-cost estimate uses."""
+        p = self.profiles.get(name)
+        if p is None or not p.signature:
+            return
+        sel = min(1.0, max(0.0, float(sel)))
+        prev = self.selectivity.get(p.signature)
+        if prev is None:
+            self.selectivity[p.signature] = sel
+        else:
+            self.selectivity[p.signature] = prev + self.alpha * (sel - prev)
 
     # -------------------------------------------------------- candidate ladder
     def chunk_ladder(self, p: ColumnProfile, max_candidates: int = 12
@@ -382,6 +438,7 @@ class CostModel:
             "decode_scale": self.decode_scale,
             "n_observed": self.n_observed,
             "signatures": self.sig_stats,
+            "selectivity": self.selectivity,
         }
         tmp = f"{path}.tmp"
         with open(tmp, "w") as f:
@@ -407,6 +464,8 @@ class CostModel:
                   "transfer_s": float(s.get("transfer_s", 0.0)),
                   "decode_s": float(s.get("decode_s", 0.0))}
             for sig, s in data.get("signatures", {}).items()}
+        cm.selectivity = {sig: float(s)
+                          for sig, s in data.get("selectivity", {}).items()}
         return cm
 
     # ------------------------------------------------------------- job views

@@ -119,6 +119,30 @@ class ColumnExec:
     chunk_decoded: bool = False
 
 
+@dataclasses.dataclass
+class QueryExec:
+    """Execution record for one decode-fused query (late materialization).
+
+    ``traffic_bytes`` is the fused graph's modeled HBM traffic (leaf reads +
+    the ``n_out`` accumulator lanes); ``prefuse_traffic_bytes`` prices the same
+    stage list before operator fusion, where every decoded column and mask
+    round-trips HBM -- the delta is what fusion removed."""
+
+    name: str
+    result: jnp.ndarray
+    acc: jnp.ndarray                  # raw partial-aggregate lanes
+    transfer_s: float
+    decode_s: float
+    n_chunks: int
+    decode_launches: int
+    selectivity: float
+    compressed_bytes: int
+    plain_bytes: int                  # decoded bytes that were NEVER written
+    traffic_bytes: int
+    prefuse_traffic_bytes: int
+    resident: dict[str, ColumnExec] = dataclasses.field(default_factory=dict)
+
+
 class StreamingExecutor:
     """Plan-driven chunked, cached, batched/per-chunk decode engine.
 
@@ -152,6 +176,11 @@ class StreamingExecutor:
         self._programs: dict[str, Program] = {}
         self._chunk_counts: dict[tuple[str, int | None], int] = {}
         self._schedules: dict[tuple[str, int | None], ChunkSchedule | None] = {}
+        # fused-query row-axis schedules + traffic accounting, keyed by the
+        # fused graph's signature (which folds in the query digest and every
+        # column's structure) -- warm run_query calls skip re-deriving both
+        self._query_schedules: dict[tuple, tuple] = {}
+        self._query_traffic: dict[str, tuple[int, int]] = {}
         # measured (transfer_s, decode_s) per column from the latest run --
         # an ALIAS of the cost model's store (one source of truth)
         self.timings: dict[str, tuple[float, float]] = self.cost_model.measured
@@ -344,12 +373,16 @@ class StreamingExecutor:
              policy: str | None = None, order: Sequence[str] | None = None,
              chunk_bytes: int | None | str | object = _DEFAULTS,
              chunk_decode: bool | None = None,
-             window: int | None = None) -> ExecutionPlan:
+             window: int | None = None,
+             fused_columns=None) -> ExecutionPlan:
         """Build an ``ExecutionPlan`` for a set of registered columns.
 
         Defaults come from the constructor knobs; any argument overrides them.
         An explicit ``order`` pins the issue order (decisions still planned);
         ``pipeline=False`` degrades to submission order (FIFO).
+        ``fused_columns`` maps columns a pending query could decode-fuse to a
+        selectivity estimate (None = learned EWMA) -- see
+        ``planner.plan_execution``.
         """
         names = list(self._encoded) if names is None else list(names)
         profiles = {n: self.column_profile(n) for n in names}
@@ -366,7 +399,7 @@ class StreamingExecutor:
             chunk_decode=(self.chunk_decode if chunk_decode is None
                           else chunk_decode),
             window=self.prefetch_chunks if window is None else window,
-            batch_columns=self.batch_columns)
+            batch_columns=self.batch_columns, fused_columns=fused_columns)
         if order is not None:
             ep = dataclasses.replace(ep, order=tuple(order), policy="explicit")
         return ep
@@ -668,6 +701,174 @@ class StreamingExecutor:
             n_chunks=K, signature=graph.signature,
             decode_launches=K + (1 if pro_prog is not None else 0),
             chunk_decoded=True)
+
+    # ------------------------------------------------------------- fused query
+    def run_query(self, fq, encs: dict[str, plan_mod.Encoded] | None = None,
+                  chunk_bytes: int | None | object = _DEFAULTS,
+                  window: int | None = None) -> "QueryExec":
+        """Execute a decode-fused query (``core.query.lower_query`` output).
+
+        Non-fusible (resident) columns decode first through the normal planned
+        ``run`` path; then ONE shared row-axis chunk schedule streams every
+        fused column's leaf buffers together, and each chunk launches the
+        cached ``QueryChunkProgram`` -- scan-filter-aggregate fused into the
+        decode launch.  Each launch returns a partial-aggregate vector
+        (``graph.n_out`` lanes) summed into an on-device accumulator; the
+        decompressed columns never exist in HBM.  The accumulator itself holds
+        one in-flight staging slot, so the effective transfer window is
+        ``max(1, window - 1)``.  Measured selectivity (the Reduce count lane)
+        feeds the cost model's per-signature EWMA for future fused-vs-
+        materialize planning."""
+        from repro.core import fusion
+        from repro.core.ir import query_chunk_layout
+
+        if chunk_bytes is self._DEFAULTS:
+            chunk_bytes = self._fixed_chunk_bytes
+        resident_execs: dict[str, ColumnExec] = {}
+        res_bufs: dict[str, jnp.ndarray] = {}
+        if fq.resident:
+            missing = [c for c in fq.resident if not encs or c not in encs]
+            if missing:
+                raise ValueError(
+                    f"resident columns need their Encoded blobs: {missing}")
+            resident_execs = self.run({c: encs[c] for c in fq.resident})
+            for c in fq.resident:
+                res_bufs[fq.resident_input(c)] = resident_execs[c].array
+
+        graph = fq.graph
+        n, ops = fq.n_rows, fq.operands
+        # shared row-axis schedule over the fused columns' tiled leaves --
+        # the same leaf addressing _build_schedule uses, resolved against
+        # THIS query's merged operand set; memoized per (structure, chunking)
+        # so warm calls go straight to staging
+        skey = (graph.signature,
+                None if chunk_bytes is None else int(chunk_bytes), n)
+        sched = self._query_schedules.get(skey)
+        if sched is None:
+            layout = query_chunk_layout(graph)
+            if layout is None:
+                raise ValueError(
+                    f"graph {graph.nesting!r} is not query-chunkable")
+            ratios: dict[str, tuple[int, int]] = {}
+            per_elem = 0.0
+            for nm, spec in layout.tiled.items():
+                num = int(ops[spec.num_op][0]) if spec.num_op else int(spec.num)
+                ratios[nm] = (num, int(spec.den))
+                per_elem += num / spec.den * np.dtype(ops[nm].dtype).itemsize
+            chunk_elems = (n if chunk_bytes is None
+                           else costmodel.aligned_chunk_elems(
+                               chunk_bytes, per_elem, layout.align))
+            chunk_elems = min(chunk_elems, n)
+            out_starts = tuple(range(0, n, chunk_elems))
+            out_sizes = tuple(min(chunk_elems, n - s) for s in out_starts)
+            host_slices: list[dict[str, tuple[int, int]]] = []
+            for s, sz in zip(out_starts, out_sizes):
+                sl = {}
+                for nm, (num, den) in ratios.items():
+                    length = int(np.asarray(ops[nm]).shape[0])
+                    lo = (s * num) // den
+                    hi = length if s + sz >= n else ((s + sz) * num) // den
+                    sl[nm] = (lo, max(hi, lo + 1))
+                host_slices.append(sl)
+            sched = (tuple(layout.whole), out_starts, out_sizes, host_slices)
+            self._query_schedules[skey] = sched
+        whole_names, out_starts, out_sizes, host_slices = sched
+        K = len(out_starts)
+
+        t_issue = 0.0
+
+        def put_group(pieces: dict[str, np.ndarray]) -> dict[str, jnp.ndarray]:
+            # ONE batched device_put per staging group: per-call dispatch
+            # overhead, not bytes, dominates small-buffer H2D
+            nonlocal t_issue
+            t0 = time.perf_counter()
+            keys = list(pieces)
+            outs = jax.device_put([pieces[nm] for nm in keys])  # async H2D
+            t_issue += time.perf_counter() - t0
+            return dict(zip(keys, outs))
+
+        whole_bufs = put_group({nm: np.asarray(ops[nm]) for nm in whole_names})
+        # the on-device partial-aggregate accumulator holds one staging slot
+        win = 2 if window is None else max(1, int(window))
+        eff = max(1, win - 1)
+        device_pieces: list[dict[str, jnp.ndarray] | None] = [None] * K
+        next_issue = 0
+
+        def issue_upto(m: int) -> None:
+            nonlocal next_issue
+            while next_issue < min(m, K):
+                sl = host_slices[next_issue]
+                device_pieces[next_issue] = put_group(
+                    {nm: np.asarray(ops[nm])[lo:hi]
+                     for nm, (lo, hi) in sl.items()})
+                next_issue += 1
+
+        residual = 0.0
+        dispatch = 0.0
+        cold = False
+        launches = []      # (QueryChunkProgram, bufs, start) for warm re-time
+        acc = None
+        for k in range(K):
+            issue_upto(k + eff)
+            t0 = time.perf_counter()
+            if k == 0:
+                jax.block_until_ready(list(whole_bufs.values()))
+            pieces = device_pieces[k]
+            jax.block_until_ready(list(pieces.values()))
+            residual += time.perf_counter() - t0
+            prog = self.cache.get_query_chunk(graph, out_sizes[k])
+            cold = cold or prog.calls == 0
+            bufs = {**whole_bufs, **res_bufs, **pieces}
+            start = np.int32(out_starts[k])
+            t0 = time.perf_counter()
+            part = prog(bufs, start)          # async launch; k+1.. in flight
+            acc = part if acc is None else acc + part
+            dispatch += time.perf_counter() - t0
+            launches.append((prog, bufs, start))
+        t0 = time.perf_counter()
+        jax.block_until_ready(acc)
+        dispatch += time.perf_counter() - t0
+        if cold:      # first use traced+compiled: re-run warm so timings model
+            t0 = time.perf_counter()               # the fused decode, not jit
+            acc2 = None
+            for p, b, s in launches:
+                part = p(b, s)
+                acc2 = part if acc2 is None else acc2 + part
+            jax.block_until_ready(acc2)
+            decode_s = time.perf_counter() - t0
+            acc = acc2
+        else:
+            decode_s = dispatch
+        transfer_s = t_issue + residual
+
+        # acc is tiny (lanes x segments): one D2H pull serves selectivity and
+        # the finalized result without extra device slicing round-trips
+        acc_np = np.asarray(acc)
+        sel = float(fq.selectivity(acc_np))
+        for c in fq.fused_cols:
+            if c not in self.cost_model.profiles and encs and c in encs:
+                from repro.core.compiler import build_graph
+                self.cost_model.register(
+                    profile_from(c, encs[c], build_graph(encs[c])))
+            if c in self.cost_model.profiles:
+                self.cost_model.observe_selectivity(c, sel)
+        traffic = self._query_traffic.get(graph.signature)
+        if traffic is None:
+            all_bufs = {**ops, **res_bufs}
+            traffic = (fusion.hbm_traffic_bytes(graph.stages, all_bufs),
+                       fusion.hbm_traffic_bytes(fq.prefuse_stages, all_bufs))
+            self._query_traffic[graph.signature] = traffic
+        compressed = sum(int(np.asarray(ops[b.name]).nbytes)
+                         for b in graph.buffers)
+        plain = (sum(int(encs[c].plain_nbytes) for c in fq.fused_cols)
+                 if encs else 0)
+        return QueryExec(
+            name=fq.qplan.name, result=fq.finalize(acc_np), acc=acc,
+            transfer_s=transfer_s, decode_s=decode_s,
+            n_chunks=K, decode_launches=K, selectivity=sel,
+            compressed_bytes=compressed, plain_bytes=plain,
+            traffic_bytes=traffic[0], prefuse_traffic_bytes=traffic[1],
+            resident=resident_execs)
 
     def run_one(self, enc: plan_mod.Encoded, name: str = "_single") -> jnp.ndarray:
         """Decode a single blob through the cache (serving-path helper).

@@ -14,6 +14,12 @@ Rules, applied to a lowered stage list until fixpoint:
   5. FP -> Aux       : inline the producer into the auxiliary whole-array op (the
                        cumsum that computes `presum` consumes bit-packed counts without
                        materializing them; cheap on-the-fly in XLA).
+  6. FP -> operator  : compose a Fully-Parallel producer into *any* input position of
+                       a positional-input consumer (operator predicate/projection
+                       stages and the terminal ``Reduce``) -- this is the codec x
+                       operator fusion that grafts a whole decode chain into the
+                       query's scan-filter-aggregate so the decompressed column is
+                       never written to HBM (late materialization).
 
 A buffer may only be fused away if it has exactly one consumer and is not the plan's
 final output.  Memory-traffic accounting for each rule follows the paper's Eq. 2: every
@@ -25,22 +31,24 @@ import dataclasses
 from typing import Sequence
 
 from repro.core.patterns import (Aux, Ctx, FullyParallel, GroupParallel, NonParallel,
-                                 Stage, compose_fp)
+                                 Reduce, Stage, compose_fp, compose_positional)
+
+
+def _stage_inputs(st: Stage) -> tuple[str, ...]:
+    if isinstance(st, FullyParallel):
+        return st.inputs
+    if isinstance(st, GroupParallel):
+        return (st.presum,) + st.value_inputs + st.extra_inputs
+    if isinstance(st, NonParallel):
+        return (st.streams, st.states, st.sym_tab, st.freq_tab, st.cum_tab)
+    # Aux, Reduce, and any future stage kind carrying a flat ``inputs`` tuple
+    return getattr(st, "inputs", ())
 
 
 def _use_counts(stages: Sequence[Stage]) -> dict[str, int]:
     uses: dict[str, int] = {}
     for st in stages:
-        ins: tuple[str, ...] = ()
-        if isinstance(st, FullyParallel):
-            ins = st.inputs
-        elif isinstance(st, GroupParallel):
-            ins = (st.presum,) + st.value_inputs + st.extra_inputs
-        elif isinstance(st, NonParallel):
-            ins = (st.streams, st.states, st.sym_tab, st.freq_tab, st.cum_tab)
-        elif isinstance(st, Aux):
-            ins = st.inputs
-        for name in ins:
+        for name in _stage_inputs(st):
             uses[name] = uses.get(name, 0) + 1
     return uses
 
@@ -123,6 +131,27 @@ def fuse(stages: list[Stage], final_out: str | None = None) -> list[Stage]:
                         del stages[pi]
                         changed = True
                         break
+            # --- rule 6: FP -> positional operator / Reduce ----------------------
+            if (getattr(cons, "_positional_inputs", False)
+                    and isinstance(cons, (FullyParallel, Reduce))):
+                done = False
+                for j, nm in enumerate(cons.inputs):
+                    if cons.specs[j].kind != "tile":
+                        continue   # "full" operands / "row" residents stay as-is
+                    pi = producer.get(nm)
+                    if pi is None or pi == ci:
+                        continue
+                    prod = stages[pi]
+                    if (isinstance(prod, FullyParallel)
+                            and uses.get(prod.out, 0) == 1
+                            and prod.out != final_out):
+                        stages[ci] = compose_positional(prod, cons, j)
+                        del stages[pi]
+                        changed = True
+                        done = True
+                        break
+                if done:
+                    break
             # --- rule 5: FP -> Aux -----------------------------------------------
             if isinstance(cons, Aux) and cons.inputs:
                 pi = producer.get(cons.inputs[0])
@@ -172,7 +201,13 @@ def kernel_count(stages: Sequence[Stage]) -> int:
 
 def hbm_traffic_bytes(stages: Sequence[Stage], bufs: dict[str, "object"]) -> int:
     """Eq.-2-style traffic model: every stage reads its inputs and writes its output
-    once at HBM.  Used by the fusion ablation benchmark."""
+    once at HBM.  Used by the fusion ablation benchmark.
+
+    Fused-operator graphs are priced correctly by construction: a terminal
+    ``Reduce`` writes ``n_out`` accumulator lanes (a few scalars), not the
+    elided materialized column, so a fully fused scan-filter-aggregate costs
+    leaf reads + the aggregate write.  Resident ("row") inputs are charged at
+    their decoded size when present in ``bufs``."""
     import numpy as np
 
     sizes = {k: int(getattr(v, "nbytes", 0)) for k, v in bufs.items()}
@@ -185,7 +220,7 @@ def hbm_traffic_bytes(stages: Sequence[Stage], bufs: dict[str, "object"]) -> int
         elif isinstance(st, NonParallel):
             ins = (st.streams, st.states)
         else:
-            ins = st.inputs
+            ins = getattr(st, "inputs", ())
         total += sum(sizes.get(k, 0) for k in ins)
         out_bytes = st.n_out * np.dtype(st.out_dtype).itemsize
         sizes[st.out] = out_bytes

@@ -33,7 +33,8 @@ import numpy as np
 
 from repro.core import registry
 from repro.core.patterns import (CHUNK_ELEMENT, CHUNK_GROUP, CHUNK_NONE,
-                                 FullyParallel, GroupParallel, NonParallel, Stage)
+                                 FullyParallel, GroupParallel, NonParallel, Reduce,
+                                 Stage)
 
 if TYPE_CHECKING:  # avoid a hard import cycle with repro.core.plan
     from repro.core.plan import Encoded
@@ -268,6 +269,89 @@ def element_chunk_layout(graph: DecodeGraph) -> ChunkLayout | None:
         if ms.name not in whole and ms.name not in tiled:
             whole.append(ms.name)
     return ChunkLayout(align=align, tiled=dict(tiled), whole=tuple(whole))
+
+
+# --------------------------------------------------------- query-chunk analysis
+
+@dataclasses.dataclass(frozen=True)
+class QueryChunkLayout:
+    """Static slicing recipe for fused-query (``Reduce``-terminated) graphs.
+
+    The item axis being chunked is the terminal Reduce's ``n_in`` (rows, or RLE
+    runs) -- NOT ``graph.n_out``, which is the tiny accumulator.  ``tiled`` and
+    ``whole`` follow ``ChunkLayout`` semantics over that axis; ``resident``
+    lists "row"-kind inputs: decoded fallback columns kept whole on device and
+    gathered at the global item index by every chunk launch."""
+
+    align: int
+    tiled: dict[str, Any]       # leaf name -> BufSpec over the item axis
+    whole: tuple[str, ...]
+    resident: tuple[str, ...]
+    n_rows: int                 # item-axis length partial launches cover
+
+
+def query_chunk_layout(graph: DecodeGraph) -> QueryChunkLayout | None:
+    """Derive the per-chunk partial-aggregate recipe for a fused query graph.
+
+    Eligible iff the final stage is a ``Reduce`` and every earlier stage is
+    Fully-Parallel producing the full item axis (``n_out == reduce.n_in``), so
+    a chunk of items maps to the same element range at every stage.  Memoized
+    like ``group_chunk_layout`` (graphs are immutable after lowering)."""
+    cached = graph.__dict__.get("_query_layout", False)
+    if cached is not False:
+        return cached
+    layout = _query_chunk_layout(graph)
+    graph.__dict__["_query_layout"] = layout
+    return layout
+
+
+def _query_chunk_layout(graph: DecodeGraph) -> QueryChunkLayout | None:
+    stages = graph.stages
+    if not stages or not isinstance(stages[-1], Reduce):
+        return None
+    red = stages[-1]
+    n_rows = int(red.n_in)
+    if n_rows <= 0:
+        return None
+    produced: set[str] = set()
+    tiled: dict[str, Any] = {}
+    whole: list[str] = []
+    resident: list[str] = []
+    buf_shapes = {b.name: b.shape for b in graph.buffers}
+    align = 1
+    for st in stages:
+        if st is not red and (not isinstance(st, FullyParallel)
+                              or int(st.n_out) != n_rows):
+            return None
+        for name, spec in zip(st.inputs, st.specs):
+            if name in produced:
+                if spec.kind == "tile" and (spec.num, spec.den) != (1, 1):
+                    return None
+                continue
+            if spec.kind == "row":
+                if name not in resident:
+                    resident.append(name)
+                continue
+            if spec.kind == "full":
+                if name not in whole:
+                    whole.append(name)
+                continue
+            if name in tiled:
+                if tiled[name] != spec:
+                    return None
+                continue
+            if len(buf_shapes.get(name, (0, 0))) != 1:
+                return None
+            tiled[name] = spec
+            align = math.lcm(align, int(spec.den))
+        produced.add(st.out)
+    if not tiled:
+        return None
+    for ms in graph.meta_specs:
+        if ms.name not in whole and ms.name not in tiled:
+            whole.append(ms.name)
+    return QueryChunkLayout(align=align, tiled=dict(tiled), whole=tuple(whole),
+                            resident=tuple(resident), n_rows=n_rows)
 
 
 # --------------------------------------------------------- group-chunk analysis

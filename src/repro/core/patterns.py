@@ -46,6 +46,14 @@ CHUNK_ELEMENT = "element"
 CHUNK_GROUP = "group"
 CHUNK_NONE = "none"
 
+# BufSpec kinds understood by the chunk planners:
+#   "tile" -- sliced proportionally to the output tile (num/den ratio);
+#   "full" -- whole buffer resident (small metadata, lifted operands);
+#   "row"  -- a *decoded* column resident on device, gathered at the global
+#             output row index (fused-query inputs that could not be fused,
+#             e.g. an ANS-coded column feeding a group-by key).
+
+
 
 @dataclasses.dataclass(frozen=True)
 class BufSpec:
@@ -63,7 +71,7 @@ class BufSpec:
     resolves the operand's value per blob and slices exactly.
     """
 
-    kind: str = "tile"  # "tile" | "full"
+    kind: str = "tile"  # "tile" | "full" | "row"
     num: int = 1
     den: int = 1
     pad: int = 0        # extra trailing elements fetched (cross-word guard)
@@ -100,6 +108,17 @@ def primary(ctx: Ctx, block: jnp.ndarray) -> jnp.ndarray:
     indices -- the property fusion rule 2 (absorb into Group-Parallel values) relies on.
     """
     s = ctx.starts[0] if ctx.starts else 0
+    if s is None:
+        return block
+    return block[ctx.out_idx - s]
+
+
+def arg_at(ctx: Ctx, j: int, block: jnp.ndarray) -> jnp.ndarray:
+    """``primary`` generalized to input position ``j``: fetch ``block`` at
+    ``ctx.out_idx`` honouring its own start offset.  Operator stages
+    (``_positional_inputs=True``) read *every* tiled/row input through this, so
+    fusion can splice a producer into any position, not just position 0."""
+    s = ctx.starts[j] if j < len(ctx.starts) else 0
     if s is None:
         return block
     return block[ctx.out_idx - s]
@@ -237,6 +256,37 @@ class Aux(Stage):
         return self.fn(*[bufs[k] for k in self.inputs]).astype(self.out_dtype)
 
 
+@dataclasses.dataclass
+class Reduce(Stage):
+    """Aggregate an item axis into a tiny partial vector (operator fusion).
+
+    ``fn(ctx, *blocks) -> (n_out,)`` computes partial sums over the items at
+    ``ctx.out_idx`` (predicated sums, segment-sums); because the reduction is
+    additive, partials over any disjoint cover of ``[0, n_in)`` sum to the
+    whole -- that is what makes a Reduce element-chunkable along its *item*
+    axis even though ``n_out`` is a handful of accumulator lanes, not rows.
+    Inputs are read positionally through ``arg_at`` (``_positional_inputs``),
+    so fusion can graft whole decode chains into any input slot and the
+    decompressed column never materializes at HBM.
+    """
+
+    fn: Callable[..., jnp.ndarray]
+    inputs: tuple[str, ...]
+    specs: tuple[BufSpec, ...]
+    n_in: int = 0               # item-axis length (rows, or RLE runs)
+    out: str = "agg"
+    n_out: int = 0              # accumulator lanes (n_lanes * n_segments)
+    out_dtype: Any = jnp.float32
+    name: str = "reduce"
+    chunkability = CHUNK_ELEMENT    # partials over any item cover sum to whole
+    _positional_inputs = True
+
+    def run_jnp(self, bufs: dict[str, jnp.ndarray]) -> jnp.ndarray:
+        ctx = Ctx(out_idx=jnp.arange(self.n_in, dtype=jnp.int32),
+                  starts=tuple(0 for _ in self.inputs))
+        return self.fn(ctx, *[bufs[k] for k in self.inputs]).astype(self.out_dtype)
+
+
 # --------------------------------------------------------------------------- helpers
 def compose_fp(first: FullyParallel, second: FullyParallel) -> FullyParallel:
     """Fuse two Fully-Parallel stages: second(first(x)).  Requires the second stage to
@@ -261,6 +311,31 @@ def compose_fp(first: FullyParallel, second: FullyParallel) -> FullyParallel:
         out=second.out, n_out=second.n_out, out_dtype=second.out_dtype,
         elementwise=first.elementwise,
         name=f"{first.name}+{second.name}")
+
+
+def compose_positional(first: FullyParallel, cons: Stage, j: int) -> Stage:
+    """Fuse a Fully-Parallel producer into input position ``j`` of a consumer
+    whose closure reads every input through ``arg_at`` (``_positional_inputs``:
+    operator predicate/projection stages and ``Reduce``).  The producer's
+    gather-capable closure evaluates at the consumer's indices; its result is
+    handed over in-register with a ``None`` start (positionally aligned)."""
+    n_first = len(first.inputs)
+    f_fn, c_fn = first.fn, cons.fn
+
+    def fused(ctx: Ctx, *blocks):
+        f_ctx = Ctx(out_idx=ctx.out_idx, starts=ctx.starts[j:j + n_first])
+        mid = f_fn(f_ctx, *blocks[j:j + n_first]).astype(first.out_dtype)
+        s_starts = ctx.starts[:j] + (None,) + ctx.starts[j + n_first:]
+        return c_fn(Ctx(out_idx=ctx.out_idx, starts=s_starts),
+                    *blocks[:j], mid, *blocks[j + n_first:])
+
+    new = dataclasses.replace(
+        cons, fn=fused,
+        inputs=cons.inputs[:j] + first.inputs + cons.inputs[j + 1:],
+        specs=cons.specs[:j] + first.specs + cons.specs[j + 1:],
+        name=f"{first.name}>{cons.name}")
+    new._positional_inputs = True  # type: ignore[attr-defined]
+    return new
 
 
 def identity_value_fn(ctx: Ctx, g: jnp.ndarray, values: jnp.ndarray) -> jnp.ndarray:

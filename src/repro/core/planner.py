@@ -51,6 +51,10 @@ class ColumnDecision:
     est_decode_s: float = 0.0
     # per-chunk (transfer, decode) fractions for uneven group spans; () = uniform
     weights: tuple[tuple[float, float], ...] = ()
+    # decode-fused query execution: operators ride the decode launch and only
+    # partial aggregates reach HBM (vs. materialize-then-query)
+    fused: bool = False
+    selectivity: float = 1.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,11 +78,13 @@ class ExecutionPlan:
         for i, name in enumerate(self.order):
             d = self.decisions[name]
             cb = "whole" if d.chunk_bytes is None else f"{d.chunk_bytes >> 10}KiB"
+            mode = f"{d.decode_mode}+fused" if d.fused else d.decode_mode
             lines.append(
-                f"  {i:2d}. {name:20s} mode={d.decode_mode:7s} chunk={cb:>8s} "
+                f"  {i:2d}. {name:20s} mode={mode:13s} chunk={cb:>8s} "
                 f"n_chunks={d.n_chunks:3d} "
                 f"pred=({d.est_transfer_s * 1e3:.3f}ms,"
-                f"{d.est_decode_s * 1e3:.3f}ms)")
+                f"{d.est_decode_s * 1e3:.3f}ms)"
+                + (f" sel={d.selectivity:.3f}" if d.fused else ""))
         return "\n".join(lines)
 
 
@@ -153,7 +159,7 @@ def _mark_batched(decisions: dict[str, ColumnDecision],
     launch; mark them so the executor groups them."""
     by_sig: dict[str, list[str]] = {}
     for name, d in decisions.items():
-        if d.decode_mode == WHOLE:
+        if d.decode_mode == WHOLE and not d.fused:
             by_sig.setdefault(profiles[name].signature, []).append(name)
     for names in by_sig.values():
         if len(names) > 1:
@@ -162,13 +168,26 @@ def _mark_batched(decisions: dict[str, ColumnDecision],
                                                    decode_mode=BATCHED)
 
 
-def _window_for(decisions: Mapping[str, ColumnDecision]) -> int:
-    """In-flight transfer window: classic double buffering, deepened when
-    per-chunk columns stream many small pieces."""
+def _window_for(decisions: Mapping[str, ColumnDecision],
+                jobs: Sequence[scheduler.Job] | None = None,
+                infos: Sequence[ChunkInfo] | None = None,
+                order: Sequence[int] | None = None) -> int:
+    """In-flight staging window (transferred-but-undecoded chunks held at once).
+
+    Cost-driven: the smallest window whose simulated makespan matches the
+    unbounded pipeline -- the staging buffer stops paying for itself beyond
+    that.  Columns with no per-chunk decode get classic double buffering."""
     ks = [d.n_chunks for d in decisions.values() if d.decode_mode == CHUNK]
     if not ks:
         return 2
-    return min(8, max(2, max(ks) // 8 + 2))
+    if jobs is None:
+        return min(8, max(2, max(ks) // 8 + 2))
+    base = scheduler.simulate_stream(jobs, infos, order)
+    for w in (2, 3, 4, 6, 8):
+        if scheduler.simulate_stream(jobs, infos, order,
+                                     window=w) <= base * (1 + 1e-9):
+            return w
+    return 8
 
 
 def plan_execution(profiles: Mapping[str, ColumnProfile] | Sequence[ColumnProfile],
@@ -177,7 +196,9 @@ def plan_execution(profiles: Mapping[str, ColumnProfile] | Sequence[ColumnProfil
                    chunk_bytes: int | None | str = "auto",
                    chunk_decode: bool = False,
                    window: int | None = None,
-                   batch_columns: bool = True) -> ExecutionPlan:
+                   batch_columns: bool = True,
+                   fused_columns: Mapping[str, float | None] | None = None
+                   ) -> ExecutionPlan:
     """Choose, per column, chunk size / decode mode / issue order / window.
 
     ``chunk_bytes`` may be an int (global fixed size), None (whole-blob
@@ -185,6 +206,14 @@ def plan_execution(profiles: Mapping[str, ColumnProfile] | Sequence[ColumnProfil
     chunk configurations x issue orders and keeps the modeled-makespan minimum;
     fixed policies order the configuration implied by ``chunk_bytes``/
     ``chunk_decode`` directly (the executor's legacy behaviour, now explicit).
+
+    ``fused_columns`` maps columns a pending query could decode-fuse to a
+    selectivity estimate (None = the cost model's learned per-signature EWMA).
+    Fusion is decided per column AFTER the order search: fuse iff the
+    selectivity-scaled fused decode beats decode + the query's re-read of the
+    materialized column, then the makespan is re-simulated with the fused
+    decode times so the reported number stays honest.  Baselines are computed
+    before the adjustment (they model materialize-then-query).
     """
     if not isinstance(profiles, Mapping):
         profiles = {p.name: p for p in profiles}
@@ -264,10 +293,27 @@ def plan_execution(profiles: Mapping[str, ColumnProfile] | Sequence[ColumnProfil
             order = pol.order(jobs, infos)
             makespan_s = scheduler.simulate_stream(jobs, infos, order)
 
+    if fused_columns:
+        # fused-vs-materialize is a per-column comparison, independent of the
+        # issue order, so it composes with (and runs after) the order search
+        idx = {n: i for i, n in enumerate(names)}
+        jobs = list(jobs)
+        for n, sel in fused_columns.items():
+            if n not in decisions:
+                continue
+            s = cost_model.selectivity_for(n) if sel is None else float(sel)
+            fd = cost_model.fused_decode_s(n, s)
+            t, d = times[n]
+            if fd < d + cost_model.query_read_s(n) - 1e-15:
+                decisions[n] = dataclasses.replace(
+                    decisions[n], fused=True, selectivity=s, est_decode_s=fd)
+                jobs[idx[n]] = scheduler.Job(n, t, fd)
+        makespan_s = scheduler.simulate_stream(jobs, infos_of(decisions), order)
+
     if batch_columns:
         _mark_batched(decisions, profiles)
     return ExecutionPlan(
         order=tuple(names[i] for i in order), decisions=dict(decisions),
         policy=pol.name, window=window if window is not None
-        else _window_for(decisions),
+        else _window_for(decisions, jobs, infos_of(decisions), order),
         modeled_makespan_s=makespan_s, baselines=baselines)

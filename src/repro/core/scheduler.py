@@ -196,7 +196,8 @@ def _chunk_fractions(info: ChunkInfo, k: int) -> tuple[list[float], list[float]]
 
 def simulate_stream(jobs: Sequence[Job],
                     infos: Sequence[ChunkInfo] | None = None,
-                    order: Sequence[int] | None = None) -> float:
+                    order: Sequence[int] | None = None,
+                    window: int | None = None) -> float:
     """Makespan of the streaming executor's actual pipeline shape.
 
     Transfer is serial on the link and always chunk-granular.  Decode of a
@@ -204,20 +205,34 @@ def simulate_stream(jobs: Sequence[Job],
     tail, or explicit per-chunk weights for group-boundary spans); a
     whole-decode column's single launch waits for its *last* chunk.  With
     default infos this reduces exactly to ``makespan``.
+
+    ``window`` bounds the number of transferred-but-undecoded chunks in
+    flight (the staging-buffer budget): transfer of a new per-chunk-decode
+    chunk stalls until the chunk ``window`` places ahead of it has decoded
+    and freed its slot (FIFO -- decode completions are monotone).  Only
+    per-chunk-decode chunks hold slots; a whole-decode column's pieces go
+    straight into its reassembly buffer.  ``None`` keeps the link free-running
+    (unbounded staging), matching the historical model.
     """
     order = list(range(len(jobs))) if order is None else list(order)
     infos = [ChunkInfo()] * len(jobs) if infos is None else list(infos)
+    w = None if window is None else max(1, int(window))
     t_link = 0.0
     t_dev = 0.0
+    finish: list[float] = []  # decode completion per held chunk, transfer order
     for idx in order:
         j, info = jobs[idx], infos[idx]
         k = max(1, int(info.n_chunks))
         tw, dw = _chunk_fractions(info, k)
         if info.chunk_decode and k > 1:
             for i in range(k):
+                m = len(finish)
+                if w is not None and m >= w:
+                    t_link = max(t_link, finish[m - w])
                 t_link += j.transfer_s * tw[i]
                 t_dev = (max(t_dev, t_link) + j.decompress_s * dw[i]
                          + (info.launch_overhead_s if i else 0.0))
+                finish.append(t_dev)
         else:
             t_link += j.transfer_s
             t_dev = max(t_dev, t_link) + j.decompress_s

@@ -130,6 +130,10 @@ class ColumnPipeline:
         self.policy = self.executor.policy
         self._encoded: dict[str, plan_mod.Encoded] = {}
         self._decoders: dict[str, compiler.Program] = {}
+        # lowered fused queries + planned (window, chunk_bytes), keyed by
+        # QueryPlan digest (invalidated by compress: new blobs re-lower)
+        self._queries: dict[str, tuple] = {}
+        self._query_cfg: dict[str, tuple[int, int | None]] = {}
 
     @property
     def _timings(self) -> dict[str, tuple[float, float]]:
@@ -144,6 +148,8 @@ class ColumnPipeline:
             self._encoded[name] = enc
             self._decoders[name] = self.executor.compile(name, enc)
             ratios[name] = enc.ratio
+        self._queries.clear()
+        self._query_cfg.clear()
         return ratios
 
     @property
@@ -192,6 +198,85 @@ class ColumnPipeline:
         ``_measure`` plan from measured timings.
         """
         return self.executor.run(self._encoded, order=order, plan=plan)
+
+    def lower_query(self, qplan):
+        """Graft a ``core.query.QueryPlan`` onto the registered columns' decode
+        graphs (``FusedQuery``); the blobs used are the ones ``compress`` built.
+        Lowerings are memoized by query digest (``compress`` invalidates), so
+        warm ``run_query`` calls measure execution, not re-lowering."""
+        key = qplan.digest()
+        hit = self._queries.get(key)
+        if hit is None:
+            from repro.core.query import lower_query
+
+            encs = {c: self._encoded[c] for c in qplan.columns()}
+            hit = (lower_query(qplan, encs), encs)
+            self._queries[key] = hit
+        return hit
+
+    def query_plan(self, qplan, **kw):
+        """ExecutionPlan for a pending query: per column, fused-vs-materialize
+        decided by the cost model's selectivity-aware fused estimate
+        (``plan.explain()`` shows ``mode=...+fused sel=...`` rows)."""
+        fq, encs = self.lower_query(qplan)
+        return self.executor.plan(list(encs),
+                                  fused_columns={c: None for c in fq.fused_cols},
+                                  **kw)
+
+    def run_query(self, qplan, window: int | None = None):
+        """Decode-fused query execution (late materialization): stream the
+        fused columns through per-chunk scan-filter-aggregate launches; only
+        partial aggregates reach HBM.  The in-flight window AND the row-chunk
+        count come from the cost model (memoized per query digest): the fused
+        columns form ONE shared-schedule job, and the chunk count is chosen by
+        ``simulate_stream`` over a small ladder, pricing each extra launch at
+        the calibrated overhead — on hosts where launch overhead dominates
+        (CPU) this collapses to a single fused launch; where transfer/decode
+        overlap pays, it chunks.  An explicitly configured fixed ``chunk_bytes``
+        overrides the search, like ``run``.  The fused accumulator costs one
+        staging slot, accounted inside ``StreamingExecutor.run_query``."""
+        from repro.core import scheduler
+
+        fq, encs = self.lower_query(qplan)
+        key = qplan.digest()
+        cfg = self._query_cfg.get(key)
+        if cfg is None:
+            ep = self.query_plan(qplan)     # registers profiles for all cols
+            if isinstance(self.chunk_bytes, int):
+                cb = self.chunk_bytes       # fixed size: user override
+            else:
+                from repro.core.costmodel import serial_host
+
+                cm = self.executor.cost_model
+                t_tr = d_fused = oh = 0.0
+                for c in fq.fused_cols:
+                    t_tr += cm.predict(c)[0]
+                    d_fused += cm.fused_decode_s(c)
+                    oh = max(oh, cm.launch_overhead_s(c))
+                best_k, best_t = 1, None
+                for k in (1, 2, 4, 8):
+                    if serial_host():
+                        # one resource: no transfer/decode overlap, chunking
+                        # only buys launch overhead
+                        mk = t_tr + d_fused + (k - 1) * oh
+                    else:
+                        mk = scheduler.simulate_stream(
+                            [scheduler.Job(qplan.name, t_tr, d_fused)],
+                            [scheduler.ChunkInfo(n_chunks=k,
+                                                 chunk_decode=k > 1,
+                                                 launch_overhead_s=oh)],
+                            window=ep.window)
+                    if best_t is None or mk < best_t - 1e-12:
+                        best_k, best_t = k, mk
+                comp = sum(self._encoded[c].compressed_nbytes
+                           for c in fq.fused_cols)
+                cb = None if best_k == 1 else -(-comp // best_k)
+            cfg = (ep.window, cb)
+            self._query_cfg[key] = cfg
+        win, cb = cfg
+        if window is not None:
+            win = window
+        return self.executor.run_query(fq, encs, chunk_bytes=cb, window=win)
 
     def modeled_makespan(self, pipeline: bool = True, johnson: bool = True,
                          chunked: bool = False) -> float:

@@ -1,9 +1,16 @@
 """Mini analytical query engine (the TQP role): JAX scan-filter-aggregate
-implementations of TPC-H Q1 and Q6 used by the end-to-end benchmarks/examples."""
+implementations of TPC-H Q1 and Q6 used by the end-to-end benchmarks/examples.
+
+``Q1_PLAN`` / ``Q6_PLAN`` are the same queries as declarative ``QueryPlan`` IR
+(``core.query``): ``lower_query`` grafts them onto the columns' decode graphs
+so scan-filter-aggregate runs inside the per-chunk decode launch and only
+partial aggregates ever reach HBM (late materialization)."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.query import Bin, Col, Const, Pred, QueryPlan
 
 
 def q1_engine(c):
@@ -31,3 +38,40 @@ def q6_engine(c):
 
 
 ENGINES = {1: q1_engine, 6: q6_engine}
+
+
+# --------------------------------------------------- declarative QueryPlan IR
+
+_DISC_PRICE = Bin("*", Col("L_EXTENDEDPRICE"),
+                  Bin("-", Const(1), Col("L_DISCOUNT")))
+
+# lane order matches q1_engine: quantity, extendedprice, disc_price, charge,
+# and the always-computed count lane doubles as the engine's ``w`` lane
+Q1_PLAN = QueryPlan(
+    name="q1",
+    predicates=(Pred("L_SHIPDATE", "<=", 10000),),
+    aggregates=(
+        ("sum_qty", Col("L_QUANTITY", "float32")),
+        ("sum_base_price", Col("L_EXTENDEDPRICE")),
+        ("sum_disc_price", _DISC_PRICE),
+        ("sum_charge", Bin("*", _DISC_PRICE,
+                           Bin("+", Const(1), Col("L_TAX")))),
+    ),
+    group_key=Bin("+", Bin("*", Bin("%", Bin("-", Col("L_RETURNFLAG", "int32"),
+                                             Const(65)),
+                                   Const(4)),
+                           Const(2)),
+                  Col("L_LINESTATUS")),
+    n_segments=8,
+    keep_count_lane=True)
+
+Q6_PLAN = QueryPlan(
+    name="q6",
+    predicates=(Pred("L_SHIPDATE", ">=", 8766),
+                Pred("L_SHIPDATE", "<", 9131),
+                Pred("L_DISCOUNT", "between", 0.05, 0.07),
+                Pred("L_QUANTITY", "<", 24)),
+    aggregates=(("revenue", Bin("*", Col("L_EXTENDEDPRICE"),
+                                Col("L_DISCOUNT"))),))
+
+QUERY_PLANS = {1: Q1_PLAN, 6: Q6_PLAN}

@@ -97,6 +97,37 @@ def generate(scale: float = 0.01, seed: int = 0) -> dict[str, np.ndarray]:
     return cols
 
 
+# monotone integer key columns: tiling must add a per-tile offset so the keys
+# keep growing (delta/delta-stride codecs see realistic small deltas, not one
+# huge negative jump per tile)
+_MONOTONE_KEYS = {"L_ORDERKEY", "O_ORDERKEY"}
+
+
+def scale_columns(cols: dict[str, np.ndarray], factor: int,
+                  names: list[str] | None = None) -> dict[str, np.ndarray]:
+    """Tile generated columns ``factor``x toward SF>=1 row counts.
+
+    Value distributions are preserved exactly (each tile is the original
+    data); monotone key columns get a cumulative per-tile offset so they stay
+    sorted-monotone and keep their delta structure.  Columns not in ``names``
+    pass through untouched, so a benchmark can scale only the lineitem columns
+    a query reads without exploding unrelated text columns."""
+    factor = max(1, int(factor))
+    out: dict[str, np.ndarray] = {}
+    for name, arr in cols.items():
+        if factor == 1 or (names is not None and name not in names):
+            out[name] = arr
+            continue
+        if name in _MONOTONE_KEYS and arr.size:
+            span = int(arr[-1]) - int(arr[0]) + 1
+            tiles = [arr + np.asarray(t * span, dtype=arr.dtype)
+                     for t in range(factor)]
+            out[name] = np.concatenate(tiles)
+        else:
+            out[name] = np.tile(arr, factor)
+    return out
+
+
 # Columns touched by each TPC-H query (L/O/PS tables only -- the paper's scope).
 QUERY_COLUMNS: dict[int, list[str]] = {
     1: ["L_RETURNFLAG", "L_LINESTATUS", "L_QUANTITY", "L_EXTENDEDPRICE",
