@@ -1,0 +1,203 @@
+"""Fig. 20 (serving counterpart): multi-query decode under link contention.
+
+The paper's figures optimize one query's compress->transfer->decode flow in
+isolation; this benchmark measures the serving regime -- N concurrent requests
+contending for ONE host->device link -- where the shared-resource planner
+(``core/serve_planner.py``) composes per-query plans into one transfer queue
+with cross-query signature batching and SLO-aware issue ordering.
+
+Mixes (each a row):
+
+  closed_mix -- closed loop: all requests submitted at t=0, one shared wave
+      vs. the naive per-query FIFO server (one wave per request, submission
+      order -- ``policy="fifo-per-query"``, ``max_wave=1``).  Reports measured
+      wall/p50/p99/throughput for both, the DETERMINISTIC modeled makespans
+      (``shared_mk`` <= ``naive_mk`` by construction: the naive composition is
+      one of the shared planner's candidates), decode-launch counts and the
+      launches removed by cross-request batching.
+  open_loop  -- requests arrive in batches (open loop); each drain services
+      the backlog as one wave.  Latency includes queueing delay.
+  slo_mix    -- one bulk scan + point queries under ``policy="slo"`` vs the
+      shared-throughput policy: point-class p99 (modeled, deterministic)
+      must not degrade past the naive composition.
+
+``--cost-cache PATH`` persists the run's calibrated ``CostModel`` (PR 5
+``save``/``load``), so repeated bench runs plan from warm calibration.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import plan as P
+from repro.core.costmodel import CostModel
+from repro.core.executor import StreamingExecutor
+from repro.core.serve_planner import ServePlanner
+from repro.data.columns import TABLE2_PLANS
+from repro.data.tpch import QUERY_COLUMNS, generate, scale_columns
+
+SCALE_FACTOR_QUICK = 4
+SCALE_FACTOR_FULL = 8
+
+
+def _pct(vals, q):
+    return float(np.percentile(np.asarray(vals, dtype=np.float64), q))
+
+
+def _encode_request(cols, names):
+    """Fresh Encoded blobs per request: distinct clients ship distinct buffers
+    (same structure -> same signature -> cross-request batching candidates)."""
+    return {n: P.encode(TABLE2_PLANS[n], cols[n]) for n in names}
+
+
+def _executor(cost_model):
+    return StreamingExecutor(chunk_bytes="auto", chunk_decode=True,
+                             policy="adaptive", cost_model=cost_model)
+
+
+def _bitwise_check(done):
+    for req in done.values():
+        for c, rec in req.results.items():
+            np.testing.assert_array_equal(
+                np.asarray(rec.array), P.decode_np(req.encs[c]),
+                err_msg=f"{req.rid}/{c} serving decode")
+
+
+def _drain_stats(planner, done):
+    reqs = list(done.values())
+    lat = [r.latency_s for r in reqs]
+    reports = planner.reports
+    return {
+        "wall_s": sum(r.wall_s for r in reports),
+        "p50": _pct(lat, 50), "p99": _pct(lat, 99),
+        "launches": sum(r.decode_launches for r in reports),
+        "cross_saved": sum(r.cross_batched_saved for r in reports),
+        "shared_mk": sum(r.shared_makespan_s for r in reports),
+        "naive_mk": sum(r.naive_makespan_s for r in reports),
+        "plain_bytes": sum(rec.plain_bytes for r in reqs
+                           for rec in r.results.values()),
+    }
+
+
+def main(quick: bool = False, cost_cache: str | None = None) -> list[str]:
+    cols = generate(scale=0.002 if quick else 0.01, seed=0)
+    cols = scale_columns(cols,
+                         SCALE_FACTOR_QUICK if quick else SCALE_FACTOR_FULL,
+                         [n for n in cols if n.startswith("L_")])
+    cm = (CostModel.load(cost_cache)
+          if cost_cache and os.path.exists(cost_cache) else CostModel())
+    rows: list[str] = []
+
+    # ---- closed loop: 6 requests at t=0, shared wave vs per-query FIFO ----
+    mix = [QUERY_COLUMNS[1], QUERY_COLUMNS[6], QUERY_COLUMNS[13]] * 2
+    reqs = [(f"r{i}", _encode_request(cols, names))
+            for i, names in enumerate(mix)]
+
+    shared = ServePlanner(_executor(cm), policy="shared")
+    for rid, encs in reqs:
+        shared.submit(rid, encs)
+    shared.drain()                       # cold: traces + calibrates
+    sh2 = ServePlanner(_executor(cm), policy="shared")
+    for rid, encs in reqs:
+        sh2.submit(rid, encs)
+    t0 = time.perf_counter()
+    done_s = sh2.drain()                 # warm shared wave
+    _ = time.perf_counter() - t0
+    _bitwise_check(done_s)
+    s = _drain_stats(sh2, done_s)
+
+    naive = ServePlanner(_executor(cm), policy="fifo-per-query", max_wave=1)
+    for rid, encs in reqs:
+        naive.submit(rid, encs)
+    naive.drain()                        # cold
+    nv2 = ServePlanner(_executor(cm), policy="fifo-per-query", max_wave=1)
+    for rid, encs in reqs:
+        nv2.submit(rid, encs)
+    done_n = nv2.drain()                 # warm per-query FIFO
+    _bitwise_check(done_n)
+    n = _drain_stats(nv2, done_n)
+
+    thr = s["plain_bytes"] / max(s["wall_s"], 1e-12) / 1e9
+    thr_n = n["plain_bytes"] / max(n["wall_s"], 1e-12) / 1e9
+    # modeled throughput from the deterministic makespans (CPU wall-clock is
+    # noisy; shared_mk <= naive_mk is the regression-relevant invariant)
+    thr_mk = s["plain_bytes"] / max(s["shared_mk"], 1e-12) / 1e9
+    thr_mk_n = n["plain_bytes"] / max(s["naive_mk"], 1e-12) / 1e9
+    hits = sh2.executor.cache.stats["hits"]
+    rows.append(row(
+        "fig20/closed_mix", s["wall_s"],
+        f"shared={s['wall_s']:.4f}s;naive={n['wall_s']:.4f}s;"
+        f"shared_mk={s['shared_mk']:.6f}s;naive_mk={s['naive_mk']:.6f}s;"
+        f"modeled_throughput_gbps={thr_mk:.2f};"
+        f"naive_modeled_throughput_gbps={thr_mk_n:.2f};"
+        f"throughput_gbps={thr:.2f};naive_throughput_gbps={thr_n:.2f};"
+        f"p50={s['p50']:.4f}s;p99={s['p99']:.4f}s;"
+        f"naive_p50={n['p50']:.4f}s;naive_p99={n['p99']:.4f}s;"
+        f"launches={s['launches']};naive_launches={n['launches']};"
+        f"cross_batched_saved={s['cross_saved']};cache_hits={hits};"
+        f"requests={len(reqs)}"))
+
+    # ---- open loop: arrivals in batches, drain services the backlog ----
+    ol = ServePlanner(_executor(cm), policy="shared")
+    batches = [mix[:2], mix[2:4], mix[4:]]
+    done_o: dict = {}
+    t0 = time.perf_counter()
+    for b, batch in enumerate(batches):
+        for i, names in enumerate(batch):
+            ol.submit(f"b{b}x{i}", _encode_request(cols, names))
+        done_o.update(ol.drain())
+    wall_o = time.perf_counter() - t0
+    _bitwise_check(done_o)
+    o = _drain_stats(ol, done_o)
+    rows.append(row(
+        "fig20/open_loop", wall_o,
+        f"wall={wall_o:.4f}s;waves={len(ol.reports)};"
+        f"shared_mk={o['shared_mk']:.6f}s;naive_mk={o['naive_mk']:.6f}s;"
+        f"p50={o['p50']:.4f}s;p99={o['p99']:.4f}s;"
+        f"launches={o['launches']};cross_batched_saved={o['cross_saved']};"
+        f"requests={len(done_o)}"))
+
+    # ---- SLO mix: bulk scan + point queries; point tail must not degrade ----
+    bulk_names = QUERY_COLUMNS[1]
+    point_names = ["O_ORDERKEY"]
+    sl = ServePlanner(_executor(cm), policy="slo")
+    sl.submit("bulk0", _encode_request(cols, bulk_names), klass="bulk")
+    for i in range(3):
+        sl.submit(f"pt{i}", _encode_request(cols, point_names), klass="point")
+    done_slo = sl.drain()
+    _bitwise_check(done_slo)
+    rep = sl.reports[-1]
+    pt_fin = [rep.modeled_finish_s[r] for r in rep.rids if r.startswith("pt")]
+    pt_naive = [rep.naive_finish_s[r] for r in rep.rids if r.startswith("pt")]
+    pt_meas = [done_slo[r].latency_s for r in done_slo if r.startswith("pt")]
+    rows.append(row(
+        "fig20/slo_mix", max(pt_meas),
+        f"point_p99_mk={max(pt_fin):.6f}s;"
+        f"point_p99_naive_mk={max(pt_naive):.6f}s;"
+        f"point_p99={_pct(pt_meas, 99):.4f}s;"
+        f"bulk_mk={rep.modeled_finish_s['bulk0']:.6f}s;"
+        f"shared_mk={rep.shared_makespan_s:.6f}s;"
+        f"naive_mk={rep.naive_makespan_s:.6f}s;"
+        f"chosen={rep.chosen};preempted={rep.preempted}"))
+
+    if cost_cache:
+        cm.save(cost_cache)
+        rows.append(row("fig20/cost_cache", 0.0,
+                        f"path={cost_cache};n_observed={cm.n_observed};"
+                        f"signatures={len(cm.sig_stats)}"))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--cost-cache", default=None,
+                    help="CostModel JSON path: load before, save after "
+                         "(warm-starts calibration across runs)")
+    args = ap.parse_args()
+    main(quick=args.quick, cost_cache=args.cost_cache)

@@ -1,9 +1,10 @@
 #!/usr/bin/env bash
-# Benchmark smoke: run fig19 (end-to-end TPC-H movement+decode) at tiny scale
-# and record the per-query Z_run / Zc_run / planned / measured makespans in
-# BENCH_fig19.json, so every PR leaves a machine-readable perf datapoint
-# (wall-clock is CPU-noisy; the planned-vs-baseline fields are deterministic
-# given the measured timings and are the regression-relevant signal).
+# Benchmark smoke: run fig19 (end-to-end TPC-H movement+decode) and fig20
+# (multi-query serving) at tiny scale and record the per-query Z_run / Zc_run /
+# planned / measured makespans plus the serving rows in BENCH_fig19.json, so
+# every PR leaves a machine-readable perf datapoint (wall-clock is CPU-noisy;
+# the planned-vs-baseline / shared-vs-naive fields are deterministic given the
+# measured timings and are the regression-relevant signal).
 #
 # Guards (exit non-zero, failing CI loudly):
 #   * planned makespan must not exceed the FIFO baseline on any row -- the
@@ -11,14 +12,19 @@
 #   * the GP-column Zc_run row (measured group-boundary chunked decode over
 #     Group-Parallel / Non-Parallel columns) must be present;
 #   * the decode-fused Q6 row must be present and fused must not be slower
-#     than materialize-then-query (the late-materialization win, measured).
+#     than materialize-then-query (the late-materialization win, measured);
+#   * the fig20 shared serving plan's aggregate makespan must not exceed the
+#     naive per-query FIFO composition (the serve planner's dominance-by-
+#     construction invariant), cross-query signature batching must reduce
+#     decode launches on the closed mix, and the SLO policy's point-class
+#     tail must not degrade past the naive composition.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} python - <<'EOF'
 import json
 import sys
 
-from benchmarks import fig19_e2e
+from benchmarks import fig19_e2e, fig20_serving
 
 rows = fig19_e2e.main(quick=True)
 out = {}
@@ -42,6 +48,10 @@ for line in rows:
         out["gp_columns"] = {k: fields[k] for k in
                              ("Zc_run", "gp_cols", "gp_chunk_cols")
                              if k in fields}
+for line in fig20_serving.main(quick=True):
+    name, _, derived = line.split(",", 2)
+    key = "serving_" + name.split("/", 1)[1]
+    out[key] = dict(kv.split("=", 1) for kv in derived.split(";") if "=" in kv)
 failures = []
 for key, fields in out.items():
     if not key.startswith("q") or key.startswith("fused_"):
@@ -65,6 +75,29 @@ else:
     if traffic >= pre:
         failures.append(
             f"fused Q6 traffic {traffic} not below pre-fusion {pre}")
+for key in ("serving_closed_mix", "serving_open_loop", "serving_slo_mix"):
+    if key not in out:
+        failures.append(f"missing fig20 {key} row")
+for key in ("serving_closed_mix", "serving_open_loop"):
+    if key not in out:
+        continue
+    shared = float(out[key]["shared_mk"].rstrip("s"))
+    naive = float(out[key]["naive_mk"].rstrip("s"))
+    if shared > naive * (1 + 1e-6):
+        failures.append(f"{key}: shared makespan {shared:.6f}s > "
+                        f"naive per-query FIFO {naive:.6f}s")
+if "serving_closed_mix" in out:
+    l_s = int(out["serving_closed_mix"]["launches"])
+    l_n = int(out["serving_closed_mix"]["naive_launches"])
+    if l_s >= l_n:
+        failures.append(f"cross-query batching did not reduce launches "
+                        f"({l_s} shared vs {l_n} naive)")
+if "serving_slo_mix" in out:
+    pt = float(out["serving_slo_mix"]["point_p99_mk"].rstrip("s"))
+    pt_naive = float(out["serving_slo_mix"]["point_p99_naive_mk"].rstrip("s"))
+    if pt > pt_naive * (1 + 1e-6):
+        failures.append(f"SLO point p99 {pt:.6f}s exceeds naive composition "
+                        f"{pt_naive:.6f}s")
 with open("BENCH_fig19.json", "w") as f:
     json.dump(out, f, indent=2, sort_keys=True)
     f.write("\n")
@@ -74,5 +107,6 @@ if failures:
           file=sys.stderr)
     sys.exit(1)
 print("bench-smoke: planned <= FIFO on every row; GP Zc_run recorded; "
-      "fused Q6 beats materialize-then-query")
+      "fused Q6 beats materialize-then-query; serving shared <= naive FIFO "
+      "with cross-query batching reducing launches")
 EOF

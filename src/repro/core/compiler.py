@@ -417,12 +417,16 @@ class ProgramCache:
         self.evictions = 0
 
     def __len__(self) -> int:
-        return len(self._programs)
+        with self._lock:
+            return len(self._programs)
 
     @property
     def stats(self) -> dict[str, int]:
-        return {"programs": len(self._programs), "hits": self.hits,
-                "misses": self.misses, "evictions": self.evictions}
+        # snapshot under the lock: concurrent submitters share one cache, and a
+        # torn read (hits bumped, programs not yet) would miscount reuse
+        with self._lock:
+            return {"programs": len(self._programs), "hits": self.hits,
+                    "misses": self.misses, "evictions": self.evictions}
 
     def clear(self) -> None:
         with self._lock:

@@ -407,10 +407,22 @@ class StreamingExecutor:
     # --------------------------------------------------------------------- run
     def run(self, encs: dict[str, plan_mod.Encoded] | None = None,
             order: Sequence[str] | None = None,
-            plan: ExecutionPlan | None = None) -> dict[str, ColumnExec]:
+            plan: ExecutionPlan | None = None,
+            preempt=None, on_ready=None) -> dict[str, ColumnExec]:
         """Transfer + decode a set of columns per an ExecutionPlan; returns
         per-column records.  Without a plan, one is built from the constructor
-        defaults; measured actuals feed back into the cost model either way."""
+        defaults; measured actuals feed back into the cost model either way.
+
+        ``preempt`` (optional, ``() -> None``) is invoked at every safe yield
+        point -- between decode units and at per-chunk launch boundaries --
+        so a serving layer can interleave urgent work (e.g. a point query's
+        nested ``run``) into a long bulk decode without killing it: the
+        outer run's staged transfers and launched chunks are all local state,
+        so a nested ``run`` on the same executor composes.  ``on_ready``
+        (optional, ``(name: str) -> None``) fires as soon as each column's
+        output array is materialized (blocked-on) -- per-column completion
+        is what per-REQUEST latency is made of when one shared run serves
+        many queries' columns."""
         if encs is not None:
             for name, enc in encs.items():
                 if self._programs.get(name) is None or self._encoded.get(name) is not enc:
@@ -518,13 +530,17 @@ class StreamingExecutor:
         window = plan.window
         results: dict[str, ColumnExec] = {}
         for kind, prog, members in units:
+            if preempt is not None and results:
+                preempt()                       # unit boundary: safe yield point
             if kind == "chunk":
                 name = members[0]
                 runner = (self._run_group_chunked
                           if scheds[name].kind == "group" else self._run_chunked)
                 results[name] = runner(
                     name, scheds[name], device[name], chunk_ends[name],
-                    issue_until, issue_s, window)
+                    issue_until, issue_s, window, preempt=preempt)
+                if on_ready is not None:
+                    on_ready(name)
                 continue
             last_end = max(col_end[m] for m in members)
             issue_until(last_end + window)      # keep the link busy ahead of decode
@@ -578,12 +594,14 @@ class StreamingExecutor:
                     n_chunks=self._n_chunks(m, decisions[m].chunk_bytes),
                     signature=self._graphs[m].signature,
                     batched_with=tuple(s for s in siblings if s != m))
+                if on_ready is not None:
+                    on_ready(m)
         return results
 
     def _run_chunked(self, name: str, sched: ChunkSchedule,
                      device_col: dict[str, list], ends: list[int],
                      issue_until, issue_s: dict[str, float],
-                     window: int) -> ColumnExec:
+                     window: int, preempt=None) -> ColumnExec:
         """Per-chunk decode of one column: launch chunk k's decode while chunks
         k+1..k+w transfer, then concatenate the chunk outputs on device."""
         graph = self._graphs[name]
@@ -595,6 +613,8 @@ class StreamingExecutor:
         launches = []     # (ChunkProgram, bufs, out_start) -- kept for warm re-time
         outs = []
         for k in range(K):
+            if preempt is not None and k:
+                preempt()          # chunk boundary: point queries may cut in
             issue_until(ends[k] + window)
             t0 = time.perf_counter()
             if whole_bufs is None:     # issued ahead of chunk 0 by construction
@@ -634,7 +654,7 @@ class StreamingExecutor:
     def _run_group_chunked(self, name: str, sched: ChunkSchedule,
                            device_col: dict[str, list], ends: list[int],
                            issue_until, issue_s: dict[str, float],
-                           window: int) -> ColumnExec:
+                           window: int, preempt=None) -> ColumnExec:
         """Group-boundary streaming decode of one column.
 
         The prologue (presum auxes, nested child decodes) launches once over
@@ -654,6 +674,8 @@ class StreamingExecutor:
         launches = []     # (GroupChunkProgram, bufs, args) kept for warm re-time
         outs = []
         for k in range(K):
+            if preempt is not None and k:
+                preempt()          # span boundary: point queries may cut in
             issue_until(ends[k] + window)
             t0 = time.perf_counter()
             if whole_bufs is None:     # issued ahead of span 0 by construction
@@ -870,6 +892,18 @@ class StreamingExecutor:
             traffic_bytes=traffic[0], prefuse_traffic_bytes=traffic[1],
             resident=resident_execs)
 
+    def unregister(self, name: str) -> None:
+        """Drop one registered blob's per-column state (profile, schedules,
+        measured timings).  Compiled programs stay in the shared ProgramCache,
+        and the cost model's per-SIGNATURE history survives -- so a long-lived
+        server keeps its calibration while per-request names come and go."""
+        for store in (self._encoded, self._graphs, self._programs):
+            store.pop(name, None)
+        for store in (self._chunk_counts, self._schedules):
+            for key in [k for k in store if k[0] == name]:
+                store.pop(key)
+        self.cost_model.forget(name)
+
     def run_one(self, enc: plan_mod.Encoded, name: str = "_single") -> jnp.ndarray:
         """Decode a single blob through the cache (serving-path helper).
 
@@ -880,12 +914,7 @@ class StreamingExecutor:
         try:
             return self.run({name: enc})[name].array
         finally:
-            for store in (self._encoded, self._graphs, self._programs):
-                store.pop(name, None)
-            for store in (self._chunk_counts, self._schedules):
-                for key in [k for k in store if k[0] == name]:
-                    store.pop(key)
-            self.cost_model.forget(name)
+            self.unregister(name)
 
     # ------------------------------------------------------------------- model
     def measured_jobs(self, names: Sequence[str] | None = None) -> list[scheduler.Job]:

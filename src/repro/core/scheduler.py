@@ -214,11 +214,30 @@ def simulate_stream(jobs: Sequence[Job],
     straight into its reassembly buffer.  ``None`` keeps the link free-running
     (unbounded staging), matching the historical model.
     """
+    return simulate_stream_finish(jobs, infos, order, window)[0]
+
+
+def simulate_stream_finish(jobs: Sequence[Job],
+                           infos: Sequence[ChunkInfo] | None = None,
+                           order: Sequence[int] | None = None,
+                           window: int | None = None
+                           ) -> tuple[float, list[float]]:
+    """``simulate_stream`` plus per-JOB decode-completion times.
+
+    Returns ``(makespan, finish)`` where ``finish[i]`` is the simulated time
+    job ``i``'s last decode launch completes (indexed like ``jobs``, not like
+    ``order``).  This is what multi-query planning needs: N interleaved
+    queries share one link, and a query is done when the *latest* of its
+    columns finishes -- the per-job completion vector turns one shared-link
+    simulation into per-query latency estimates, so issue orders can be
+    scored on tail latency as well as aggregate makespan.
+    """
     order = list(range(len(jobs))) if order is None else list(order)
     infos = [ChunkInfo()] * len(jobs) if infos is None else list(infos)
     w = None if window is None else max(1, int(window))
     t_link = 0.0
     t_dev = 0.0
+    job_finish = [0.0] * len(jobs)
     finish: list[float] = []  # decode completion per held chunk, transfer order
     for idx in order:
         j, info = jobs[idx], infos[idx]
@@ -236,7 +255,8 @@ def simulate_stream(jobs: Sequence[Job],
         else:
             t_link += j.transfer_s
             t_dev = max(t_dev, t_link) + j.decompress_s
-    return t_dev
+        job_finish[idx] = t_dev
+    return t_dev, job_finish
 
 
 # ------------------------------------------------------- scheduling policies

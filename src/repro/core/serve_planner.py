@@ -1,0 +1,447 @@
+"""Multi-query serving planner: one transfer queue, N concurrent requests.
+
+The per-query planner (``core/planner.py``) optimizes one column set's
+compress->transfer->decode flow in isolation.  A serving system has many
+concurrent requests contending for ONE host->device link, and that contention
+is where holistic scheduling dominates per-query tuning: the link is a shared
+machine-1, the decode device a shared machine-2, and every request's columns
+are jobs in one big two-machine flow shop.
+
+``ServePlanner`` composes per-query ``ExecutionPlan``s under that contention:
+
+  * **Shared transfer queue** -- ``submit`` registers a request's columns
+    under rid-namespaced names (``"<rid>/<col>"``); ``drain`` plans ONE
+    execution over the union of all pending requests' columns and runs it as
+    a single ``StreamingExecutor.run`` -- cross-column pipelining spans
+    request boundaries instead of stopping at them.  Identical ``Encoded``
+    blobs submitted by different requests decode once and fan out.
+  * **Cross-query batching** -- structural signatures are request-agnostic
+    (operand-lifted meta, PR 2), so same-signature columns from DIFFERENT
+    requests mark ``batched`` and decode in one vmap launch through the one
+    shared ProgramCache program.  Shared issue orders additionally cluster
+    same-signature columns adjacently (the executor batches only adjacent
+    plan-marked columns), which per-query FIFO composition cannot do.
+  * **Admission / issue ordering** -- candidate orders (union-adaptive,
+    naive per-query FIFO composition, greedy marginal-makespan over request
+    permutations, SLO hoisting, batched-clustered variants of each) are all
+    scored with ``scheduler.simulate_stream_finish`` -- the chunk-granular
+    shared-link simulator extended to return per-JOB completion times, so N
+    interleaved queries on one link yield per-REQUEST latency estimates.
+    The naive composition is itself a candidate, so the shared plan's
+    simulated makespan is <= the per-query FIFO baseline BY CONSTRUCTION.
+  * **Latency-vs-throughput knobs** -- ``policy="shared"`` minimizes
+    aggregate makespan; ``policy="slo"`` minimizes point-class tail latency
+    first (hoisting point requests' columns to the front) and additionally
+    lets a point query PREEMPT a bulk scan at the next chunk/unit boundary:
+    the executor's ``preempt`` hook calls back into the planner, which runs
+    newly-arrived point requests as a nested wave while the bulk column's
+    remaining chunks are still in flight.  ``policy="fifo-per-query"`` is
+    the naive baseline, kept runnable for measured A/B comparisons.
+
+Measured actuals feed the shared ``CostModel`` exactly like single-query
+runs; per-request names are unregistered after each wave, but per-signature
+timing history survives, so wave N+1 plans from wave N's calibration.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Mapping, Sequence
+
+from repro.core import plan as plan_mod, planner as planner_mod, scheduler
+from repro.core.executor import ColumnExec, StreamingExecutor
+from repro.core.planner import ColumnDecision, ExecutionPlan
+from repro.core.scheduler import ChunkInfo
+
+SEP = "/"           # rid-namespace separator: "<rid>/<col>"
+
+POINT, BULK = "point", "bulk"
+
+
+def qualify(rid, col: str) -> str:
+    """Namespaced executor name for one request's column."""
+    return f"{rid}{SEP}{col}"
+
+
+def rid_of(qname: str) -> str:
+    """Invert ``qualify`` (rids must not contain ``/``; column names may)."""
+    return qname.split(SEP, 1)[0]
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One submitted request: a set of compressed columns wanted on device."""
+
+    rid: str
+    encs: dict[str, plan_mod.Encoded]
+    klass: str = BULK                   # "bulk" | "point" (SLO class)
+    submitted_at: float = 0.0           # perf_counter at submit
+    results: dict[str, ColumnExec] = dataclasses.field(default_factory=dict)
+    done: bool = False
+    latency_s: float = 0.0              # submit -> last column materialized
+    modeled_finish_s: float = 0.0       # simulated finish under the chosen plan
+    preempted_in: bool = False          # serviced by a preemptive nested wave
+
+    @property
+    def arrays(self) -> dict[str, object]:
+        return {c: r.array for c, r in self.results.items()}
+
+
+@dataclasses.dataclass
+class WaveReport:
+    """Accounting for one drained wave (one shared ``executor.run``)."""
+
+    rids: tuple[str, ...]
+    policy: str
+    chosen: str                          # winning candidate's label
+    order: tuple[str, ...]
+    window: int
+    shared_makespan_s: float             # chosen plan, shared simulator
+    naive_makespan_s: float              # per-query FIFO composition, same model
+    candidates: dict[str, float]         # label -> simulated makespan
+    modeled_finish_s: dict[str, float]   # rid -> simulated completion
+    naive_finish_s: dict[str, float]     # rid -> completion under naive order
+    wall_s: float = 0.0
+    decode_launches: int = 0
+    cross_batched_saved: int = 0         # launches removed by cross-rid batching
+    preempted: int = 0                   # point requests serviced mid-wave
+
+
+class ServePlanner:
+    """Shared-resource planner over one ``StreamingExecutor``.
+
+    ``submit`` is thread-safe (concurrent producers share one queue and one
+    ProgramCache); ``drain`` runs waves until the queue is empty and returns
+    every serviced request.  ``max_wave`` bounds how many requests one wave
+    composes (None = all pending).
+    """
+
+    def __init__(self, executor: StreamingExecutor | None = None,
+                 policy: str = "shared", max_wave: int | None = None):
+        if policy not in ("shared", "slo", "fifo-per-query"):
+            raise ValueError(f"unknown serve policy {policy!r}; known: "
+                             "shared, slo, fifo-per-query")
+        self.executor = executor or StreamingExecutor()
+        self.policy = policy
+        self.max_wave = max_wave
+        self._lock = threading.Lock()
+        self._pending: deque[ServeRequest] = deque()
+        self._served: deque[ServeRequest] = deque()   # preemptive completions
+        self._in_wave = False
+        self._last_preempted = 0
+        self.reports: list[WaveReport] = []
+
+    # ------------------------------------------------------------- admission
+    @property
+    def pending(self) -> int:
+        with self._lock:
+            return len(self._pending)
+
+    def submit(self, rid, encs: Mapping[str, plan_mod.Encoded],
+               klass: str = BULK) -> ServeRequest:
+        """Enqueue a request (thread-safe).  Decode happens at ``drain``."""
+        rid = str(rid)
+        if SEP in rid:
+            raise ValueError(f"rid {rid!r} must not contain {SEP!r}")
+        req = ServeRequest(rid=rid, encs=dict(encs), klass=klass,
+                           submitted_at=time.perf_counter())
+        with self._lock:
+            if any(r.rid == rid for r in self._pending):
+                raise ValueError(f"rid {rid!r} already pending")
+            self._pending.append(req)
+        return req
+
+    # ----------------------------------------------------------------- drain
+    def drain(self) -> dict[str, ServeRequest]:
+        """Service every pending request; returns ``{rid: request}``."""
+        done: dict[str, ServeRequest] = {}
+        while True:
+            with self._lock:
+                # requests completed by a preemptive nested wave surface here
+                # too, including when nothing is left pending
+                while self._served:
+                    req = self._served.popleft()
+                    done[req.rid] = req
+                if not self._pending:
+                    break
+                n = len(self._pending) if self.max_wave is None \
+                    else min(self.max_wave, len(self._pending))
+                wave = [self._pending.popleft() for _ in range(n)]
+            report = self._run_wave(wave)
+            self.reports.append(report)
+            for req in wave:
+                done[req.rid] = req
+        return done
+
+    # ------------------------------------------------------------ preemption
+    def _preempt(self) -> None:
+        """Executor yield-point hook (``policy="slo"``): newly-arrived point
+        requests cut in at the next chunk/unit boundary of the running wave
+        via a nested run on the same executor."""
+        if self._in_wave:
+            urgent: list[ServeRequest] = []
+            with self._lock:
+                for req in list(self._pending):
+                    if req.klass == POINT:
+                        self._pending.remove(req)
+                        urgent.append(req)
+            if urgent:
+                self._in_wave = False          # nested waves must not recurse
+                try:
+                    report = self._run_wave(urgent, preemptive=True)
+                finally:
+                    self._in_wave = True
+                self.reports.append(report)
+                with self._lock:
+                    for req in urgent:
+                        req.preempted_in = True
+                        self._served.append(req)
+                self._last_preempted += len(urgent)
+
+    # ------------------------------------------------------------- wave core
+    def _run_wave(self, reqs: Sequence[ServeRequest],
+                  preemptive: bool = False) -> WaveReport:
+        ex = self.executor
+        t_wave0 = time.perf_counter()
+        # register the union, deduplicating identical Encoded objects: two
+        # requests shipping the SAME blob share one decode (the results fan
+        # out), which no per-query execution can do
+        primary: dict[int, str] = {}
+        encs: dict[str, plan_mod.Encoded] = {}
+        owners: dict[str, list[tuple[ServeRequest, str]]] = {}
+        req_names: dict[str, list[str]] = {r.rid: [] for r in reqs}
+        for req in reqs:
+            for col, enc in req.encs.items():
+                qn = qualify(req.rid, col)
+                p = primary.get(id(enc))
+                if p is None:
+                    primary[id(enc)] = p = qn
+                    encs[qn] = enc
+                    owners[qn] = []
+                owners[p].append((req, col))
+                if p not in req_names[req.rid]:
+                    req_names[req.rid].append(p)
+        for qn, enc in encs.items():
+            if qn in ex._encoded:
+                raise ValueError(
+                    f"{qn!r} is already registered (in-flight wave?) -- "
+                    "rids must be unique across concurrent waves")
+            ex.compile(qn, enc)
+
+        try:
+            ep, report = self._plan_wave(reqs, list(encs), req_names)
+            ready_at: dict[str, float] = {}
+
+            def on_ready(name: str) -> None:
+                ready_at[name] = time.perf_counter()
+
+            use_preempt = self.policy == "slo" and not preemptive
+            if not preemptive:       # nested waves must not clobber the count
+                self._last_preempted = 0
+            self._in_wave = use_preempt
+            try:
+                results = ex.run(encs, plan=ep,
+                                 preempt=self._preempt if use_preempt else None,
+                                 on_ready=on_ready)
+            finally:
+                self._in_wave = False
+            report.wall_s = time.perf_counter() - t_wave0
+            report.preempted = 0 if preemptive else self._last_preempted
+
+            # fan results out (aliased columns share the decoded array)
+            for qn, rec in results.items():
+                for req, col in owners[qn]:
+                    req.results[col] = rec
+            for req in reqs:
+                t_ready = max((ready_at[p] for p in req_names[req.rid]
+                               if p in ready_at), default=time.perf_counter())
+                req.latency_s = t_ready - req.submitted_at
+                req.modeled_finish_s = report.modeled_finish_s.get(
+                    req.rid, report.shared_makespan_s)
+                req.done = True
+
+            # launch accounting: a batched group of k columns is ONE launch;
+            # cross_batched_saved counts launches a per-query execution would
+            # have needed on top (one per rid present in each cross-rid group)
+            seen: set[frozenset] = set()
+            launches = saved = 0
+            for qn, rec in results.items():
+                if rec.batched_with:
+                    g = frozenset((qn,) + rec.batched_with)
+                    if g in seen:
+                        continue
+                    seen.add(g)
+                    launches += 1
+                    rids = {rid_of(n) for n in g}
+                    if len(rids) > 1:
+                        saved += len(rids) - 1
+                else:
+                    launches += rec.decode_launches
+            report.decode_launches = launches
+            report.cross_batched_saved = saved
+            return report
+        finally:
+            for qn in encs:
+                ex.unregister(qn)
+
+    # ---------------------------------------------------------- wave planning
+    def _plan_wave(self, reqs: Sequence[ServeRequest], names: list[str],
+                   req_names: dict[str, list[str]]
+                   ) -> tuple[ExecutionPlan, WaveReport]:
+        """Score candidate issue orders under the shared-link simulator and
+        build the winning ``ExecutionPlan``.  The naive per-query FIFO
+        composition is always among the candidates, so the chosen makespan
+        never exceeds it (except under ``slo``, which trades makespan for
+        point-class tail latency -- both numbers are reported)."""
+        ex = self.executor
+        cm = ex.cost_model
+        idx = {n: i for i, n in enumerate(names)}
+        sig_of = {n: ex.graph(n).signature for n in names}
+
+        # union-adaptive plan: chunk configs x fifo/johnson/chunk-johnson
+        # searched over ALL requests' columns at once
+        ep_u = ex.plan(names, policy="adaptive")
+        jobs = cm.jobs(names)
+        overhead = {n: cm.launch_overhead_s(n) for n in names}
+
+        def infos_of(decisions: Mapping[str, ColumnDecision]) -> list[ChunkInfo]:
+            return [ChunkInfo(
+                n_chunks=max(1, decisions[n].n_chunks),
+                chunk_decode=decisions[n].decode_mode == planner_mod.CHUNK,
+                tail_frac=decisions[n].tail_frac,
+                launch_overhead_s=overhead[n],
+                weights=decisions[n].weights) for n in names]
+
+        # per-request plans: what each query would do for itself -- their
+        # concatenation in submission order IS the naive per-query FIFO server
+        per_req_order: dict[str, list[str]] = {}
+        merged_dec: dict[str, ColumnDecision] = {}
+        for req in reqs:
+            rnames = req_names[req.rid]
+            if not rnames:               # fully deduplicated against earlier reqs
+                per_req_order[req.rid] = []
+                continue
+            ep_r = ex.plan(rnames, policy="adaptive")
+            per_req_order[req.rid] = [n for n in ep_r.order if n in idx]
+            merged_dec.update({n: ep_r.decisions[n] for n in rnames})
+        naive_order = [n for req in reqs for n in per_req_order[req.rid]]
+
+        def cluster(order: Sequence[str],
+                    decisions: Mapping[str, ColumnDecision]) -> list[str]:
+            """Pull same-signature batched columns adjacent (stable): the
+            executor only merges ADJACENT batched columns into one vmap
+            launch, and same-signature jobs have interchangeable times."""
+            placed: set[str] = set()
+            out: list[str] = []
+            for n in order:
+                if n in placed:
+                    continue
+                out.append(n)
+                placed.add(n)
+                if decisions[n].decode_mode == planner_mod.BATCHED:
+                    for m in order:
+                        if (m not in placed and sig_of[m] == sig_of[n]
+                                and decisions[m].decode_mode
+                                == planner_mod.BATCHED):
+                            out.append(m)
+                            placed.add(m)
+            return out
+
+        def mark_batched(decisions: dict[str, ColumnDecision]) -> None:
+            """Cross-REQUEST batching marks: whole-mode columns sharing a
+            structural signature (request-agnostic by construction) decode in
+            one vmap launch when adjacent."""
+            by_sig: dict[str, list[str]] = {}
+            for n, d in decisions.items():
+                if d.decode_mode in (planner_mod.WHOLE, planner_mod.BATCHED) \
+                        and not d.fused:
+                    by_sig.setdefault(sig_of[n], []).append(n)
+            for ns in by_sig.values():
+                mode = planner_mod.BATCHED if len(ns) > 1 else planner_mod.WHOLE
+                for n in ns:
+                    decisions[n] = dataclasses.replace(decisions[n],
+                                                       decode_mode=mode)
+
+        union_dec = dict(ep_u.decisions)
+        mark_batched(union_dec)
+        mark_batched(merged_dec)
+
+        # greedy marginal-makespan request permutation: place next the request
+        # whose addition grows the composed makespan least (admission ordering
+        # by marginal cost over the shared model)
+        merged_infos = infos_of(merged_dec)
+
+        def composed_mk(prefix: list[str]) -> float:
+            return scheduler.simulate_stream(
+                jobs, merged_infos, [idx[n] for n in prefix], ep_u.window)
+
+        remaining = list(reqs)
+        greedy_order: list[str] = []
+        while remaining:
+            best_req, best_mk = None, float("inf")
+            for req in remaining:
+                mk = composed_mk(greedy_order + per_req_order[req.rid])
+                if mk < best_mk - 1e-15:
+                    best_req, best_mk = req, mk
+            greedy_order += per_req_order[best_req.rid]
+            remaining.remove(best_req)
+
+        # SLO hoisting: point requests' columns first (submission order), bulk
+        # after -- bounds point tail latency at some makespan cost
+        points = [r for r in reqs if r.klass == POINT]
+        bulks = [r for r in reqs if r.klass != POINT]
+        slo_order = [n for r in points + bulks for n in per_req_order[r.rid]]
+
+        candidates: dict[str, tuple[list[str], dict[str, ColumnDecision]]] = {
+            "shared-union": (list(ep_u.order), union_dec),
+            "shared-union-clustered": (cluster(ep_u.order, union_dec),
+                                       union_dec),
+            "fifo-per-query": (naive_order, merged_dec),
+            "greedy-marginal": (greedy_order, merged_dec),
+            "greedy-clustered": (cluster(greedy_order, merged_dec), merged_dec),
+        }
+        if points and bulks:
+            candidates["slo-hoist"] = (slo_order, merged_dec)
+
+        scored: dict[str, tuple[float, list[float]]] = {}
+        for label, (order, dec) in candidates.items():
+            mk, fin = scheduler.simulate_stream_finish(
+                jobs, infos_of(dec), [idx[n] for n in order], ep_u.window)
+            scored[label] = (mk, fin)
+
+        def req_finish(fin: list[float]) -> dict[str, float]:
+            return {r.rid: max((fin[idx[n]] for n in req_names[r.rid]),
+                               default=0.0) for r in reqs}
+
+        naive_mk, naive_fin = scored["fifo-per-query"]
+        if self.policy == "fifo-per-query":
+            chosen = "fifo-per-query"
+        elif self.policy == "slo" and points:
+            # lexicographic: minimize the worst point-class finish, then the
+            # aggregate makespan -- the latency-vs-throughput knob
+            def key(label):
+                mk, fin = scored[label]
+                rf = req_finish(fin)
+                tail = max((rf[r.rid] for r in points), default=0.0)
+                return (tail, mk)
+            chosen = min(scored, key=key)
+        else:
+            chosen = min(scored, key=lambda kv: scored[kv][0])
+
+        order, decisions = candidates[chosen]
+        mk, fin = scored[chosen]
+        plan = ExecutionPlan(
+            order=tuple(order), decisions=dict(decisions),
+            policy=f"serve-{self.policy}:{chosen}", window=ep_u.window,
+            modeled_makespan_s=mk,
+            baselines={lbl: s[0] for lbl, s in scored.items()})
+        report = WaveReport(
+            rids=tuple(r.rid for r in reqs), policy=self.policy, chosen=chosen,
+            order=tuple(order), window=ep_u.window,
+            shared_makespan_s=mk, naive_makespan_s=naive_mk,
+            candidates={lbl: s[0] for lbl, s in scored.items()},
+            modeled_finish_s=req_finish(fin),
+            naive_finish_s=req_finish(naive_fin))
+        return plan, report

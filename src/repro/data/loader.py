@@ -287,3 +287,22 @@ class ColumnPipeline:
             self._measure(n)
         return self.executor.modeled_makespan(
             names=names, pipeline=pipeline, johnson=johnson, chunked=chunked)
+
+    def serve_planner(self, policy: str = "shared",
+                      max_wave: int | None = None):
+        """Multi-query serving planner sharing this pipeline's executor (and
+        therefore its ProgramCache and calibrated CostModel): concurrent
+        requests' columns compose into one shared transfer queue, with
+        cross-request signature batching and SLO-aware issue ordering
+        (``core/serve_planner.py``).  Requests submit their own ``Encoded``
+        blobs; ``encode_request`` builds one from this pipeline's plans."""
+        from repro.core.serve_planner import ServePlanner
+
+        return ServePlanner(self.executor, policy=policy, max_wave=max_wave)
+
+    def encode_request(self, columns: dict[str, np.ndarray]
+                       ) -> dict[str, plan_mod.Encoded]:
+        """Encode a request's columns with this pipeline's per-column plans
+        (serving-path helper: blobs for ``ServePlanner.submit``)."""
+        return {name: plan_mod.encode(self.plans[name], arr)
+                for name, arr in columns.items()}

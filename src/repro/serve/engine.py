@@ -4,18 +4,20 @@ Minimal but real: fixed-slot batch, greedy sampling, per-slot lengths, slot recy
 when a sequence emits EOS or hits max length.  The decode step is one jitted program
 (shape-stable), which is what the dry-run lowers for the decode_* shapes.
 
-Prompts may arrive as ZipFlow-compressed blobs (``submit_compressed``): they are
-decoded through the shared ``StreamingExecutor``/``ProgramCache``, so every request
-with the same compression structure reuses one jitted decode program -- the serving
-analogue of the column pipeline's one-jit-per-structure rule.  Data-dependent meta
-(bitpack base / bit width) is a runtime operand, not program identity, so two
-prompts of equal length with different token ranges hit the same cached program
-instead of compiling twice.
+Prompts may arrive as ZipFlow-compressed blobs (``submit_compressed``): they
+enqueue into a shared ``ServePlanner`` transfer queue instead of decoding
+synchronously -- all prompts pending at the next admission drain as ONE planned
+wave through the shared ``StreamingExecutor``/``ProgramCache``, so same-structure
+prompts from different requests decode in one batched vmap launch (cross-query
+batching) and the issue order is chosen under the shared-link contention model.
+Data-dependent meta (bitpack base / bit width) is a runtime operand, not program
+identity, so two prompts of equal length with different token ranges hit the
+same cached program instead of compiling twice.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from collections import deque
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +26,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import plan as plan_mod
 from repro.core.executor import StreamingExecutor
+from repro.core.serve_planner import ServePlanner
 from repro.models import get_model
 
 
@@ -40,6 +43,7 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, batch_slots: int = 4,
                  max_len: int = 512, eos: int = 0,
                  decode_policy: str = "johnson",
+                 serve_policy: str = "shared",
                  executor: StreamingExecutor | None = None):
         self.cfg = cfg
         self.model = get_model(cfg)
@@ -50,20 +54,40 @@ class ServeEngine:
         self.state = self.model.make_state(batch_slots, max_len)
         self._decode = jax.jit(
             lambda p, t, st: self.model.decode_step(p, t, st))
-        self._queue: list[Request] = []
+        # prefill feeds the whole prompt in ONE jitted call: a lax.scan of
+        # decode_step over all but the last token (state updates only), then
+        # one decode_step for the last token's logits -- O(1) dispatches per
+        # admission instead of one full-batch launch per prompt token.  One
+        # compile per prompt LENGTH (shapes jit), same granularity as the
+        # compressed-prompt decode programs below.
+        self._prefill = jax.jit(self._prefill_fn)
+        self._queue: deque[Request] = deque()
+        self._requests: list[Request] = []       # everything ever submitted
+        self._awaiting_prompt: dict[int, Request] = {}
         # decompression engine for compressed prompt ingestion: whole-blob transfer
         # (prompts are small) with a bounded private ProgramCache -- every distinct
         # prompt LENGTH is still a distinct structural signature (shapes jit), so an
         # unbounded cache would grow one program per length for the life of the
         # engine; within a length, operand-lifted meta makes all prompts share one.
-        # Decode flows through the same planner layer as the column pipeline
-        # (``decode_policy``), so batched prompt ingestion inherits cost-model
-        # ordering for free -- a single prompt plans trivially to one whole decode
+        # Decode flows through the serving planner's shared transfer queue
+        # (``serve_policy``): prompts pending at one admission decode as one
+        # planned wave, batching same-signature blobs across requests.
         from repro.core.compiler import ProgramCache
 
         self.executor = executor or StreamingExecutor(
             chunk_bytes=None, cache=ProgramCache(max_programs=64),
             policy=decode_policy)
+        self.planner = ServePlanner(self.executor, policy=serve_policy)
+
+    def _prefill_fn(self, params, toks, state):
+        """toks: (S, n_slots, 1) -- scan state through toks[:-1], return the
+        last step's logits.  S >= 1 (empty prompts are guarded out)."""
+        def step(st, t):
+            _, st = self.model.decode_step(params, t, st)
+            return st, None
+
+        state, _ = jax.lax.scan(step, state, toks[:-1])
+        return self.model.decode_step(params, toks[-1], state)
 
     @property
     def decode_cache_stats(self) -> dict[str, int]:
@@ -72,29 +96,49 @@ class ServeEngine:
 
     def submit(self, req: Request):
         self._queue.append(req)
+        self._requests.append(req)
 
     def submit_compressed(self, rid: int, enc: plan_mod.Encoded,
-                          max_new: int = 32) -> Request:
-        """Admit a request whose prompt arrives as a compressed blob."""
-        arr = self.executor.run_one(enc, name=f"prompt/{rid}")
-        req = Request(rid, np.asarray(arr).astype(np.int32).reshape(-1),
-                      max_new=max_new)
-        self.submit(req)
+                          max_new: int = 32, klass: str = "point") -> Request:
+        """Admit a request whose prompt arrives as a compressed blob.
+
+        The blob enqueues into the shared serving planner; it decodes at the
+        next admission as part of one planned multi-request wave (the
+        returned ``Request``'s ``prompt`` is filled then)."""
+        req = Request(rid, np.zeros((0,), np.int32), max_new=max_new)
+        self.planner.submit(rid, {"prompt": enc}, klass=klass)
+        self._awaiting_prompt[rid] = req
+        self._requests.append(req)
         return req
 
+    def _drain_prompts(self):
+        """Decode all queued compressed prompts as one shared planned wave."""
+        if not self.planner.pending:
+            return
+        for rid, sreq in self.planner.drain().items():
+            req = self._awaiting_prompt.pop(int(rid), None)
+            if req is None:
+                continue
+            req.prompt = np.asarray(
+                sreq.results["prompt"].array).astype(np.int32).reshape(-1)
+            self._queue.append(req)
+
     def _admit(self):
+        self._drain_prompts()
         for i, slot in enumerate(self.slots):
             if slot is None and self._queue:
-                req = self._queue.pop(0)
+                req = self._queue.popleft()
                 self.slots[i] = req
-                # per-slot prefill (batch=1 against the shared cache is kept simple:
-                # tokens fed through decode steps; real TPU serving path would use
-                # the prefill program)
-                for tok in req.prompt:
-                    t = np.zeros((len(self.slots), 1), np.int32)
-                    t[i, 0] = tok
-                    logits, self.state = self._decode(
-                        self.params, jnp.asarray(t), self.state)
+                if len(req.prompt) == 0:
+                    # zero-length prompt: nothing to prefill; greedy start
+                    # from uniform logits (argmax -> token 0)
+                    req._last_logits = np.zeros((self.cfg.vocab,), np.float32)
+                    continue
+                toks = np.zeros((len(req.prompt), len(self.slots), 1),
+                                np.int32)
+                toks[:, i, 0] = req.prompt
+                logits, self.state = self._prefill(
+                    self.params, jnp.asarray(toks), self.state)
                 req._last_logits = np.asarray(logits)[i, -1]
 
     def step(self) -> list[tuple[int, int]]:
@@ -125,12 +169,13 @@ class ServeEngine:
 
     def run_to_completion(self, max_steps: int = 1000) -> dict[int, list[int]]:
         done: dict[int, list[int]] = {}
-        all_reqs = list(self._queue)
+        all_reqs = list(self._requests)
         for _ in range(max_steps):
             self.step()
             for r in all_reqs:
                 if r.done and r.rid not in done:
                     done[r.rid] = r.out
-            if not self._queue and not any(self.slots):
+            if (not self._queue and not self._awaiting_prompt
+                    and not any(self.slots)):
                 break
         return done
