@@ -18,10 +18,32 @@
 #     construction invariant), cross-query signature batching must reduce
 #     decode launches on the closed mix, and the SLO policy's point-class
 #     tail must not degrade past the naive composition.
+#   * the fig21 sharded-decode rows must be PRESENT (a silently-skipped
+#     multi-device benchmark would pass forever) and the modeled N=4 sharded
+#     makespan must not exceed the single-device baseline -- the mesh
+#     planner's dominance-by-construction invariant.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+# fig21 needs forced host devices, which must be set before jax initializes --
+# so it runs in its OWN process and hands its rows to the guard step via file
+FIG21_ROWS="$(mktemp)"
+trap 'rm -f "$FIG21_ROWS"' EXIT
+XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} python - "$FIG21_ROWS" <<'EOF'
+import sys
+
+from benchmarks import fig21_sharded
+
+with open(sys.argv[1], "w") as f:
+    for line in fig21_sharded.main(quick=True):
+        f.write(line + "\n")
+EOF
+
+FIG21_ROWS="$FIG21_ROWS" \
 PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} python - <<'EOF'
 import json
+import os
 import sys
 
 from benchmarks import fig19_e2e, fig20_serving
@@ -52,6 +74,14 @@ for line in fig20_serving.main(quick=True):
     name, _, derived = line.split(",", 2)
     key = "serving_" + name.split("/", 1)[1]
     out[key] = dict(kv.split("=", 1) for kv in derived.split(";") if "=" in kv)
+with open(os.environ["FIG21_ROWS"]) as f:
+    for line in f.read().splitlines():
+        if not line.strip():
+            continue
+        name, _, derived = line.split(",", 2)
+        key = name.split("/", 1)[1]
+        out[key] = dict(kv.split("=", 1)
+                        for kv in derived.split(";") if "=" in kv)
 failures = []
 for key, fields in out.items():
     if not key.startswith("q") or key.startswith("fused_"):
@@ -98,6 +128,25 @@ if "serving_slo_mix" in out:
     if pt > pt_naive * (1 + 1e-6):
         failures.append(f"SLO point p99 {pt:.6f}s exceeds naive composition "
                         f"{pt_naive:.6f}s")
+# fig21 sharded decode: rows must exist (fail LOUDLY if the multi-device
+# benchmark silently skipped), and the mesh planner's modeled N=4 makespan
+# must not exceed the single-device baseline it dominates by construction
+for key in ("sharded_model_n1", "sharded_model_n4"):
+    if key not in out:
+        failures.append(f"missing fig21 {key} row")
+if "sharded_model_n4" in out:
+    sharded = float(out["sharded_model_n4"]["sharded_mk"])
+    single = float(out["sharded_model_n4"]["single_mk"])
+    rr = float(out["sharded_model_n4"]["rr_mk"])
+    if sharded > single * (1 + 1e-6):
+        failures.append(f"sharded N=4 modeled makespan {sharded:.1f}us > "
+                        f"single-device {single:.1f}us")
+    if sharded > rr * (1 + 1e-6):
+        failures.append(f"sharded N=4 modeled makespan {sharded:.1f}us > "
+                        f"round-robin {rr:.1f}us")
+if "sharded_measured_n4" in out and out["sharded_measured_n4"].get(
+        "bit_exact") != "1":
+    failures.append("sharded measured N=4 decode was not bit-exact")
 with open("BENCH_fig19.json", "w") as f:
     json.dump(out, f, indent=2, sort_keys=True)
     f.write("\n")
@@ -108,5 +157,6 @@ if failures:
     sys.exit(1)
 print("bench-smoke: planned <= FIFO on every row; GP Zc_run recorded; "
       "fused Q6 beats materialize-then-query; serving shared <= naive FIFO "
-      "with cross-query batching reducing launches")
+      "with cross-query batching reducing launches; sharded N=4 modeled "
+      "makespan <= single-device and round-robin")
 EOF

@@ -105,6 +105,60 @@ def serial_host() -> bool:
 
 
 @dataclasses.dataclass(frozen=True)
+class LinkTopology:
+    """Host->device interconnect description for mesh planning.
+
+    One entry per device-facing link: ``link_scale[d]`` multiplies the
+    calibrated single-link transfer time on link ``d`` (1.0 = the host link
+    the EWMA loop was calibrated against; >1 = a slower link, e.g. a PCIe
+    switch shared leg), ``link_latency_s[d]`` is a fixed per-piece issue
+    latency, and ``host_window`` bounds the TOTAL number of transferred-but-
+    undecoded chunks staged across all links (the shared pinned-host-buffer
+    budget ``scheduler.simulate_stream_multi`` models).  Missing entries
+    default to (1.0, 0.0): a symmetric topology needs no explicit tables.
+    """
+
+    n_links: int = 1
+    link_scale: tuple[float, ...] = ()
+    link_latency_s: tuple[float, ...] = ()
+    host_window: int | None = None
+
+    def scale(self, d: int) -> float:
+        return float(self.link_scale[d]) if d < len(self.link_scale) else 1.0
+
+    def latency_s(self, d: int) -> float:
+        return (float(self.link_latency_s[d])
+                if d < len(self.link_latency_s) else 0.0)
+
+    def resized(self, n_links: int) -> "LinkTopology":
+        """Same per-link parameters over a different link count (elastic
+        re-planning keeps surviving links' characteristics)."""
+        return dataclasses.replace(self, n_links=max(1, int(n_links)))
+
+    def to_json(self) -> dict:
+        return {"n_links": int(self.n_links),
+                "link_scale": [float(x) for x in self.link_scale],
+                "link_latency_s": [float(x) for x in self.link_latency_s],
+                "host_window": (None if self.host_window is None
+                                else int(self.host_window))}
+
+    @classmethod
+    def from_json(cls, data) -> "LinkTopology":
+        """Tolerant parse: known keys only, defaults for anything missing --
+        old caches (no topology block) and future caches (extra keys) both
+        load."""
+        if not isinstance(data, dict):
+            return cls()
+        hw = data.get("host_window")
+        return cls(
+            n_links=max(1, int(data.get("n_links", 1))),
+            link_scale=tuple(float(x) for x in data.get("link_scale", ())),
+            link_latency_s=tuple(float(x)
+                                 for x in data.get("link_latency_s", ())),
+            host_window=None if hw is None else int(hw))
+
+
+@dataclasses.dataclass(frozen=True)
 class ColumnProfile:
     """Planner-facing static summary of one compressed column."""
 
@@ -277,6 +331,9 @@ class CostModel:
         self.transfer_scale = 1.0
         self.decode_scale = 1.0
         self.n_observed = 0
+        # host->device interconnect description for mesh planning; the default
+        # single symmetric link keeps every single-device path unchanged
+        self.topology = LinkTopology()
         self.profiles: dict[str, ColumnProfile] = {}
         self.measured: dict[str, tuple[float, float]] = {}
         # per-SIGNATURE running means of measured (transfer_s, decode_s): the
@@ -439,6 +496,7 @@ class CostModel:
             "n_observed": self.n_observed,
             "signatures": self.sig_stats,
             "selectivity": self.selectivity,
+            "topology": self.topology.to_json(),
         }
         tmp = f"{path}.tmp"
         with open(tmp, "w") as f:
@@ -466,6 +524,9 @@ class CostModel:
             for sig, s in data.get("signatures", {}).items()}
         cm.selectivity = {sig: float(s)
                           for sig, s in data.get("selectivity", {}).items()}
+        # tolerant topology parse: absent in old caches (-> single link),
+        # unknown keys in future caches are ignored
+        cm.topology = LinkTopology.from_json(data.get("topology"))
         return cm
 
     # ------------------------------------------------------------- job views

@@ -60,6 +60,12 @@ from repro.core.ir import DecodeGraph, element_chunk_layout, group_chunk_layout
 from repro.core.planner import ExecutionPlan
 
 
+# ragged ANS stripes: per-span row caps are rounded up to this many words so
+# the number of distinct stripe shapes (= jit retraces of the span programs)
+# stays bounded while still skipping most of the max_words padding
+ROW_CAP_QUANTUM = 64
+
+
 def split_chunks(arr: np.ndarray, chunk_bytes: int | None) -> list[np.ndarray]:
     """Split a host buffer into <=chunk_bytes pieces along axis 0 (2-D buffers like
     the ANS stream matrix chunk by rows).  Concatenating the pieces restores the
@@ -96,10 +102,25 @@ class ChunkSchedule:
     g_sizes: tuple[int, ...] = ()              # group path: groups per span
     pad_sizes: tuple[int, ...] = ()            # group path: padded launch elems
     axes: dict[str, int] = dataclasses.field(default_factory=dict)
+    # unpadded ANS stripes: per-chunk row caps for axis-1 leaves -- span k of
+    # the stripe transfers only streams[:row_caps[leaf][k], g0:g1] (the words
+    # its groups actually consume, quantized) instead of all max_words rows
+    row_caps: dict[str, tuple[int, ...]] = dataclasses.field(
+        default_factory=dict)
 
     @property
     def n_chunks(self) -> int:
         return len(self.out_starts)
+
+    def piece(self, arr: np.ndarray, leaf: str, k: int) -> np.ndarray:
+        """Host slice of ``leaf`` for chunk ``k`` (row-capped for ragged
+        axis-1 stripes)."""
+        lo, hi = self.slices[leaf][k]
+        if self.axes.get(leaf, 0) == 0:
+            return arr[lo:hi]
+        caps = self.row_caps.get(leaf)
+        rows = int(arr.shape[0]) if caps is None else caps[k]
+        return np.ascontiguousarray(arr[:rows, lo:hi])
 
 
 @dataclasses.dataclass
@@ -117,6 +138,7 @@ class ColumnExec:
     batched_with: tuple[str, ...] = ()   # same-signature columns sharing the launch
     decode_launches: int = 1             # >1 iff the per-chunk path ran
     chunk_decoded: bool = False
+    shard_devices: tuple[int, ...] = ()  # mesh path: device id per group shard
 
 
 @dataclasses.dataclass
@@ -141,6 +163,23 @@ class QueryExec:
     traffic_bytes: int
     prefuse_traffic_bytes: int
     resident: dict[str, ColumnExec] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class MeshRunResult:
+    """Execution record for one ``run_sharded`` over a device mesh.
+
+    ``columns`` maps every requested column to its record (sharded columns
+    appear once, assembled); ``per_device`` lists the plan items each logical
+    device executed and ``device_launches`` its decode-launch count."""
+
+    columns: dict[str, ColumnExec]
+    per_device: dict[int, tuple[str, ...]]
+    device_launches: dict[int, int]
+    plan: "planner_mod.MeshExecutionPlan"
+
+    def __getitem__(self, name: str) -> ColumnExec:
+        return self.columns[name]
 
 
 class StreamingExecutor:
@@ -302,29 +341,43 @@ class StreamingExecutor:
         return ChunkSchedule(out_starts=out_starts, out_sizes=out_sizes,
                              slices=slices, whole=layout.whole)
 
-    def _build_group_schedule(self, name: str,
-                              chunk_bytes: int) -> ChunkSchedule | None:
+    def _build_group_schedule(self, name: str, chunk_bytes: int,
+                              g_lo: int = 0, g_hi: int | None = None,
+                              force: bool = False) -> ChunkSchedule | None:
         """Group-boundary schedule: spans of whole groups sized to ~chunk_bytes
         of streamed group bytes, boundaries snapped to the encoder-emitted
         group-boundary prefix sums -- via the same shared formulas
         (``costmodel.groups_per_chunk`` / ``group_bytes_per_group``) the
         planner's ``ColumnProfile`` predicts with, so planned span counts equal
-        executed span counts."""
+        executed span counts.
+
+        ``g_lo``/``g_hi`` restrict the schedule to a group range (a mesh
+        shard); ``g_starts``/``out_starts`` stay GLOBAL so the cached span
+        programs decode shard-local at the right output offsets.  ``force``
+        returns a schedule even when one span would cover the range (shards
+        always need one, the whole-column path treats that as "don't chunk")."""
         graph = self._graphs[name]
         layout = group_chunk_layout(graph)
         if layout is None:
             return None
         ops = plan_mod.host_operands(self._encoded[name])
         n_groups = int(layout.n_groups)
+        g_hi = n_groups if g_hi is None else min(int(g_hi), n_groups)
+        g_lo = max(0, int(g_lo))
+        span_groups = g_hi - g_lo
         bpg = costmodel.group_bytes_per_group(layout, ops)
-        if bpg <= 0 or n_groups <= 1:
+        if span_groups < 1 or bpg <= 0 and not force:
             return None
-        G = costmodel.groups_per_chunk(chunk_bytes, bpg, layout.align_groups)
-        if G >= n_groups:
+        if n_groups <= 1 and not force:
+            return None
+        G = costmodel.groups_per_chunk(chunk_bytes, max(bpg, 1e-9),
+                                       layout.align_groups)
+        if G >= span_groups and not force:
             return None                  # degenerate: one span = whole column
+        G = max(1, min(G, span_groups))
         presum = np.asarray(layout.group_presum, dtype=np.int64)
-        g_starts = tuple(range(0, n_groups, G))
-        g_sizes = tuple(min(G, n_groups - s) for s in g_starts)
+        g_starts = tuple(range(g_lo, g_hi, G))
+        g_sizes = tuple(min(G, g_hi - s) for s in g_starts)
         out_starts = tuple(int(presum[s]) for s in g_starts)
         out_sizes = tuple(int(presum[s + z] - presum[s])
                           for s, z in zip(g_starts, g_sizes))
@@ -357,10 +410,52 @@ class StreamingExecutor:
                     else ((s + z) * spec.num) // spec.den
                 per.append((lo, max(hi, lo + 1)))
             slices[nm] = per
+        # unpadded ANS stripes: when the encoder emitted per-chunk word counts,
+        # each span only transfers the stripe rows its own groups consume
+        # (quantized to ROW_CAP_QUANTUM so span-program retraces stay bounded)
+        row_caps: dict[str, tuple[int, ...]] = {}
+        gw = self._host_group_words(graph, layout)
+        if gw is not None and len(gw) >= g_hi:
+            for nm, axis in layout.axes.items():
+                if axis != 1 or nm not in layout.sliced:
+                    continue
+                max_rows = int(np.asarray(ops[nm]).shape[0])
+                caps = []
+                for s, z in zip(g_starts, g_sizes):
+                    need = max(1, int(np.max(gw[s:s + z])))
+                    q = -(-need // ROW_CAP_QUANTUM) * ROW_CAP_QUANTUM
+                    caps.append(min(max_rows, q))
+                row_caps[nm] = tuple(caps)
         return ChunkSchedule(
             out_starts=out_starts, out_sizes=out_sizes, slices=slices,
             whole=layout.whole, kind="group", g_starts=g_starts,
-            g_sizes=g_sizes, pad_sizes=pad_sizes, axes=dict(layout.axes))
+            g_sizes=g_sizes, pad_sizes=pad_sizes, axes=dict(layout.axes),
+            row_caps=row_caps)
+
+    @staticmethod
+    def _host_group_words(graph: DecodeGraph, layout) -> np.ndarray | None:
+        """Encoder-emitted per-chunk compressed word counts for the layout's
+        ANS stripe, or None when the stage doesn't carry them."""
+        if getattr(layout, "kind", None) != "np":
+            return None
+        stage = graph.stages[layout.stage_index]
+        gw = getattr(stage, "host_group_words", None)
+        return None if gw is None else np.asarray(gw)
+
+    def shard_schedule(self, name: str, chunk_bytes: int | None,
+                       g_lo: int, g_hi: int) -> ChunkSchedule | None:
+        """Group-span schedule restricted to ``[g_lo, g_hi)`` (mesh shards).
+        Always returns a schedule for group-chunkable columns (``force=True``:
+        a shard needs one even when it fits a single span)."""
+        key = (name, chunk_bytes, (int(g_lo), int(g_hi)))
+        if key in self._schedules:
+            return self._schedules[key]
+        cb = (planner_mod.DEFAULT_CHUNK_BYTES if chunk_bytes is None
+              else chunk_bytes)
+        sched = self._build_group_schedule(name, cb, g_lo=g_lo, g_hi=g_hi,
+                                           force=True)
+        self._schedules[key] = sched
+        return sched
 
     def issue_order(self, names: Sequence[str] | None = None) -> list[str]:
         """Column issue order from the configured scheduling policy."""
@@ -408,7 +503,8 @@ class StreamingExecutor:
     def run(self, encs: dict[str, plan_mod.Encoded] | None = None,
             order: Sequence[str] | None = None,
             plan: ExecutionPlan | None = None,
-            preempt=None, on_ready=None) -> dict[str, ColumnExec]:
+            preempt=None, on_ready=None,
+            device=None) -> dict[str, ColumnExec]:
         """Transfer + decode a set of columns per an ExecutionPlan; returns
         per-column records.  Without a plan, one is built from the constructor
         defaults; measured actuals feed back into the cost model either way.
@@ -422,7 +518,9 @@ class StreamingExecutor:
         (optional, ``(name: str) -> None``) fires as soon as each column's
         output array is materialized (blocked-on) -- per-column completion
         is what per-REQUEST latency is made of when one shared run serves
-        many queries' columns."""
+        many queries' columns.  ``device`` (optional ``jax.Device``) commits
+        every staged transfer to that device, so the cached programs execute
+        there -- the per-device leg of a mesh plan (``run_sharded``)."""
         if encs is not None:
             for name, enc in encs.items():
                 if self._programs.get(name) is None or self._encoded.get(name) is not enc:
@@ -474,20 +572,17 @@ class StreamingExecutor:
                     transfer_items.append((name, k, 0, host[name][k][0]))
                 ends = []
                 for i in range(sched.n_chunks):
-                    for k, per in sched.slices.items():
-                        lo, hi = per[i]
-                        arr = np.asarray(ops[k])
+                    for k in sched.slices:
                         # group-path leaves may slice off axis 0 (ANS stripes
-                        # hand each span its own column block)
-                        piece = (arr[lo:hi] if sched.axes.get(k, 0) == 0
-                                 else np.ascontiguousarray(arr[:, lo:hi]))
+                        # hand each span its own row-capped column block)
+                        piece = sched.piece(np.asarray(ops[k]), k, i)
                         host[name].setdefault(k, []).append(piece)
                         transfer_items.append((name, k, i, piece))
                     ends.append(len(transfer_items))
                 chunk_ends[name] = ends
             col_end[name] = len(transfer_items)
 
-        device: dict[str, dict[str, list]] = {n: {k: [None] * len(p) for k, p in
+        staged: dict[str, dict[str, list]] = {n: {k: [None] * len(p) for k, p in
                                                   host[n].items()} for n in order}
         cursor = 0
         # time spent issuing each column's device_puts: on CPU the copy happens
@@ -500,7 +595,7 @@ class StreamingExecutor:
             while cursor < min(target, len(transfer_items)):
                 name, k, i, piece = transfer_items[cursor]
                 t = time.perf_counter()
-                device[name][k][i] = jax.device_put(piece)   # async H2D
+                staged[name][k][i] = jax.device_put(piece, device)  # async H2D
                 issue_s[name] += time.perf_counter() - t
                 cursor += 1
 
@@ -537,7 +632,7 @@ class StreamingExecutor:
                 runner = (self._run_group_chunked
                           if scheds[name].kind == "group" else self._run_chunked)
                 results[name] = runner(
-                    name, scheds[name], device[name], chunk_ends[name],
+                    name, scheds[name], staged[name], chunk_ends[name],
                     issue_until, issue_s, window, preempt=preempt)
                 if on_ready is not None:
                     on_ready(name)
@@ -547,7 +642,7 @@ class StreamingExecutor:
             t0 = time.perf_counter()
             bufs_per_member = []
             for m in members:
-                chunks = device[m]
+                chunks = staged[m]
                 bufs = {k: (pieces[0] if len(pieces) == 1
                             else jnp.concatenate(pieces, axis=0))
                         for k, pieces in chunks.items()}
@@ -654,7 +749,8 @@ class StreamingExecutor:
     def _run_group_chunked(self, name: str, sched: ChunkSchedule,
                            device_col: dict[str, list], ends: list[int],
                            issue_until, issue_s: dict[str, float],
-                           window: int, preempt=None) -> ColumnExec:
+                           window: int, preempt=None,
+                           observe: bool = True) -> ColumnExec:
         """Group-boundary streaming decode of one column.
 
         The prologue (presum auxes, nested child decodes) launches once over
@@ -716,13 +812,147 @@ class StreamingExecutor:
             decode_s = dispatch
         enc = self._encoded[name]
         transfer_s = issue_s[name] + residual
-        self.cost_model.observe(name, transfer_s, decode_s)
+        if observe:
+            # shard-local runs skip calibration: a fraction of a column would
+            # skew the per-column (transfer_s, decode_s) actuals
+            self.cost_model.observe(name, transfer_s, decode_s)
         return ColumnExec(
             name=name, array=arr, transfer_s=transfer_s, decode_s=decode_s,
             compressed_bytes=enc.compressed_nbytes, plain_bytes=enc.plain_nbytes,
             n_chunks=K, signature=graph.signature,
             decode_launches=K + (1 if pro_prog is not None else 0),
             chunk_decoded=True)
+
+    # ------------------------------------------------------------------- mesh
+    def _run_shard(self, column: str, spec, chunk_bytes: int | None,
+                   device, window: int) -> ColumnExec:
+        """Decode one group-span shard of a registered column on ``device``.
+
+        Stages the whole-resident leaves plus the span's sliced (row-capped)
+        pieces committed to the target device, then delegates to the group-
+        chunked runner with GLOBAL group/output offsets so the cached span
+        programs decode shard-local unchanged.  Shard timings do not feed
+        ``CostModel.observe`` (they would skew whole-column calibration)."""
+        sched = self.shard_schedule(column, chunk_bytes, spec.g_lo, spec.g_hi)
+        if sched is None:
+            raise ValueError(f"column {column!r} is not group-span shardable")
+        ops = plan_mod.host_operands(self._encoded[column])
+        items: list[tuple[str, int, np.ndarray]] = []
+        device_col: dict[str, list] = {}
+        for nm in sched.whole:
+            device_col[nm] = [None]
+            items.append((nm, 0, np.asarray(ops[nm])))
+        ends: list[int] = []
+        for i in range(sched.n_chunks):
+            for nm in sched.slices:
+                device_col.setdefault(nm, [None] * sched.n_chunks)
+                items.append((nm, i, sched.piece(np.asarray(ops[nm]), nm, i)))
+            ends.append(len(items))
+        issue_s = {column: 0.0}
+        cursor = 0
+
+        def issue_until(target: int) -> None:
+            nonlocal cursor
+            while cursor < min(target, len(items)):
+                nm, i, piece = items[cursor]
+                t = time.perf_counter()
+                device_col[nm][i] = jax.device_put(piece, device)  # async H2D
+                issue_s[column] += time.perf_counter() - t
+                cursor += 1
+
+        rec = self._run_group_chunked(column, sched, device_col, ends,
+                                      issue_until, issue_s, window,
+                                      observe=False)
+        return dataclasses.replace(
+            rec, name=planner_mod.shard_name(column, spec.index))
+
+    def run_sharded(self, mesh_plan, encs: dict[str, plan_mod.Encoded] | None = None,
+                    on_ready=None) -> "MeshRunResult":
+        """Execute a ``MeshExecutionPlan``: each logical device runs its
+        per-device ``ExecutionPlan`` for whole columns (committed transfers,
+        per-device in-flight window) plus shard-local group-span decodes;
+        sharded columns assemble into one ``jax.sharding``-annotated global
+        array when shard sizes are even (no host gather), falling back to
+        device concatenation otherwise."""
+        if encs is not None:
+            for name, enc in encs.items():
+                if (self._programs.get(name) is None
+                        or self._encoded.get(name) is not enc):
+                    self.compile(name, enc)
+        devices = jax.devices()
+        per_device: dict[int, tuple[str, ...]] = {}
+        device_launches: dict[int, int] = {}
+        results: dict[str, ColumnExec] = {}
+        shard_recs: dict[str, list] = {}
+        for li, dplan in enumerate(mesh_plan.plans):
+            dev_id = int(mesh_plan.device_ids[li])
+            dev = devices[dev_id % len(devices)]
+            d_items = list(dplan.order)
+            per_device[dev_id] = tuple(d_items)
+            launches = 0
+            whole = [it for it in d_items if planner_mod.SHARD_SEP not in it]
+            if whole:
+                res = self.run({n: self._encoded[n] for n in whole},
+                               plan=dplan, on_ready=on_ready, device=dev)
+                seen: set[frozenset] = set()
+                for n, rec in res.items():
+                    results[n] = rec
+                    grp = frozenset((n,) + rec.batched_with)
+                    if grp not in seen:     # batched members share one launch
+                        seen.add(grp)
+                        launches += rec.decode_launches
+            for it in d_items:
+                if planner_mod.SHARD_SEP not in it:
+                    continue
+                col = planner_mod.shard_column_of(it)
+                spec = next(s for s in mesh_plan.shards[col] if s.name == it)
+                rec = self._run_shard(col, spec,
+                                      dplan.decisions[it].chunk_bytes,
+                                      dev, dplan.window)
+                launches += rec.decode_launches
+                shard_recs.setdefault(col, []).append((spec, rec, dev_id, dev))
+            device_launches[dev_id] = launches
+        for col in sorted(shard_recs):
+            lst = sorted(shard_recs[col], key=lambda t: t[0].index)
+            recs = [t[1] for t in lst]
+            arr = self._assemble_shards([r.array for r in recs],
+                                        [t[3] for t in lst])
+            enc = self._encoded[col]
+            results[col] = ColumnExec(
+                name=col, array=arr,
+                transfer_s=max(r.transfer_s for r in recs),
+                decode_s=max(r.decode_s for r in recs),
+                compressed_bytes=enc.compressed_nbytes,
+                plain_bytes=enc.plain_nbytes,
+                n_chunks=sum(r.n_chunks for r in recs),
+                signature=self._graphs[col].signature,
+                decode_launches=sum(r.decode_launches for r in recs),
+                chunk_decoded=True,
+                shard_devices=tuple(t[2] for t in lst))
+            if on_ready is not None:
+                on_ready(col)
+        return MeshRunResult(columns=results, per_device=per_device,
+                             device_launches=device_launches, plan=mesh_plan)
+
+    @staticmethod
+    def _assemble_shards(arrs: list, devs: list):
+        """Join shard outputs into one global array.  Equal-size shards on
+        distinct devices join zero-copy via
+        ``jax.make_array_from_single_device_arrays`` over a 1-axis mesh, so
+        the result is already sharding-annotated for a sharded consumer;
+        uneven or co-located shards fall back to device concatenation."""
+        if len(arrs) == 1:
+            return arrs[0]
+        sizes = [int(a.shape[0]) for a in arrs]
+        if len(set(sizes)) == 1 and len(set(devs)) == len(devs):
+            from jax.sharding import Mesh, NamedSharding, PartitionSpec
+            mesh = Mesh(np.array(devs), ("shard",))
+            sharding = NamedSharding(mesh, PartitionSpec("shard"))
+            gshape = (sum(sizes),) + tuple(arrs[0].shape[1:])
+            singles = [jax.device_put(a, d) for a, d in zip(arrs, devs)]
+            return jax.make_array_from_single_device_arrays(
+                gshape, sharding, singles)
+        return jnp.concatenate([jax.device_put(a, devs[0]) for a in arrs])
 
     # ------------------------------------------------------------- fused query
     def run_query(self, fq, encs: dict[str, plan_mod.Encoded] | None = None,

@@ -26,6 +26,7 @@ The module has three parts:
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import itertools
 from typing import Sequence
 
@@ -257,6 +258,110 @@ def simulate_stream_finish(jobs: Sequence[Job],
             t_dev = max(t_dev, t_link) + j.decompress_s
         job_finish[idx] = t_dev
     return t_dev, job_finish
+
+
+def simulate_stream_multi(jobs: Sequence[Job],
+                          infos: Sequence[ChunkInfo] | None = None,
+                          assignment: Sequence[int] | None = None,
+                          n_links: int | None = None,
+                          order: Sequence[int] | None = None,
+                          window: int | None = None,
+                          link_scale: Sequence[float] = (),
+                          link_latency_s: Sequence[float] = (),
+                          host_window: int | None = None
+                          ) -> tuple[float, list[float]]:
+    """``simulate_stream_finish`` over N independent host->device links.
+
+    ``assignment[i]`` is the link (= device) job ``i`` streams over; every
+    link is an independent machine-1 feeding its own device's machine-2, so
+    the mesh pipeline is N two-machine flow shops coupled only through the
+    HOST side: one staging pool (``host_window`` caps the total number of
+    transferred-but-undecoded per-chunk-decode chunks in flight across ALL
+    links, the shared pinned-host-buffer budget) plus per-link FIFO windows
+    (``window``, same meaning as ``simulate_stream``).
+
+    Per-link heterogeneity: ``link_scale[d]`` multiplies transfer times on
+    link ``d`` (1.0 = the cost model's calibrated host link) and
+    ``link_latency_s[d]`` adds a fixed per-piece issue latency -- the
+    topology parameters ``CostModel.topology`` carries.
+
+    The host issues greedily to whichever link frees up first (ties to the
+    lowest link id), each link draining its jobs in ``order``'s induced
+    suborder.  With one default link this reduces EXACTLY to
+    ``simulate_stream_finish``.  Returns ``(makespan, finish)`` where the
+    makespan is the latest device-side completion across links.
+    """
+    order = list(range(len(jobs))) if order is None else list(order)
+    infos = [ChunkInfo()] * len(jobs) if infos is None else list(infos)
+    assignment = [0] * len(jobs) if assignment is None else list(assignment)
+    L = max(1, int(n_links)) if n_links is not None else \
+        (max(assignment) + 1 if assignment else 1)
+    scale = [float(link_scale[d]) if d < len(link_scale) else 1.0
+             for d in range(L)]
+    lat = [float(link_latency_s[d]) if d < len(link_latency_s) else 0.0
+           for d in range(L)]
+    w = None if window is None else max(1, int(window))
+    hw = None if host_window is None else max(1, int(host_window))
+
+    # expand jobs into per-link chunk queues (transfer_s, decode_s, holds_slot)
+    queues: list[list[tuple[int, float, float, bool]]] = [[] for _ in range(L)]
+    for idx in order:
+        j, info = jobs[idx], infos[idx]
+        d = assignment[idx] % L
+        k = max(1, int(info.n_chunks))
+        tw, dw = _chunk_fractions(info, k)
+        if info.chunk_decode and k > 1:
+            for i in range(k):
+                queues[d].append(
+                    (idx, j.transfer_s * tw[i],
+                     j.decompress_s * dw[i]
+                     + (info.launch_overhead_s if i else 0.0), True))
+        else:
+            queues[d].append((idx, j.transfer_s, j.decompress_s, False))
+
+    t_link = [0.0] * L
+    t_dev = [0.0] * L
+    ptr = [0] * L
+    # per-link decode completions of held chunks (FIFO per-link window), plus
+    # one global min-heap for the shared host staging budget
+    link_finish: list[list[float]] = [[] for _ in range(L)]
+    held: list[float] = []
+    job_finish = [0.0] * len(jobs)
+    while True:
+        # the host services whichever link can start its next piece earliest
+        # (per-link window stalls included; the shared budget is applied after
+        # the pick -- it frees in global decode-completion order either way)
+        best_d, best_t = -1, float("inf")
+        for d in range(L):
+            if ptr[d] >= len(queues[d]):
+                continue
+            start = t_link[d]
+            holds = queues[d][ptr[d]][3]
+            if holds and w is not None:
+                m = len(link_finish[d])
+                if m >= w:
+                    start = max(start, link_finish[d][m - w])
+            if start < best_t - 1e-18:
+                best_d, best_t = d, start
+        if best_d < 0:
+            break
+        d = best_d
+        idx, ts, ds, holds = queues[d][ptr[d]]
+        ptr[d] += 1
+        start = best_t
+        if holds and hw is not None:
+            # shared staging pool: stall until enough held chunks have decoded
+            # (slots free at decode completion, earliest-finishing first)
+            while len(held) >= hw:
+                start = max(start, heapq.heappop(held))
+        t_link[d] = start + ts * scale[d] + lat[d]
+        t_dev[d] = max(t_dev[d], t_link[d]) + ds
+        if holds:
+            link_finish[d].append(t_dev[d])
+            if hw is not None:
+                heapq.heappush(held, t_dev[d])
+        job_finish[idx] = t_dev[d]
+    return max(t_dev), job_finish
 
 
 # ------------------------------------------------------- scheduling policies

@@ -107,6 +107,8 @@ class WaveReport:
     decode_launches: int = 0
     cross_batched_saved: int = 0         # launches removed by cross-rid batching
     preempted: int = 0                   # point requests serviced mid-wave
+    devices: tuple[int, ...] = ()        # mesh waves: device ids spanned
+    device_launches: dict[int, int] = dataclasses.field(default_factory=dict)
 
 
 class ServePlanner:
@@ -119,13 +121,18 @@ class ServePlanner:
     """
 
     def __init__(self, executor: StreamingExecutor | None = None,
-                 policy: str = "shared", max_wave: int | None = None):
+                 policy: str = "shared", max_wave: int | None = None,
+                 mesh: int | None = None):
         if policy not in ("shared", "slo", "fifo-per-query"):
             raise ValueError(f"unknown serve policy {policy!r}; known: "
                              "shared, slo, fifo-per-query")
         self.executor = executor or StreamingExecutor()
         self.policy = policy
         self.max_wave = max_wave
+        # mesh=N: waves span N devices -- the union plan re-partitions through
+        # plan_mesh_execution and runs via run_sharded (per-device launch
+        # accounting lands in WaveReport.device_launches)
+        self.mesh = mesh
         self._lock = threading.Lock()
         self._pending: deque[ServeRequest] = deque()
         self._served: deque[ServeRequest] = deque()   # preemptive completions
@@ -237,14 +244,32 @@ class ServePlanner:
             def on_ready(name: str) -> None:
                 ready_at[name] = time.perf_counter()
 
-            use_preempt = self.policy == "slo" and not preemptive
+            use_mesh = (self.mesh or 0) > 1 and not preemptive
+            # mesh waves trade chunk-boundary preemption for per-link
+            # parallelism: urgent point requests still cut in BETWEEN waves
+            use_preempt = (self.policy == "slo" and not preemptive
+                           and not use_mesh)
             if not preemptive:       # nested waves must not clobber the count
                 self._last_preempted = 0
             self._in_wave = use_preempt
             try:
-                results = ex.run(encs, plan=ep,
-                                 preempt=self._preempt if use_preempt else None,
-                                 on_ready=on_ready)
+                if use_mesh:
+                    profiles = {n: ex.column_profile(n) for n in encs}
+                    mesh_ep = planner_mod.plan_mesh_execution(
+                        profiles, ex.cost_model, n_devices=int(self.mesh),
+                        window=ep.window)
+                    report.chosen = f"mesh:{mesh_ep.policy}"
+                    report.candidates["mesh"] = mesh_ep.modeled_makespan_s
+                    report.shared_makespan_s = mesh_ep.modeled_makespan_s
+                    report.devices = tuple(sorted(mesh_ep.device_ids))
+                    mres = ex.run_sharded(mesh_ep, on_ready=on_ready)
+                    results = mres.columns
+                    report.device_launches = dict(mres.device_launches)
+                else:
+                    results = ex.run(
+                        encs, plan=ep,
+                        preempt=self._preempt if use_preempt else None,
+                        on_ready=on_ready)
             finally:
                 self._in_wave = False
             report.wall_s = time.perf_counter() - t_wave0

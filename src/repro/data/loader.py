@@ -115,8 +115,11 @@ class ColumnPipeline:
                  batch_columns: bool = True, chunk_decode: bool = False,
                  policy: str = "chunk-johnson",
                  executor: StreamingExecutor | None = None,
-                 cost_model=None):
+                 cost_model=None, mesh: int | None = None):
         self.plans = plans
+        # mesh=N enables topology-aware multi-device planning: run_sharded()
+        # partitions columns (and group-span shards) over N devices
+        self.mesh = mesh
         self.executor = executor or StreamingExecutor(
             backend=backend, fuse=fuse, chunk_bytes=chunk_bytes,
             pipeline=pipeline, batch_columns=batch_columns,
@@ -198,6 +201,33 @@ class ColumnPipeline:
         ``_measure`` plan from measured timings.
         """
         return self.executor.run(self._encoded, order=order, plan=plan)
+
+    def mesh_plan(self, n_devices: int | None = None, **kw):
+        """Topology-aware ``MeshExecutionPlan`` over the registered columns
+        (``planner.plan_mesh_execution``): whole columns -- and group-span
+        shards of oversized ones -- assigned to ``n_devices`` links so the
+        modeled ``simulate_stream_multi`` makespan is <= round-robin and
+        single-device by construction.  Defaults to the constructor's
+        ``mesh=`` count (else every visible jax device)."""
+        from repro.core import planner as planner_mod
+
+        n = n_devices if n_devices is not None else self.mesh
+        if n is None:
+            n = len(jax.devices())
+        profiles = {name: self.executor.column_profile(name)
+                    for name in self._encoded}
+        kw.setdefault("chunk_bytes", self.chunk_bytes)
+        kw.setdefault("policy", self.policy)
+        return planner_mod.plan_mesh_execution(
+            profiles, self.executor.cost_model, n_devices=n, **kw)
+
+    def run_sharded(self, n_devices: int | None = None, plan=None):
+        """Execute the registered columns over a device mesh (per-device
+        in-flight windows, shard-local decode; sharded outputs land
+        ``jax.sharding``-annotated).  Returns ``executor.MeshRunResult``."""
+        if plan is None:
+            plan = self.mesh_plan(n_devices)
+        return self.executor.run_sharded(plan, self._encoded)
 
     def lower_query(self, qplan):
         """Graft a ``core.query.QueryPlan`` onto the registered columns' decode
@@ -289,7 +319,8 @@ class ColumnPipeline:
             names=names, pipeline=pipeline, johnson=johnson, chunked=chunked)
 
     def serve_planner(self, policy: str = "shared",
-                      max_wave: int | None = None):
+                      max_wave: int | None = None,
+                      mesh: int | None = None):
         """Multi-query serving planner sharing this pipeline's executor (and
         therefore its ProgramCache and calibrated CostModel): concurrent
         requests' columns compose into one shared transfer queue, with
@@ -298,7 +329,8 @@ class ColumnPipeline:
         blobs; ``encode_request`` builds one from this pipeline's plans."""
         from repro.core.serve_planner import ServePlanner
 
-        return ServePlanner(self.executor, policy=policy, max_wave=max_wave)
+        return ServePlanner(self.executor, policy=policy, max_wave=max_wave,
+                            mesh=mesh if mesh is not None else self.mesh)
 
     def encode_request(self, columns: dict[str, np.ndarray]
                        ) -> dict[str, plan_mod.Encoded]:

@@ -10,6 +10,9 @@ survivors.  The pieces implemented here:
   * ``reshard`` -- move a checkpointed pytree onto the new mesh's shardings
     (device_put against newly resolved NamedShardings; on a cluster this is the
     restore path reading the compressed shards of checkpoint.py).
+  * ``replan_suffix`` -- decode-path elasticity: when a device joins or leaves
+    mid-stream, the not-yet-issued columns of a ``MeshExecutionPlan`` re-plan
+    over the surviving links (topology resized), completed work untouched.
   * ``ElasticCoordinator`` -- restart loop glue: on failure, re-mesh, reshard from
     the latest checkpoint, continue at the recorded step with the *same* global
     batch (deterministic batch_fn(step) keeps the data order identical, so the
@@ -64,6 +67,33 @@ def reshard(tree, logical_specs, new_mesh):
     flat_s = jax.tree_util.tree_flatten(shardings)[0]
     return tdef.unflatten([jax.device_put(np.asarray(x), s)
                            for x, s in zip(flat_x, flat_s)])
+
+
+def replan_suffix(mesh_plan, done, surviving_device_ids, cost_model, profiles,
+                  **plan_kwargs):
+    """Re-partition the not-yet-issued suffix of a mesh decode plan after a
+    device joins or leaves.
+
+    ``done`` names the columns already decoded (their shards count as done
+    when the parent column is done); everything else re-plans from scratch
+    over ``surviving_device_ids`` with the cost model's topology resized to
+    the new link count -- completed work is never moved or repeated.  Returns
+    the new ``MeshExecutionPlan`` over the remaining columns (None when
+    nothing is left)."""
+    from repro.core import planner as planner_mod
+
+    done = set(done)
+    remaining = [c for c in mesh_plan.columns() if c not in done]
+    if not remaining:
+        return None
+    ids = tuple(int(x) for x in surviving_device_ids)
+    if not ids:
+        raise RuntimeError("cannot re-plan decode onto zero devices")
+    topo = mesh_plan.topology.resized(len(ids))
+    return planner_mod.plan_mesh_execution(
+        {c: profiles[c] for c in remaining}, cost_model,
+        n_devices=len(ids), device_ids=ids, topology=topo,
+        window=mesh_plan.window, **plan_kwargs)
 
 
 class ElasticCoordinator:

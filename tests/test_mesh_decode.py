@@ -1,0 +1,358 @@
+"""Sharded multi-device streaming decode (topology-aware planning).
+
+In-process tests need no devices: they pin the ``simulate_stream_multi``
+model (exact reduction to the single-link simulator at N=1), the mesh
+planner's assignment-dominance contract (chosen makespan <= round-robin and
+single-device BY CONSTRUCTION -- both are scored candidates), and the
+``LinkTopology`` persistence round-trip (unknown keys tolerated, so old JSON
+caches keep loading).
+
+The multi-device execution paths -- bitwise equality of sharded vs
+single-device decode (including a group-span-sharded column), elastic
+re-planning on simulated device loss, and a ``ServePlanner`` wave spanning
+two devices -- need >1 jax device, and XLA's host-device count is locked at
+first init, so they run in a subprocess with forced host devices (the same
+pattern tests/test_elastic.py uses).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import scheduler
+from repro.core.costmodel import ColumnProfile, CostModel, LinkTopology
+from repro.core.planner import (SHARD_SEP, plan_mesh_execution,
+                                shard_column_of, shard_name)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ------------------------------------------------------ simulate_stream_multi
+
+def _jobs():
+    jobs = [scheduler.Job("a", 3.0, 1.0), scheduler.Job("b", 0.5, 2.0),
+            scheduler.Job("c", 1.5, 1.5), scheduler.Job("d", 0.2, 0.1)]
+    infos = [scheduler.ChunkInfo(4, chunk_decode=True,
+                                 weights=((0.4, 0.4), (0.3, 0.3),
+                                          (0.2, 0.2), (0.1, 0.1))),
+             scheduler.ChunkInfo(1), scheduler.ChunkInfo(2, chunk_decode=True),
+             scheduler.ChunkInfo(1)]
+    return jobs, infos
+
+
+def test_multi_reduces_to_single_link():
+    """N=1, default link params: EXACTLY the single-link chunk simulator,
+    makespan and per-job finishes both."""
+    jobs, infos = _jobs()
+    for window in (1, 2, 4):
+        for order in (None, [3, 1, 0, 2]):
+            mk1, fin1 = scheduler.simulate_stream_finish(
+                jobs, infos, order=order, window=window)
+            mkN, finN = scheduler.simulate_stream_multi(
+                jobs, infos, assignment=[0] * 4, n_links=1,
+                order=order, window=window)
+            assert mkN == pytest.approx(mk1, abs=1e-12)
+            assert finN == pytest.approx(fin1, abs=1e-12)
+
+
+def test_multi_parallel_links_beat_one():
+    """Independent links: splitting jobs over 2 links cannot be slower than
+    serializing them on one, and a degenerate all-on-link-0 assignment with
+    n_links=2 equals the single-link makespan."""
+    jobs, infos = _jobs()
+    mk_one, _ = scheduler.simulate_stream_multi(jobs, infos, [0] * 4,
+                                                n_links=2)
+    mk_single, _ = scheduler.simulate_stream_finish(jobs, infos)
+    assert mk_one == pytest.approx(mk_single, abs=1e-12)
+    mk_split, _ = scheduler.simulate_stream_multi(jobs, infos, [0, 1, 0, 1],
+                                                  n_links=2)
+    assert mk_split <= mk_one + 1e-12
+
+
+def test_multi_link_scale_and_latency():
+    """A slower link stretches only ITS transfers; per-put latency adds per
+    chunk on that link."""
+    jobs, infos = _jobs()
+    assign = [1, 0, 1, 0]          # heavy jobs a, c ride link 1
+    base, base_fin = scheduler.simulate_stream_multi(jobs, infos, assign,
+                                                     n_links=2)
+    slow, _ = scheduler.simulate_stream_multi(
+        jobs, infos, assign, n_links=2, link_scale=(1.0, 3.0))
+    assert slow > base
+    lat, lat_fin = scheduler.simulate_stream_multi(
+        jobs, infos, assign, n_links=2, link_latency_s=(0.0, 0.5))
+    assert lat > base
+    # the untouched link's jobs finish exactly as before
+    untouched = [i for i, d in enumerate(assign) if d == 0]
+    for i in untouched:
+        assert lat_fin[i] == pytest.approx(base_fin[i], abs=1e-12)
+
+
+def test_multi_shared_host_window_serializes():
+    """host_window=1: one shared staging slot forces near-serial behaviour
+    even over independent links -- the budget binds across links."""
+    jobs, infos = _jobs()
+    free, _ = scheduler.simulate_stream_multi(jobs, infos, [0, 1, 0, 1],
+                                              n_links=2)
+    tight, _ = scheduler.simulate_stream_multi(jobs, infos, [0, 1, 0, 1],
+                                               n_links=2, host_window=1)
+    assert tight >= free - 1e-12
+
+
+# ----------------------------------------------------------- planner contract
+
+def _profiles(n=7, seed=0, groups=64):
+    rng = np.random.default_rng(seed)
+    out = {}
+    for i in range(n):
+        nb = int(rng.integers(1 << 16, 1 << 21))
+        presum = np.linspace(0, nb // 4, groups + 1).astype(np.int64)
+        out[f"c{i}"] = ColumnProfile(
+            name=f"c{i}", compressed_nbytes=nb, plain_nbytes=nb * 3,
+            n_kernels=2, signature=f"s{i % 3}", group_chunkable=True,
+            n_groups=groups, group_bytes=float(nb) / groups, group_align=1,
+            pattern="np", group_out_presum=presum)
+    return out
+
+
+@pytest.mark.parametrize("n_devices", [1, 2, 4, 8])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_mesh_assignment_dominance(n_devices, seed):
+    """Chosen modeled makespan <= round-robin AND single-device baselines on
+    every (seed, N) -- they are always among the scored candidates."""
+    profiles = _profiles(seed=seed)
+    cm = CostModel()
+    for p in profiles.values():
+        cm.register(p)
+    mp = plan_mesh_execution(profiles, cm, n_devices=n_devices)
+    mk = mp.modeled_makespan_s
+    assert mk <= mp.baselines["round-robin"] + 1e-12
+    assert mk <= mp.baselines["single-device"] + 1e-12
+    assert mk == pytest.approx(min(mp.baselines.values()), abs=1e-12)
+    # every item assigned exactly once, shards only for oversized columns
+    assert sorted(mp.assignment[i] for i in mp.items) == sorted(
+        mp.assignment.values())
+    for col, specs in mp.shards.items():
+        assert [s.index for s in specs] == list(range(len(specs)))
+        assert specs[0].g_lo == 0
+        assert specs[-1].g_hi == profiles[col].n_groups
+        for a, b in zip(specs, specs[1:]):
+            assert a.g_hi == b.g_lo and a.out_hi == b.out_lo
+
+
+def test_mesh_plan_covers_all_columns():
+    profiles = _profiles()
+    cm = CostModel()
+    for p in profiles.values():
+        cm.register(p)
+    mp = plan_mesh_execution(profiles, cm, n_devices=4,
+                             shard_threshold_bytes=0)
+    assert set(mp.columns()) == set(profiles)
+    assert mp.shards        # threshold 0 forces group-span sharding
+    per_plan = [it for plan in mp.plans for it in plan.order]
+    assert sorted(per_plan) == sorted(mp.items)
+    assert shard_column_of(shard_name("x", 3)) == "x"
+    assert shard_column_of("plain") == "plain"
+    assert SHARD_SEP in shard_name("x", 0)
+
+
+def test_single_device_mesh_matches_base_planner():
+    """N=1 mesh planning degenerates to one plan holding every column."""
+    profiles = _profiles(n=4)
+    cm = CostModel()
+    for p in profiles.values():
+        cm.register(p)
+    mp = plan_mesh_execution(profiles, cm, n_devices=1)
+    assert mp.n_devices == 1 and len(mp.plans) == 1
+    assert not mp.shards
+    assert sorted(mp.plans[0].order) == sorted(profiles)
+
+
+# -------------------------------------------------------- topology round-trip
+
+def test_link_topology_save_load_roundtrip(tmp_path):
+    cm = CostModel()
+    cm.topology = LinkTopology(n_links=4, link_scale=(1.0, 1.25, 1.0, 0.75),
+                               link_latency_s=(1e-5, 2e-5, 1e-5, 1e-5),
+                               host_window=8)
+    path = tmp_path / "cm.json"
+    cm.save(str(path))
+    cm2 = CostModel.load(str(path))
+    assert cm2.topology == cm.topology
+    assert cm2.topology.scale(1) == pytest.approx(1.25)
+    assert cm2.topology.latency_s(3) == pytest.approx(1e-5)
+
+
+def test_link_topology_load_ignores_unknown_keys(tmp_path):
+    """Old caches (no topology) and FUTURE caches (extra keys) both load."""
+    cm = CostModel()
+    path = tmp_path / "cm.json"
+    cm.save(str(path))
+    data = json.loads(path.read_text())
+    old = {k: v for k, v in data.items() if k != "topology"}
+    path.write_text(json.dumps(old))
+    assert CostModel.load(str(path)).topology == LinkTopology()
+    data["topology"] = {"n_links": 2, "link_scale": [1.0, 2.0],
+                        "from_the_future": {"x": 1}}
+    path.write_text(json.dumps(data))
+    cm3 = CostModel.load(str(path))
+    assert cm3.topology.n_links == 2
+    assert cm3.topology.scale(1) == pytest.approx(2.0)
+
+    resized = cm3.topology.resized(3)
+    assert resized.n_links == 3 and resized.scale(1) == pytest.approx(2.0)
+
+
+def test_replan_suffix_repartitions_remaining():
+    """Device loss mid-stream: completed columns never move; the suffix
+    re-plans over the survivors with the topology resized."""
+    from repro.launch.elastic import replan_suffix
+
+    profiles = _profiles()
+    cm = CostModel()
+    for p in profiles.values():
+        cm.register(p)
+    mp = plan_mesh_execution(profiles, cm, n_devices=4)
+    done = list(mp.columns())[:3]
+    mp2 = replan_suffix(mp, done, surviving_device_ids=(0, 2, 3),
+                        cost_model=cm, profiles=profiles)
+    assert mp2.n_devices == 3 and mp2.device_ids == (0, 2, 3)
+    assert set(mp2.columns()) == set(profiles) - set(done)
+    assert mp2.topology.n_links == 3
+    assert mp2.modeled_makespan_s <= mp2.baselines["single-device"] + 1e-12
+    # nothing left -> no plan
+    assert replan_suffix(mp, list(profiles), (0, 1), cm, profiles) is None
+
+
+# ------------------------------------------------- multi-device (subprocess)
+
+_SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax
+import numpy as np
+from repro.core import plan as P, planner
+from repro.core.compiler import ProgramCache
+from repro.core.executor import StreamingExecutor
+from repro.core.serve_planner import ServePlanner
+from repro.launch.elastic import replan_suffix
+
+assert jax.device_count() == 4
+
+rng = np.random.default_rng(7)
+cols = {
+    # big skewed ANS chunk grid: group-span shardable, ragged group_words
+    "big": np.concatenate([np.zeros(50_000, np.int32),
+                           rng.integers(0, 60, 30_000).astype(np.int32)]),
+    "rle": np.repeat(rng.integers(0, 50, 400),
+                     rng.integers(1, 90, 400)).astype(np.int32),
+    "small0": rng.integers(0, 9, 5_000).astype(np.int32),
+    "small1": rng.integers(0, 9, 5_000).astype(np.int32),
+}
+plans = {"big": P.Plan("ans", params={"chunk_size": 512}),
+         "rle": P.make_plan("rle"),
+         "small0": P.Plan("ans", params={"chunk_size": 512}),
+         "small1": P.Plan("ans", params={"chunk_size": 512})}
+encs = {n: P.encode(plans[n], a) for n, a in cols.items()}
+
+# single-device reference
+ref_ex = StreamingExecutor(chunk_bytes=None, cache=ProgramCache())
+refs = {n: np.asarray(r.array) for n, r in ref_ex.run(encs).items()}
+for n, a in cols.items():
+    np.testing.assert_array_equal(refs[n], a)
+
+ex = StreamingExecutor(chunk_bytes="auto", chunk_decode=True,
+                       cache=ProgramCache())
+for n, e in encs.items():
+    ex.compile(n, e)
+profiles = {n: ex.column_profile(n) for n in encs}
+
+# sharded vs single-device decode: bitwise, incl. a group-span-sharded column
+mp = planner.plan_mesh_execution(profiles, ex.cost_model, n_devices=4,
+                                 shard_threshold_bytes=0)
+assert "big" in mp.shards and len(mp.shards["big"]) == 4, mp.shards
+res = ex.run_sharded(mp, encs)
+for n in encs:
+    np.testing.assert_array_equal(np.asarray(res[n].array), refs[n],
+                                  err_msg=n)
+big = res["big"]
+assert len(set(big.shard_devices)) > 1, big.shard_devices
+assert set(res.device_launches) == set(range(4))
+# even-size shards land as one sharding-annotated global array
+if len({s.n_out for s in mp.shards["big"]}) == 1:
+    assert len(res["big"].array.sharding.device_set) == 4
+
+# elastic re-plan on simulated device loss: survivors decode the suffix
+done = [it for it in res.per_device[0]
+        if planner.SHARD_SEP not in it]
+mp2 = replan_suffix(mp, done, surviving_device_ids=(1, 2, 3),
+                    cost_model=ex.cost_model, profiles=profiles,
+                    shard_threshold_bytes=0)
+res2 = ex.run_sharded(mp2, encs)
+for n in mp2.columns():
+    np.testing.assert_array_equal(np.asarray(res2[n].array), refs[n],
+                                  err_msg=n)
+assert set(res2.per_device) <= {1, 2, 3}
+
+# ServePlanner wave spanning 2 devices
+sp = ServePlanner(StreamingExecutor(chunk_bytes="auto", chunk_decode=True,
+                                    cache=ProgramCache()), mesh=2)
+sp.submit("q1", {"big": encs["big"], "small0": encs["small0"]})
+sp.submit("q2", {"rle": encs["rle"], "small1": encs["small1"]})
+served = sp.drain()
+np.testing.assert_array_equal(np.asarray(served["q1"].arrays["big"]),
+                              refs["big"])
+np.testing.assert_array_equal(np.asarray(served["q2"].arrays["rle"]),
+                              refs["rle"])
+rep = sp.reports[-1]
+assert rep.chosen.startswith("mesh:"), rep.chosen
+assert len(rep.devices) == 2 and rep.device_launches, rep
+print("MESH_OK")
+"""
+
+
+def test_mesh_decode_subprocess():
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _SUBPROC], env=env,
+                         capture_output=True, text=True, timeout=420)
+    assert "MESH_OK" in out.stdout, out.stdout + "\n" + out.stderr[-3000:]
+
+
+# -------------------------------------------------------- ragged ANS stripes
+
+def test_ragged_stripe_row_caps_bitexact():
+    """Skewed ANS chunk grid: the schedule caps stripe rows per span (saving
+    transfer bytes vs the padded layout) and decode stays bitwise exact."""
+    from repro.core import plan as P
+    from repro.core.compiler import ProgramCache
+    from repro.core.executor import ROW_CAP_QUANTUM, StreamingExecutor
+
+    rng = np.random.default_rng(3)
+    arr = np.concatenate([np.zeros(40_000, np.int32),
+                          rng.integers(0, 60, 25_000).astype(np.int32)])
+    enc = P.encode(P.Plan("ans", params={"chunk_size": 512}), arr)
+    ex = StreamingExecutor(chunk_bytes=1 << 14, chunk_decode=True,
+                           cache=ProgramCache())
+    ex.compile("c", enc)
+    sched = ex.chunk_schedule("c")
+    assert sched is not None and sched.kind == "group"
+    assert sched.row_caps, "skewed ANS stripe should carry row caps"
+    ops = P.host_operands(enc)
+    saved = 0
+    for nm, caps in sched.row_caps.items():
+        full = int(np.asarray(ops[nm]).shape[0])
+        assert all(1 <= c <= full for c in caps)
+        assert any(c < full for c in caps), (caps, full)
+        assert all(c == full or c % ROW_CAP_QUANTUM == 0 for c in caps)
+        for k, (lo, hi) in enumerate(sched.slices[nm]):
+            saved += (full - caps[k]) * (hi - lo)
+            piece = sched.piece(np.asarray(ops[nm]), nm, k)
+            assert piece.shape == (caps[k], hi - lo)
+    assert saved > 0
+    res = ex.run({"c": enc})["c"]
+    assert res.chunk_decoded
+    np.testing.assert_array_equal(np.asarray(res.array), arr)
