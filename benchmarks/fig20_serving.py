@@ -160,6 +160,37 @@ def main(quick: bool = False, cost_cache: str | None = None) -> list[str]:
         f"launches={o['launches']};cross_batched_saved={o['cross_saved']};"
         f"requests={len(done_o)}"))
 
+    # ---- open loop, background drain: the always-on drain loop services
+    # arrivals with NO explicit drain() call on the submitting thread --
+    # ``start()`` + ``submit()`` + ``req.wait()`` + ``stop()`` is the whole
+    # client API.  Same batched arrivals as open_loop above, so the two rows
+    # compare caller-driven vs engine-driven wave formation. ----
+    od = ServePlanner(_executor(cm), policy="shared").start()
+    try:
+        t0 = time.perf_counter()
+        od_reqs = []
+        for b, batch in enumerate(batches):
+            for i, names in enumerate(batch):
+                od_reqs.append(od.submit(f"d{b}x{i}",
+                                         _encode_request(cols, names)))
+        for req in od_reqs:
+            assert req.wait(timeout=600.0), f"{req.rid} never completed"
+            if req.error is not None:
+                raise req.error
+        wall_d = time.perf_counter() - t0
+    finally:
+        od.stop()
+    done_d = {r.rid: r for r in od_reqs}
+    _bitwise_check(done_d)
+    d = _drain_stats(od, done_d)
+    rows.append(row(
+        "fig20/open_loop_drain", wall_d,
+        f"wall={wall_d:.4f}s;waves={len(od.reports)};"
+        f"shared_mk={d['shared_mk']:.6f}s;"
+        f"p50={d['p50']:.4f}s;p99={d['p99']:.4f}s;"
+        f"launches={d['launches']};cross_batched_saved={d['cross_saved']};"
+        f"requests={len(done_d)};background_drain=1"))
+
     # ---- SLO mix: bulk scan + point queries; point tail must not degrade ----
     bulk_names = QUERY_COLUMNS[1]
     point_names = ["O_ORDERKEY"]

@@ -21,7 +21,12 @@
 #   * the fig21 sharded-decode rows must be PRESENT (a silently-skipped
 #     multi-device benchmark would pass forever) and the modeled N=4 sharded
 #     makespan must not exceed the single-device baseline -- the mesh
-#     planner's dominance-by-construction invariant.
+#     planner's dominance-by-construction invariant;
+#   * the async dispatch engine rows (fig19 worker-thread issuance, fig21
+#     concurrent 4-device issuance) must be present, bit-exact, and within
+#     a noise tolerance of the sequential path on the same plan, and the
+#     fig20 open-loop background-drain row must show requests completing
+#     with no explicit drain() call.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -70,6 +75,8 @@ for line in rows:
         out["gp_columns"] = {k: fields[k] for k in
                              ("Zc_run", "gp_cols", "gp_chunk_cols")
                              if k in fields}
+    elif key == "async_overlap":
+        out["async_overlap"] = fields
 for line in fig20_serving.main(quick=True):
     name, _, derived = line.split(",", 2)
     key = "serving_" + name.split("/", 1)[1]
@@ -147,6 +154,39 @@ if "sharded_model_n4" in out:
 if "sharded_measured_n4" in out and out["sharded_measured_n4"].get(
         "bit_exact") != "1":
     failures.append("sharded measured N=4 decode was not bit-exact")
+# async dispatch engine: worker-thread issuance must not regress past the
+# inline sequential path on the same plan (both best-of-N, interleaved; a
+# single-core host cannot show true overlap, so the guard is no-regression
+# within a noise tolerance, not speedup).  The walls are ~20ms, so the
+# tolerance absorbs scheduler noise; a real regression -- a serialization
+# bug or a stalled worker -- shows as >=2x, which this still catches.
+ASYNC_TOL = 1.25
+if "async_overlap" not in out:
+    failures.append("missing fig19 async_overlap row")
+else:
+    a = float(out["async_overlap"]["async"].rstrip("s"))
+    s = float(out["async_overlap"]["sequential"].rstrip("s"))
+    if a > s * ASYNC_TOL:
+        failures.append(f"fig19 async dispatch {a:.4f}s regresses past "
+                        f"sequential {s:.4f}s (tol {ASYNC_TOL}x)")
+if "async_overlap_n4" not in out:
+    failures.append("missing fig21 async_overlap_n4 row")
+else:
+    c = float(out["async_overlap_n4"]["concurrent"].rstrip("s"))
+    s = float(out["async_overlap_n4"]["sequential"].rstrip("s"))
+    if c > s * ASYNC_TOL:
+        failures.append(f"fig21 concurrent 4-device issuance {c:.4f}s "
+                        f"regresses past sequential {s:.4f}s "
+                        f"(tol {ASYNC_TOL}x)")
+    if out["async_overlap_n4"].get("bit_exact") != "1":
+        failures.append("fig21 concurrent 4-device decode was not bit-exact")
+# the always-on serve drain loop must complete an open-loop mix with no
+# explicit drain() call from the submitting thread
+if "serving_open_loop_drain" not in out:
+    failures.append("missing fig20 open_loop_drain row")
+elif out["serving_open_loop_drain"].get("background_drain") != "1":
+    failures.append("fig20 open_loop_drain row did not run via the "
+                    "background drain loop")
 with open("BENCH_fig19.json", "w") as f:
     json.dump(out, f, indent=2, sort_keys=True)
     f.write("\n")
@@ -158,5 +198,7 @@ if failures:
 print("bench-smoke: planned <= FIFO on every row; GP Zc_run recorded; "
       "fused Q6 beats materialize-then-query; serving shared <= naive FIFO "
       "with cross-query batching reducing launches; sharded N=4 modeled "
-      "makespan <= single-device and round-robin")
+      "makespan <= single-device and round-robin; async dispatch within "
+      "tolerance of sequential on fig19+fig21; background drain loop "
+      "completed the open-loop mix")
 EOF

@@ -444,6 +444,14 @@ class ProgramCache:
         return prog
 
     def _get(self, key: tuple, build: Callable[[], Any]):
+        # Double-checked: fast-path lookup under self._lock, then a per-key
+        # compile lock, then a RE-lookup under self._lock before building --
+        # a racing thread that lost the key_lock race finds the winner's
+        # program on the second check instead of compiling again.  The
+        # DispatchEngine relies on this invariant (exactly one trace+compile
+        # per signature no matter how many threads hit the cache), and its
+        # transfer workers never call into here at all -- only dispatcher
+        # threads trace.
         with self._lock:
             prog = self._lookup(key)
             if prog is not None:

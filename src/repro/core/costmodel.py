@@ -29,6 +29,7 @@ import dataclasses
 import json
 import math
 import os
+import threading
 from typing import Mapping, Sequence
 
 import numpy as np
@@ -331,6 +332,11 @@ class CostModel:
         self.transfer_scale = 1.0
         self.decode_scale = 1.0
         self.n_observed = 0
+        # every read-modify-write feedback path (observe / observe_selectivity
+        # / observe_link) runs under this lock: the dispatch engine makes them
+        # reachable while transfer workers are live, and torn EWMA updates
+        # would silently corrupt calibration
+        self._lock = threading.RLock()
         # host->device interconnect description for mesh planning; the default
         # single symmetric link keeps every single-device path unchanged
         self.topology = LinkTopology()
@@ -412,37 +418,68 @@ class CostModel:
 
     # ------------------------------------------------------------- feedback
     def observe(self, name: str, transfer_s: float, decode_s: float) -> None:
-        """Feed one measured run back: store it and recalibrate the scales."""
-        self.measured[name] = (float(transfer_s), float(decode_s))
-        if name not in self.profiles:
-            return
-        sig = self.profiles[name].signature
-        if sig:
-            s = self.sig_stats.setdefault(
-                sig, {"n": 0.0, "transfer_s": 0.0, "decode_s": 0.0})
-            s["n"] += 1.0
-            s["transfer_s"] += (transfer_s - s["transfer_s"]) / s["n"]
-            s["decode_s"] += (decode_s - s["decode_s"]) / s["n"]
-        raw_t, raw_d = self.raw_estimate(name)
-        a = self.alpha if self.n_observed else 1.0   # first sample snaps
-        if raw_t > 0 and transfer_s > 0:
-            self.transfer_scale += a * (transfer_s / raw_t - self.transfer_scale)
-        if raw_d > 0 and decode_s > 0:
-            self.decode_scale += a * (decode_s / raw_d - self.decode_scale)
-        self.n_observed += 1
+        """Feed one measured run back: store it and recalibrate the scales.
+        Atomic: concurrent observers cannot tear the incremental means or the
+        EWMA read-modify-write."""
+        with self._lock:
+            self.measured[name] = (float(transfer_s), float(decode_s))
+            if name not in self.profiles:
+                return
+            sig = self.profiles[name].signature
+            if sig:
+                s = self.sig_stats.setdefault(
+                    sig, {"n": 0.0, "transfer_s": 0.0, "decode_s": 0.0})
+                s["n"] += 1.0
+                s["transfer_s"] += (transfer_s - s["transfer_s"]) / s["n"]
+                s["decode_s"] += (decode_s - s["decode_s"]) / s["n"]
+            raw_t, raw_d = self.raw_estimate(name)
+            a = self.alpha if self.n_observed else 1.0   # first sample snaps
+            if raw_t > 0 and transfer_s > 0:
+                self.transfer_scale += a * (transfer_s / raw_t
+                                            - self.transfer_scale)
+            if raw_d > 0 and decode_s > 0:
+                self.decode_scale += a * (decode_s / raw_d - self.decode_scale)
+            self.n_observed += 1
 
     def observe_selectivity(self, name: str, sel: float) -> None:
         """Fold a fused run's measured selectivity (Reduce count lane /
         n_rows) into the per-signature EWMA the fused-cost estimate uses."""
-        p = self.profiles.get(name)
-        if p is None or not p.signature:
+        with self._lock:
+            p = self.profiles.get(name)
+            if p is None or not p.signature:
+                return
+            sel = min(1.0, max(0.0, float(sel)))
+            prev = self.selectivity.get(p.signature)
+            if prev is None:
+                self.selectivity[p.signature] = sel
+            else:
+                self.selectivity[p.signature] = prev + self.alpha * (sel - prev)
+
+    def observe_link(self, link: int, ratio: float) -> None:
+        """Fold one device leg's measured/predicted transfer ratio into the
+        per-link EWMA scale ``topology.link_scale[link]``.
+
+        The ratio is relative to the already-calibrated single-link model
+        (``est_transfer_s`` folds ``transfer_scale`` in), so a symmetric mesh
+        converges to ~1.0 per link while a slow leg (shared PCIe switch,
+        throttled lane) drifts above its siblings and
+        ``plan_mesh_execution``'s LPT loads + ``simulate_stream_multi``
+        scoring shift bytes away from it.  The frozen ``LinkTopology`` is
+        replaced atomically under the lock; persisted via ``save``'s
+        "topology" block."""
+        link = int(link)
+        ratio = float(ratio)
+        if not (ratio > 0.0) or not np.isfinite(ratio) or link < 0:
             return
-        sel = min(1.0, max(0.0, float(sel)))
-        prev = self.selectivity.get(p.signature)
-        if prev is None:
-            self.selectivity[p.signature] = sel
-        else:
-            self.selectivity[p.signature] = prev + self.alpha * (sel - prev)
+        with self._lock:
+            topo = self.topology
+            scale = list(topo.link_scale)
+            if len(scale) <= link:
+                scale.extend([1.0] * (link + 1 - len(scale)))
+            scale[link] += self.alpha * (ratio - scale[link])
+            self.topology = dataclasses.replace(
+                topo, n_links=max(topo.n_links, link + 1),
+                link_scale=tuple(scale))
 
     # -------------------------------------------------------- candidate ladder
     def chunk_ladder(self, p: ColumnProfile, max_candidates: int = 12

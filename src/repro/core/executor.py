@@ -44,6 +44,7 @@ indices over exact slices.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Sequence
 
@@ -123,6 +124,272 @@ class ChunkSchedule:
         return np.ascontiguousarray(arr[:rows, lo:hi])
 
 
+# --------------------------------------------------------- dispatch engine
+#
+# Transfer issuance and decode dispatch are split into two roles:
+#
+#   * an *issuer* owns the ordered transfer-item list of one host->device
+#     link and commits ``jax.device_put`` for items the dispatcher has
+#     allowed (the plan's in-flight window, expressed as an item watermark)
+#     subject to the shared host-staging budget;
+#   * the *decode driver* is a generator (``_decode_leg`` and the per-chunk
+#     runners) that yields ``("need", n)`` before it touches staged items
+#     < n, and launches span/chunk programs as soon as those commits land.
+#
+# ``_InlineIssuer`` reproduces the historical single-threaded behavior
+# exactly (``advance`` == the old ``issue_until``); ``_WorkerIssuer`` moves
+# the puts onto a per-link worker thread so H2D copies for chunks k+1..k+w
+# genuinely overlap chunk k's decode launch.  Workers NEVER trace: they only
+# call ``jax.device_put``; every ``ProgramCache.get_*`` (and therefore every
+# jit trace/compile) happens on the dispatcher thread driving the generator.
+
+# one transfer item: (column name for issue-time accounting, destination
+# staging list, slot index, host piece)
+_TransferItem = tuple  # (str, list, int, np.ndarray)
+
+
+class _InlineIssuer:
+    """Synchronous issuer: ``advance(target)`` commits items < target on the
+    calling thread -- byte-for-byte the legacy ``issue_until`` closure."""
+
+    def __init__(self, items: list, device, issue_s: dict[str, float]):
+        self._items = items
+        self._device = device
+        self.issue_s = issue_s
+        self.total = len(items)
+        self.committed = 0
+
+    def advance(self, target: int) -> None:
+        while self.committed < min(target, self.total):
+            name, dest, i, piece = self._items[self.committed]
+            t = time.perf_counter()
+            dest[i] = jax.device_put(piece, self._device)   # async H2D
+            self.issue_s[name] = (self.issue_s.get(name, 0.0)
+                                  + time.perf_counter() - t)
+            self.committed += 1
+
+    def wait(self, target: int) -> None:      # advance already committed them
+        pass
+
+    def consumed(self, upto: int) -> None:    # no staging budget to release
+        pass
+
+    def close(self) -> None:
+        pass
+
+
+class _WorkerIssuer:
+    """One transfer-worker thread for one host->device link.
+
+    The dispatcher advances an item watermark (``advance``, the plan's
+    in-flight window); the worker commits ``device_put`` for allowed items
+    strictly in list order, acquiring one shared host-staging slot per
+    chunk-holding chunk (``acq``/``rel`` flags mark the first/last item of
+    each per-chunk-decode chunk, mirroring ``simulate_stream_multi``'s
+    budget unit).  The dispatcher releases slots as it consumes decoded
+    chunks (``consumed``).  Worker exceptions surface on the dispatcher's
+    next ``wait``/``check_error``; the worker never traces (puts only).
+    """
+
+    def __init__(self, items: list, device, issue_s: dict[str, float],
+                 acq: Sequence[bool] | None = None,
+                 rel: Sequence[bool] | None = None,
+                 budget: threading.BoundedSemaphore | None = None,
+                 cv: threading.Condition | None = None,
+                 name: str = "zipflow-xfer"):
+        self._items = items
+        self._device = device
+        self.issue_s = issue_s
+        self.total = len(items)
+        self.committed = 0
+        self._allowed = 0
+        self._acq = acq
+        self._rel = rel
+        self._budget = budget
+        self._rel_ptr = 0
+        self._stop = False
+        self.error: BaseException | None = None
+        self._cv = cv if cv is not None else threading.Condition()
+        self._thread = threading.Thread(target=self._work, name=name,
+                                        daemon=True)
+        self._thread.start()
+
+    # ----- worker side
+    def _work(self) -> None:
+        try:
+            i = 0
+            while i < self.total:
+                with self._cv:
+                    while self._allowed <= i and not self._stop:
+                        self._cv.wait()
+                    if self._stop:
+                        return
+                    hi = min(self._allowed, self.total)
+                while i < hi:
+                    name, dest, slot, piece = self._items[i]
+                    if self._budget is not None and self._acq is not None \
+                            and self._acq[i]:
+                        # shared pinned-host-staging budget: one slot per
+                        # transferred-but-undecoded chunk across ALL links
+                        while not self._budget.acquire(timeout=0.1):
+                            if self._stop:
+                                return
+                    t = time.perf_counter()
+                    buf = jax.device_put(piece, self._device)  # async H2D
+                    self.issue_s[name] = (self.issue_s.get(name, 0.0)
+                                          + time.perf_counter() - t)
+                    dest[slot] = buf
+                    with self._cv:
+                        self.committed = i + 1
+                        self._cv.notify_all()
+                    i += 1
+        except BaseException as e:          # surfaced at the next wait()
+            with self._cv:
+                self.error = e
+                self._cv.notify_all()
+
+    # ----- dispatcher side
+    def advance(self, target: int) -> None:
+        target = min(target, self.total)
+        with self._cv:
+            if target > self._allowed:
+                self._allowed = target
+                self._cv.notify_all()
+
+    def wait(self, target: int) -> None:
+        """Block until items < target are committed (or raise the worker's
+        exception)."""
+        target = min(target, self.total)
+        with self._cv:
+            while self.committed < target:
+                if self.error is not None:
+                    raise RuntimeError(
+                        "transfer worker failed") from self.error
+                self._cv.wait(timeout=0.5)
+
+    def check_error(self) -> None:
+        if self.error is not None:
+            raise RuntimeError("transfer worker failed") from self.error
+
+    def consumed(self, upto: int) -> None:
+        """Dispatcher consumed items < upto: release their chunks' staging
+        slots (called from the one dispatcher thread only)."""
+        if self._budget is None or self._rel is None:
+            return
+        upto = min(upto, self.total)
+        while self._rel_ptr < upto:
+            if self._rel[self._rel_ptr]:
+                self._budget.release()
+            self._rel_ptr += 1
+
+    def close(self) -> None:
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        self._thread.join(timeout=30.0)
+
+
+class DispatchEngine:
+    """Async dispatch engine: per-link transfer workers + ONE decode
+    dispatcher.
+
+    ``issuer`` spawns a ``_WorkerIssuer`` bound to this engine's shared
+    condition (so any link's commit wakes the dispatcher) and shared
+    host-staging budget (``LinkTopology.host_window``).  ``drive`` round-
+    robins a set of decode-driver generators -- one per device leg -- on the
+    calling thread: a leg is resumed as soon as its pending ``("need", n)``
+    is satisfied, so decode launches for device A interleave with device B's
+    while every link's worker keeps its H2D stream busy.  All tracing /
+    compilation happens here, on the dispatcher thread; workers only
+    ``device_put``.  Liveness: a leg's needs are satisfied in item order and
+    staging slots are released as chunks are consumed, so every held slot
+    belongs to a chunk some leg will consume without further budget -- the
+    any-progress loop cannot deadlock.
+    """
+
+    def __init__(self, host_window: int | None = None):
+        self._cv = threading.Condition()
+        self._budget = (None if host_window is None
+                        else threading.BoundedSemaphore(max(1, host_window)))
+        self._issuers: list[_WorkerIssuer] = []
+
+    def issuer(self, items: list, device, issue_s: dict[str, float],
+               acq: Sequence[bool] | None = None,
+               rel: Sequence[bool] | None = None,
+               name: str = "zipflow-xfer") -> _WorkerIssuer:
+        iss = _WorkerIssuer(items, device, issue_s, acq=acq, rel=rel,
+                            budget=self._budget, cv=self._cv, name=name)
+        self._issuers.append(iss)
+        return iss
+
+    def drive(self, tasks: dict) -> dict:
+        """``tasks``: key -> (generator, issuer).  Returns key -> generator
+        return value.  Must be called from the thread that owns tracing."""
+        results: dict = {}
+        live = dict(tasks)
+        need: dict = {k: None for k in tasks}      # None = not yet started
+        while live:
+            progressed = False
+            for key in list(live):
+                gen, iss = live[key]
+                n = need[key]
+                if n is not None and iss.committed < min(n, iss.total):
+                    iss.check_error()
+                    continue
+                try:
+                    # engine mode reports no per-wait residual: the wait
+                    # happened while OTHER legs were being dispatched
+                    _, need[key] = gen.send(None if n is None else 0.0)
+                except StopIteration as stop:
+                    results[key] = stop.value
+                    del live[key]
+                progressed = True
+            if live and not progressed:
+                with self._cv:
+                    any_err = any(i.error is not None for _, i in live.values())
+                    if not any_err and all(
+                            i.committed < min(need[k], i.total)
+                            for k, (_, i) in live.items()):
+                        self._cv.wait(timeout=0.05)
+        return results
+
+    def close(self) -> None:
+        for iss in self._issuers:
+            iss.close()
+
+
+def _drive_seq(gen, issuer):
+    """Drive ONE decode-leg generator to completion on the calling thread,
+    timing each transfer wait and feeding it back as the generator's residual.
+    With an ``_InlineIssuer`` (whose ``wait`` is a no-op because ``advance``
+    already committed synchronously) this reproduces the legacy sequential
+    executor exactly."""
+    wait_s = None
+    while True:
+        try:
+            _, n = gen.send(wait_s)
+        except StopIteration as stop:
+            return stop.value
+        t0 = time.perf_counter()
+        issuer.wait(n)
+        wait_s = time.perf_counter() - t0
+
+
+@dataclasses.dataclass
+class _StagedLeg:
+    """Host-staged transfer state for one device leg (one ``run`` call or
+    the whole-column part of one mesh device): the ordered decode units plus
+    the GLOBAL transfer-item indices each unit needs committed."""
+
+    decisions: dict
+    scheds: dict[str, ChunkSchedule | None]
+    staged: dict[str, dict[str, list]]
+    col_end: dict[str, int]
+    chunk_ends: dict[str, list[int]]
+    units: list
+    window: int
+
+
 @dataclasses.dataclass
 class ColumnExec:
     """Execution record for one decoded column."""
@@ -197,11 +464,17 @@ class StreamingExecutor:
                  chunk_decode: bool = False,
                  chip: str = DEFAULT_CHIP, cache: ProgramCache | None = None,
                  policy: str = "chunk-johnson",
-                 cost_model: CostModel | None = None):
+                 cost_model: CostModel | None = None,
+                 async_dispatch: bool = False):
         self.backend = backend
         self.fuse = fuse
         self.chunk_bytes = chunk_bytes
         self.pipeline = pipeline
+        # True routes single-device runs through the DispatchEngine (transfer
+        # worker thread + decode dispatcher) by default; run(async_dispatch=..)
+        # overrides per call.  Mesh runs overlap devices regardless (see
+        # run_sharded(concurrent=...)).
+        self.async_dispatch = async_dispatch
         self.batch_columns = batch_columns
         self.prefetch_chunks = (None if prefetch_chunks is None
                                 else max(1, prefetch_chunks))
@@ -504,7 +777,8 @@ class StreamingExecutor:
             order: Sequence[str] | None = None,
             plan: ExecutionPlan | None = None,
             preempt=None, on_ready=None,
-            device=None) -> dict[str, ColumnExec]:
+            device=None,
+            async_dispatch: bool | None = None) -> dict[str, ColumnExec]:
         """Transfer + decode a set of columns per an ExecutionPlan; returns
         per-column records.  Without a plan, one is built from the constructor
         defaults; measured actuals feed back into the cost model either way.
@@ -520,7 +794,10 @@ class StreamingExecutor:
         is what per-REQUEST latency is made of when one shared run serves
         many queries' columns.  ``device`` (optional ``jax.Device``) commits
         every staged transfer to that device, so the cached programs execute
-        there -- the per-device leg of a mesh plan (``run_sharded``)."""
+        there -- the per-device leg of a mesh plan (``run_sharded``).
+        ``async_dispatch`` (None = the constructor knob) routes transfers
+        through a ``DispatchEngine`` worker thread so H2D puts overlap decode
+        launches; results are bitwise identical to the inline path."""
         if encs is not None:
             for name, enc in encs.items():
                 if self._programs.get(name) is None or self._encoded.get(name) is not enc:
@@ -543,70 +820,106 @@ class StreamingExecutor:
         order = [n for n in plan.order if n in names_set]
         decisions = plan.decisions
 
-        # host-side staging, in plan order.  Whole-mode columns split every
-        # operand row-granularly at the column's planned chunk size; per-chunk
-        # columns use the coordinated schedule (whole-resident buffers first,
-        # then chunk 0's slices, chunk 1's, ...).
-        host: dict[str, dict[str, list[np.ndarray]]] = {}
+        # host-side staging, in plan order, into ONE ordered transfer-item
+        # list (the issuer's queue); decode units plus the global item index
+        # each unit needs committed come back as a _StagedLeg the decode-
+        # driver generator consumes.
+        items: list[_TransferItem] = []
+        acq: list[bool] = []
+        rel: list[bool] = []
+        leg = self._stage_leg(order, decisions, plan.window, items, acq, rel)
+        # time spent issuing each column's device_puts: on CPU the copy happens
+        # synchronously at issue; on accelerators issue is cheap and the
+        # residual wait at the block is the real transfer tail -- transfer_s
+        # sums both
+        issue_s: dict[str, float] = {}
+        use_async = (self.async_dispatch if async_dispatch is None
+                     else async_dispatch)
+        if not use_async:
+            # inline path: puts issue synchronously from this thread at the
+            # generator's advance() points -- the legacy sequential executor
+            issuer = _InlineIssuer(items, device, issue_s)
+            gen = self._decode_leg(leg, issuer, preempt=preempt,
+                                   on_ready=on_ready)
+            return _drive_seq(gen, issuer)
+        engine = DispatchEngine(
+            host_window=self.cost_model.topology.host_window)
+        try:
+            issuer = engine.issuer(items, device, issue_s, acq=acq, rel=rel)
+            gen = self._decode_leg(leg, issuer, preempt=preempt,
+                                   on_ready=on_ready)
+            return engine.drive({0: (gen, issuer)})[0]
+        finally:
+            engine.close()
+
+    def _stage_leg(self, order: Sequence[str], decisions, window: int,
+                   items: list, acq: list, rel: list) -> _StagedLeg:
+        """Stage one device leg's columns host-side, APPENDING to the shared
+        per-link ``items``/``acq``/``rel`` lists (so a mesh device's whole
+        columns and shards share one issuer queue and the recorded indices
+        are global).
+
+        Whole-mode columns split every operand row-granularly at the column's
+        planned chunk size; per-chunk columns use the coordinated schedule
+        (whole-resident buffers first, then chunk 0's slices, chunk 1's, ...).
+        ``acq``/``rel`` mark each per-chunk-decode chunk's first/last item --
+        the unit at which a transfer worker acquires / the dispatcher releases
+        one shared host-staging slot (matching ``simulate_stream_multi``'s
+        budget granularity; whole-mode columns hold no slots there either)."""
         scheds: dict[str, ChunkSchedule | None] = {}
         for name in order:
             d = decisions[name]
             scheds[name] = (self.chunk_schedule(name, d.chunk_bytes)
                             if d.decode_mode == planner_mod.CHUNK else None)
-        transfer_items: list[tuple[str, str, int, np.ndarray]] = []
+        staged: dict[str, dict[str, list]] = {}
         col_end: dict[str, int] = {}
         chunk_ends: dict[str, list[int]] = {}
         for name in order:
             ops = plan_mod.host_operands(self._encoded[name])
             sched = scheds[name]
+            cols: dict[str, list] = {}
+            staged[name] = cols
             if sched is None:
-                host[name] = {k: split_chunks(np.asarray(v),
-                                              decisions[name].chunk_bytes)
-                              for k, v in ops.items()}
-                for k, pieces in host[name].items():
+                for k, v in ops.items():
+                    pieces = split_chunks(np.asarray(v),
+                                          decisions[name].chunk_bytes)
+                    cols[k] = [None] * len(pieces)
                     for i, piece in enumerate(pieces):
-                        transfer_items.append((name, k, i, piece))
+                        items.append((name, cols[k], i, piece))
+                        acq.append(False)
+                        rel.append(False)
             else:
-                host[name] = {k: [np.asarray(ops[k])] for k in sched.whole}
                 for k in sched.whole:
-                    transfer_items.append((name, k, 0, host[name][k][0]))
+                    cols[k] = [None]
+                    items.append((name, cols[k], 0, np.asarray(ops[k])))
+                    acq.append(False)
+                    rel.append(False)
                 ends = []
                 for i in range(sched.n_chunks):
+                    first = len(items)
                     for k in sched.slices:
                         # group-path leaves may slice off axis 0 (ANS stripes
                         # hand each span its own row-capped column block)
+                        cols.setdefault(k, [None] * sched.n_chunks)
                         piece = sched.piece(np.asarray(ops[k]), k, i)
-                        host[name].setdefault(k, []).append(piece)
-                        transfer_items.append((name, k, i, piece))
-                    ends.append(len(transfer_items))
+                        items.append((name, cols[k], i, piece))
+                        acq.append(False)
+                        rel.append(False)
+                    if len(items) > first:   # one staging slot per chunk
+                        acq[first] = True
+                        rel[-1] = True
+                    ends.append(len(items))
                 chunk_ends[name] = ends
-            col_end[name] = len(transfer_items)
+            col_end[name] = len(items)
 
-        staged: dict[str, dict[str, list]] = {n: {k: [None] * len(p) for k, p in
-                                                  host[n].items()} for n in order}
-        cursor = 0
-        # time spent issuing each column's device_puts: on CPU the copy happens
-        # synchronously here; on accelerators issue is cheap and the residual wait
-        # at the block is the real transfer tail -- transfer_s sums both
-        issue_s: dict[str, float] = {n: 0.0 for n in order}
-
-        def issue_until(target: int) -> None:
-            nonlocal cursor
-            while cursor < min(target, len(transfer_items)):
-                name, k, i, piece = transfer_items[cursor]
-                t = time.perf_counter()
-                staged[name][k][i] = jax.device_put(piece, device)  # async H2D
-                issue_s[name] += time.perf_counter() - t
-                cursor += 1
-
-        # decode units.  Per-chunk columns are singleton units (their launches are
-        # already split along the chunk axis); *consecutive-in-order* columns the
-        # plan marked batched-by-signature decode in a single vmap launch when
-        # they share one Program.  Grouping only adjacent columns keeps the
-        # transfer/decode overlap: a global group spanning the whole order would
-        # force every transfer to finish before the first decode.  (Johnson's
-        # rule keys on (transfer, decode) times, which are equal for
-        # same-signature columns, so they end up adjacent anyway.)
+        # decode units.  Per-chunk columns are singleton units (their launches
+        # are already split along the chunk axis); *consecutive-in-order*
+        # columns the plan marked batched-by-signature decode in a single vmap
+        # launch when they share one Program.  Grouping only adjacent columns
+        # keeps the transfer/decode overlap: a global group spanning the whole
+        # order would force every transfer to finish before the first decode.
+        # (Johnson's rule keys on (transfer, decode) times, which are equal
+        # for same-signature columns, so they end up adjacent anyway.)
         units: list[tuple[str, Program | None, list[str]]] = []
         for name in order:
             if scheds[name] is not None:
@@ -621,28 +934,45 @@ class StreamingExecutor:
                 units[-1][2].append(name)
             else:
                 units.append(("whole", prog, [name]))
+        return _StagedLeg(decisions=decisions, scheds=scheds, staged=staged,
+                          col_end=col_end, chunk_ends=chunk_ends, units=units,
+                          window=window)
 
-        window = plan.window
+    def _decode_leg(self, leg: _StagedLeg, issuer, preempt=None,
+                    on_ready=None):
+        """Decode-driver generator for one staged leg.
+
+        Yields ``("need", n)`` before consuming staged items < n (the driver
+        -- ``_drive_seq`` or ``DispatchEngine.drive`` -- resumes it once the
+        issuer has committed them, sending back the seconds it waited, 0.0
+        when the wait overlapped other legs' dispatch); all tracing and
+        decode launches happen on the resuming thread.  Returns the
+        per-column ``ColumnExec`` dict."""
+        decisions = leg.decisions
+        issue_s = issuer.issue_s
+        window = leg.window
         results: dict[str, ColumnExec] = {}
-        for kind, prog, members in units:
+        for kind, prog, members in leg.units:
             if preempt is not None and results:
                 preempt()                       # unit boundary: safe yield point
             if kind == "chunk":
                 name = members[0]
                 runner = (self._run_group_chunked
-                          if scheds[name].kind == "group" else self._run_chunked)
-                results[name] = runner(
-                    name, scheds[name], staged[name], chunk_ends[name],
-                    issue_until, issue_s, window, preempt=preempt)
+                          if leg.scheds[name].kind == "group"
+                          else self._run_chunked)
+                results[name] = yield from runner(
+                    name, leg.scheds[name], leg.staged[name],
+                    leg.chunk_ends[name], issuer, window, preempt=preempt)
                 if on_ready is not None:
                     on_ready(name)
                 continue
-            last_end = max(col_end[m] for m in members)
-            issue_until(last_end + window)      # keep the link busy ahead of decode
+            last_end = max(leg.col_end[m] for m in members)
+            issuer.advance(last_end + window)   # keep the link busy ahead of decode
+            wait_s = (yield ("need", last_end)) or 0.0
             t0 = time.perf_counter()
             bufs_per_member = []
             for m in members:
-                chunks = staged[m]
+                chunks = leg.staged[m]
                 bufs = {k: (pieces[0] if len(pieces) == 1
                             else jnp.concatenate(pieces, axis=0))
                         for k, pieces in chunks.items()}
@@ -650,7 +980,8 @@ class StreamingExecutor:
             for bufs in bufs_per_member:
                 jax.block_until_ready(list(bufs.values()))
             t1 = time.perf_counter()
-            residual_wait = (t1 - t0) / len(members)
+            issuer.consumed(last_end)
+            residual_wait = (wait_s + (t1 - t0)) / len(members)
             if len(members) > 1:
                 cold = prog.batched_calls == 0
                 stacked = {k: jnp.stack([b[k] for b in bufs_per_member])
@@ -678,7 +1009,7 @@ class StreamingExecutor:
             siblings = tuple(members) if len(members) > 1 else ()
             for m, arr in zip(members, outs):
                 enc = self._encoded[m]
-                transfer_s = issue_s[m] + residual_wait
+                transfer_s = issue_s.get(m, 0.0) + residual_wait
                 # actuals feed the cost model's calibration loop (and, via the
                 # aliased timings dict, future plans' measured jobs)
                 self.cost_model.observe(m, transfer_s, decode_s)
@@ -695,10 +1026,11 @@ class StreamingExecutor:
 
     def _run_chunked(self, name: str, sched: ChunkSchedule,
                      device_col: dict[str, list], ends: list[int],
-                     issue_until, issue_s: dict[str, float],
-                     window: int, preempt=None) -> ColumnExec:
+                     issuer, window: int, preempt=None):
         """Per-chunk decode of one column: launch chunk k's decode while chunks
-        k+1..k+w transfer, then concatenate the chunk outputs on device."""
+        k+1..k+w transfer, then concatenate the chunk outputs on device.
+        Generator (see ``_decode_leg``): yields ``("need", n)`` per chunk,
+        returns the ``ColumnExec``."""
         graph = self._graphs[name]
         K = sched.n_chunks
         residual = 0.0
@@ -710,7 +1042,8 @@ class StreamingExecutor:
         for k in range(K):
             if preempt is not None and k:
                 preempt()          # chunk boundary: point queries may cut in
-            issue_until(ends[k] + window)
+            issuer.advance(ends[k] + window)
+            residual += (yield ("need", ends[k])) or 0.0
             t0 = time.perf_counter()
             if whole_bufs is None:     # issued ahead of chunk 0 by construction
                 whole_bufs = {nm: device_col[nm][0] for nm in sched.whole}
@@ -725,6 +1058,7 @@ class StreamingExecutor:
             t0 = time.perf_counter()
             outs.append(prog(bufs, start))       # async launch; k+1 still in flight
             dispatch += time.perf_counter() - t0
+            issuer.consumed(ends[k])             # chunk k's staging slot frees
             launches.append((prog, bufs, start))
         t0 = time.perf_counter()
         arr = outs[0] if K == 1 else jnp.concatenate(outs)
@@ -738,7 +1072,7 @@ class StreamingExecutor:
         else:
             decode_s = dispatch
         enc = self._encoded[name]
-        transfer_s = issue_s[name] + residual
+        transfer_s = issuer.issue_s.get(name, 0.0) + residual
         self.cost_model.observe(name, transfer_s, decode_s)
         return ColumnExec(
             name=name, array=arr, transfer_s=transfer_s, decode_s=decode_s,
@@ -748,9 +1082,8 @@ class StreamingExecutor:
 
     def _run_group_chunked(self, name: str, sched: ChunkSchedule,
                            device_col: dict[str, list], ends: list[int],
-                           issue_until, issue_s: dict[str, float],
-                           window: int, preempt=None,
-                           observe: bool = True) -> ColumnExec:
+                           issuer, window: int, preempt=None,
+                           observe: bool = True):
         """Group-boundary streaming decode of one column.
 
         The prologue (presum auxes, nested child decodes) launches once over
@@ -758,7 +1091,9 @@ class StreamingExecutor:
         body or tail GroupChunkProgram over whole groups) launches while spans
         k+1..k+w are still in flight.  Launch outputs are padded to the shared
         body shape, trimmed to each span's true size and concatenated on
-        device -- bitwise identical to the whole-column result."""
+        device -- bitwise identical to the whole-column result.  Generator
+        (see ``_decode_leg``): yields ``("need", n)`` per span, returns the
+        ``ColumnExec``."""
         graph = self._graphs[name]
         K = sched.n_chunks
         residual = 0.0
@@ -772,7 +1107,8 @@ class StreamingExecutor:
         for k in range(K):
             if preempt is not None and k:
                 preempt()          # span boundary: point queries may cut in
-            issue_until(ends[k] + window)
+            issuer.advance(ends[k] + window)
+            residual += (yield ("need", ends[k])) or 0.0
             t0 = time.perf_counter()
             if whole_bufs is None:     # issued ahead of span 0 by construction
                 whole_bufs = {nm: device_col[nm][0] for nm in sched.whole}
@@ -792,6 +1128,7 @@ class StreamingExecutor:
                     np.int32(sched.out_sizes[k]))
             outs.append(prog(bufs, *args))   # async launch; k+1 still in flight
             dispatch += time.perf_counter() - t0
+            issuer.consumed(ends[k])         # span k's staging slot frees
             launches.append((prog, bufs, args))
         t0 = time.perf_counter()
         trimmed = [o if int(p) == int(s) else o[:int(s)]
@@ -811,7 +1148,7 @@ class StreamingExecutor:
         else:
             decode_s = dispatch
         enc = self._encoded[name]
-        transfer_s = issue_s[name] + residual
+        transfer_s = issuer.issue_s.get(name, 0.0) + residual
         if observe:
             # shard-local runs skip calibration: a fraction of a column would
             # skew the per-column (transfer_s, decode_s) actuals
@@ -824,62 +1161,113 @@ class StreamingExecutor:
             chunk_decoded=True)
 
     # ------------------------------------------------------------------- mesh
+    def _stage_shard(self, column: str, spec, chunk_bytes: int | None,
+                     items: list, acq: list, rel: list):
+        """Stage one group-span shard host-side, appending its transfer items
+        (whole-resident leaves first, then per-span row-capped slices) to the
+        shared per-link lists; returns ``(sched, device_col, ends)`` with
+        GLOBAL item indices, ready for ``_run_group_chunked``."""
+        sched = self.shard_schedule(column, chunk_bytes, spec.g_lo, spec.g_hi)
+        if sched is None:
+            raise ValueError(f"column {column!r} is not group-span shardable")
+        ops = plan_mod.host_operands(self._encoded[column])
+        device_col: dict[str, list] = {}
+        for nm in sched.whole:
+            device_col[nm] = [None]
+            items.append((column, device_col[nm], 0, np.asarray(ops[nm])))
+            acq.append(False)
+            rel.append(False)
+        ends: list[int] = []
+        for i in range(sched.n_chunks):
+            first = len(items)
+            for nm in sched.slices:
+                device_col.setdefault(nm, [None] * sched.n_chunks)
+                items.append((column, device_col[nm], i,
+                              sched.piece(np.asarray(ops[nm]), nm, i)))
+                acq.append(False)
+                rel.append(False)
+            if len(items) > first:   # one staging slot per span
+                acq[first] = True
+                rel[-1] = True
+            ends.append(len(items))
+        return sched, device_col, ends
+
     def _run_shard(self, column: str, spec, chunk_bytes: int | None,
                    device, window: int) -> ColumnExec:
-        """Decode one group-span shard of a registered column on ``device``.
+        """Decode one group-span shard of a registered column on ``device``
+        (inline issue -- the sequential mesh path).
 
         Stages the whole-resident leaves plus the span's sliced (row-capped)
         pieces committed to the target device, then delegates to the group-
         chunked runner with GLOBAL group/output offsets so the cached span
         programs decode shard-local unchanged.  Shard timings do not feed
         ``CostModel.observe`` (they would skew whole-column calibration)."""
-        sched = self.shard_schedule(column, chunk_bytes, spec.g_lo, spec.g_hi)
-        if sched is None:
-            raise ValueError(f"column {column!r} is not group-span shardable")
-        ops = plan_mod.host_operands(self._encoded[column])
-        items: list[tuple[str, int, np.ndarray]] = []
-        device_col: dict[str, list] = {}
-        for nm in sched.whole:
-            device_col[nm] = [None]
-            items.append((nm, 0, np.asarray(ops[nm])))
-        ends: list[int] = []
-        for i in range(sched.n_chunks):
-            for nm in sched.slices:
-                device_col.setdefault(nm, [None] * sched.n_chunks)
-                items.append((nm, i, sched.piece(np.asarray(ops[nm]), nm, i)))
-            ends.append(len(items))
-        issue_s = {column: 0.0}
-        cursor = 0
-
-        def issue_until(target: int) -> None:
-            nonlocal cursor
-            while cursor < min(target, len(items)):
-                nm, i, piece = items[cursor]
-                t = time.perf_counter()
-                device_col[nm][i] = jax.device_put(piece, device)  # async H2D
-                issue_s[column] += time.perf_counter() - t
-                cursor += 1
-
-        rec = self._run_group_chunked(column, sched, device_col, ends,
-                                      issue_until, issue_s, window,
-                                      observe=False)
+        items: list[_TransferItem] = []
+        sched, device_col, ends = self._stage_shard(column, spec, chunk_bytes,
+                                                    items, [], [])
+        issuer = _InlineIssuer(items, device, {})
+        gen = self._run_group_chunked(column, sched, device_col, ends,
+                                      issuer, window, observe=False)
+        rec = _drive_seq(gen, issuer)
         return dataclasses.replace(
             rec, name=planner_mod.shard_name(column, spec.index))
 
+    def _device_leg(self, leg: _StagedLeg | None, shard_stage: list,
+                    issuer, window: int, on_ready=None):
+        """Combined decode-driver generator for one mesh device: the whole-
+        column leg first (plan order), then each group-span shard -- exactly
+        the sequence the sequential path executes per device, over ONE shared
+        issuer queue.  Returns ``(whole_results, shard_recs)``."""
+        whole_res: dict[str, ColumnExec] = {}
+        if leg is not None:
+            whole_res = yield from self._decode_leg(leg, issuer,
+                                                    on_ready=on_ready)
+        recs = []
+        for col, spec, sched, device_col, ends in shard_stage:
+            rec = yield from self._run_group_chunked(
+                col, sched, device_col, ends, issuer, window, observe=False)
+            recs.append((col, spec, dataclasses.replace(
+                rec, name=planner_mod.shard_name(col, spec.index))))
+        return whole_res, recs
+
+    def _observe_link_actuals(self, dev_id: int, dplan: ExecutionPlan,
+                              recs: Sequence[ColumnExec]) -> None:
+        """Feed one device leg's measured-vs-predicted transfer ratio into the
+        per-link EWMA calibration (``CostModel.observe_link``)."""
+        pred = sum(d.est_transfer_s for d in dplan.decisions.values())
+        meas = sum(r.transfer_s for r in recs)
+        if pred > 0.0 and meas > 0.0:
+            self.cost_model.observe_link(dev_id, meas / pred)
+
     def run_sharded(self, mesh_plan, encs: dict[str, plan_mod.Encoded] | None = None,
-                    on_ready=None) -> "MeshRunResult":
+                    on_ready=None, concurrent: bool | None = None
+                    ) -> "MeshRunResult":
         """Execute a ``MeshExecutionPlan``: each logical device runs its
         per-device ``ExecutionPlan`` for whole columns (committed transfers,
         per-device in-flight window) plus shard-local group-span decodes;
         sharded columns assemble into one ``jax.sharding``-annotated global
         array when shard sizes are even (no host gather), falling back to
-        device concatenation otherwise."""
+        device concatenation otherwise.
+
+        ``concurrent`` (default: auto, on when more than one device has work)
+        issues all devices' transfer streams at once -- one ``DispatchEngine``
+        worker per host->device link, decode launches interleaved across
+        devices from this thread as chunks commit -- instead of walking
+        devices one at a time.  Results are bitwise identical either way
+        (per-column sequence numbers fix chunk order; assembly is unchanged);
+        measured per-link actuals feed ``CostModel.observe_link`` in both
+        modes."""
         if encs is not None:
             for name, enc in encs.items():
                 if (self._programs.get(name) is None
                         or self._encoded.get(name) is not enc):
                     self.compile(name, enc)
         devices = jax.devices()
+        active = sum(1 for p in mesh_plan.plans if p.order)
+        if concurrent is None:
+            concurrent = active > 1
+        if concurrent and active > 1:
+            return self._run_sharded_concurrent(mesh_plan, devices, on_ready)
         per_device: dict[int, tuple[str, ...]] = {}
         device_launches: dict[int, int] = {}
         results: dict[str, ColumnExec] = {}
@@ -890,13 +1278,16 @@ class StreamingExecutor:
             d_items = list(dplan.order)
             per_device[dev_id] = tuple(d_items)
             launches = 0
+            dev_recs: list[ColumnExec] = []
             whole = [it for it in d_items if planner_mod.SHARD_SEP not in it]
             if whole:
                 res = self.run({n: self._encoded[n] for n in whole},
-                               plan=dplan, on_ready=on_ready, device=dev)
+                               plan=dplan, on_ready=on_ready, device=dev,
+                               async_dispatch=False)
                 seen: set[frozenset] = set()
                 for n, rec in res.items():
                     results[n] = rec
+                    dev_recs.append(rec)
                     grp = frozenset((n,) + rec.batched_with)
                     if grp not in seen:     # batched members share one launch
                         seen.add(grp)
@@ -910,8 +1301,89 @@ class StreamingExecutor:
                                       dplan.decisions[it].chunk_bytes,
                                       dev, dplan.window)
                 launches += rec.decode_launches
+                dev_recs.append(rec)
                 shard_recs.setdefault(col, []).append((spec, rec, dev_id, dev))
             device_launches[dev_id] = launches
+            if d_items:
+                self._observe_link_actuals(dev_id, dplan, dev_recs)
+        return self._finish_sharded(results, shard_recs, per_device,
+                                    device_launches, mesh_plan, on_ready)
+
+    def _run_sharded_concurrent(self, mesh_plan, devices,
+                                on_ready=None) -> "MeshRunResult":
+        """Concurrent-issue mesh execution: stage every device's leg, spawn
+        one transfer worker per link (shared host-staging budget from the
+        plan's topology), and drive all device legs' decode generators from
+        THIS thread -- H2D streams overlap each other and every decode launch
+        (all tracing stays here; workers only ``device_put``)."""
+        engine = DispatchEngine(
+            host_window=mesh_plan.topology.host_window)
+        tasks: dict[int, tuple] = {}
+        legmeta: dict[int, tuple] = {}
+        per_device: dict[int, tuple[str, ...]] = {}
+        device_launches: dict[int, int] = {}
+        try:
+            for li, dplan in enumerate(mesh_plan.plans):
+                dev_id = int(mesh_plan.device_ids[li])
+                d_items = list(dplan.order)
+                per_device[dev_id] = tuple(d_items)
+                device_launches[dev_id] = 0
+                if not d_items:
+                    continue
+                dev = devices[dev_id % len(devices)]
+                items: list[_TransferItem] = []
+                acq: list[bool] = []
+                rel: list[bool] = []
+                whole = [it for it in d_items
+                         if planner_mod.SHARD_SEP not in it]
+                leg = (self._stage_leg(whole, dplan.decisions, dplan.window,
+                                       items, acq, rel) if whole else None)
+                shard_stage = []
+                for it in d_items:
+                    if planner_mod.SHARD_SEP not in it:
+                        continue
+                    col = planner_mod.shard_column_of(it)
+                    spec = next(s for s in mesh_plan.shards[col]
+                                if s.name == it)
+                    sched, device_col, ends = self._stage_shard(
+                        col, spec, dplan.decisions[it].chunk_bytes,
+                        items, acq, rel)
+                    shard_stage.append((col, spec, sched, device_col, ends))
+                iss = engine.issuer(items, dev, {}, acq=acq, rel=rel,
+                                    name=f"zipflow-xfer-d{dev_id}")
+                gen = self._device_leg(leg, shard_stage, iss, dplan.window,
+                                       on_ready=on_ready)
+                tasks[li] = (gen, iss)
+                legmeta[li] = (dev_id, dev, dplan)
+            done = engine.drive(tasks)
+        finally:
+            engine.close()
+        results: dict[str, ColumnExec] = {}
+        shard_recs: dict[str, list] = {}
+        for li, (dev_id, dev, dplan) in legmeta.items():
+            whole_res, recs = done[li]
+            launches = 0
+            seen: set[frozenset] = set()
+            for n, rec in whole_res.items():
+                results[n] = rec
+                grp = frozenset((n,) + rec.batched_with)
+                if grp not in seen:         # batched members share one launch
+                    seen.add(grp)
+                    launches += rec.decode_launches
+            for col, spec, rec in recs:
+                launches += rec.decode_launches
+                shard_recs.setdefault(col, []).append((spec, rec, dev_id, dev))
+            device_launches[dev_id] = launches
+            self._observe_link_actuals(
+                dev_id, dplan,
+                list(whole_res.values()) + [r for _, _, r in recs])
+        return self._finish_sharded(results, shard_recs, per_device,
+                                    device_launches, mesh_plan, on_ready)
+
+    def _finish_sharded(self, results: dict, shard_recs: dict,
+                        per_device: dict, device_launches: dict,
+                        mesh_plan, on_ready=None) -> "MeshRunResult":
+        """Assemble shard outputs (shared by both mesh issue modes)."""
         for col in sorted(shard_recs):
             lst = sorted(shard_recs[col], key=lambda t: t[0].index)
             recs = [t[1] for t in lst]

@@ -547,12 +547,13 @@ def plan_mesh_execution(
     if shards:
         item_sets["sharded"] = build_items(True)
 
-    def score(item_set, assign: list[int]) -> float:
+    def score(item_set, assign: list[int], serial_issue: bool = False
+              ) -> float:
         _, jobs, infos, _ = item_set
         mk, _ = scheduler.simulate_stream_multi(
             jobs, infos, assign, n_links=N, window=base.window,
             link_scale=topo.link_scale, link_latency_s=topo.link_latency_s,
-            host_window=topo.host_window)
+            host_window=topo.host_window, serial_issue=serial_issue)
         return mk
 
     def lpt(item_set) -> list[int]:
@@ -614,6 +615,12 @@ def plan_mesh_execution(
               for label, (key, a) in candidates.items()}
     chosen = min(scored, key=lambda lbl: (scored[lbl], lbl))
     set_key, assign = candidates[chosen]
+    # price the legacy serialized host loop on the CHOSEN assignment: the
+    # overlapped-issue makespan the executor now delivers vs. what the same
+    # plan cost when one host thread walked devices sequentially -- recorded
+    # as a baseline so fig21's async_overlap rows have a modeled counterpart
+    scored["serial-issue"] = score(item_sets[set_key], assign,
+                                   serial_issue=True)
     items, jobs, infos, decisions = item_sets[set_key]
     chosen_shards = shards if set_key == "sharded" else {}
 

@@ -268,7 +268,8 @@ def simulate_stream_multi(jobs: Sequence[Job],
                           window: int | None = None,
                           link_scale: Sequence[float] = (),
                           link_latency_s: Sequence[float] = (),
-                          host_window: int | None = None
+                          host_window: int | None = None,
+                          serial_issue: bool = False
                           ) -> tuple[float, list[float]]:
     """``simulate_stream_finish`` over N independent host->device links.
 
@@ -290,6 +291,13 @@ def simulate_stream_multi(jobs: Sequence[Job],
     suborder.  With one default link this reduces EXACTLY to
     ``simulate_stream_finish``.  Returns ``(makespan, finish)`` where the
     makespan is the latest device-side completion across links.
+
+    ``serial_issue=True`` instead models the legacy one-host-thread loop the
+    pre-async executor ran: link ``d``'s first piece issues only after link
+    ``d-1``'s leg has fully decoded (devices serviced strictly one at a
+    time), so the N flow shops degenerate into a chain.  Comparing the two
+    modes on the SAME assignment prices exactly what concurrent per-device
+    issuance (``run_sharded(concurrent=True)``) buys.
     """
     order = list(range(len(jobs))) if order is None else list(order)
     infos = [ChunkInfo()] * len(jobs) if infos is None else list(infos)
@@ -318,6 +326,35 @@ def simulate_stream_multi(jobs: Sequence[Job],
                      + (info.launch_overhead_s if i else 0.0), True))
         else:
             queues[d].append((idx, j.transfer_s, j.decompress_s, False))
+
+    if serial_issue:
+        # legacy host loop: one link at a time, chained on full decode
+        t_prev = 0.0
+        held_s: list[float] = []
+        dev_done = [0.0] * L
+        job_finish = [0.0] * len(jobs)
+        for d in range(L):
+            t_l = t_prev
+            t_d = t_prev
+            lf: list[float] = []
+            for idx, ts, ds, holds in queues[d]:
+                start = t_l
+                if holds and w is not None and len(lf) >= w:
+                    start = max(start, lf[len(lf) - w])
+                if holds and hw is not None:
+                    while len(held_s) >= hw:
+                        start = max(start, heapq.heappop(held_s))
+                t_l = start + ts * scale[d] + lat[d]
+                t_d = max(t_d, t_l) + ds
+                if holds:
+                    lf.append(t_d)
+                    if hw is not None:
+                        heapq.heappush(held_s, t_d)
+                job_finish[idx] = t_d
+            dev_done[d] = t_d
+            if queues[d]:
+                t_prev = t_d
+        return max(dev_done), job_finish
 
     t_link = [0.0] * L
     t_dev = [0.0] * L

@@ -83,10 +83,27 @@ class ServeRequest:
     latency_s: float = 0.0              # submit -> last column materialized
     modeled_finish_s: float = 0.0       # simulated finish under the chosen plan
     preempted_in: bool = False          # serviced by a preemptive nested wave
+    # a wave failure lands HERE (per-request), not in whatever thread happened
+    # to be draining -- submitters poll done/error or block on wait()
+    error: BaseException | None = None
+    _done_evt: threading.Event = dataclasses.field(
+        default_factory=threading.Event, repr=False, compare=False)
 
     @property
     def arrays(self) -> dict[str, object]:
         return {c: r.array for c, r in self.results.items()}
+
+    def wait(self, timeout: float | None = None) -> bool:
+        """Block until this request is serviced (or its wave failed); True
+        once ``done``.  The completion signal for the background drain loop,
+        where no ``drain()`` return value hands the request back."""
+        return self._done_evt.wait(timeout)
+
+    def _finish(self, error: BaseException | None = None) -> None:
+        if error is not None and self.error is None:
+            self.error = error
+        self.done = True
+        self._done_evt.set()
 
 
 @dataclasses.dataclass
@@ -139,6 +156,13 @@ class ServePlanner:
         self._in_wave = False
         self._last_preempted = 0
         self.reports: list[WaveReport] = []
+        # always-on drain loop (start()/stop()): _wave_mutex serializes wave
+        # execution between the background thread and explicit drain() callers
+        # -- the executor's registries and jit tracing are single-threaded
+        self._wave_mutex = threading.RLock()
+        self._arrival = threading.Event()
+        self._stop_evt = threading.Event()
+        self._drain_thread: threading.Thread | None = None
 
     # ------------------------------------------------------------- admission
     @property
@@ -158,29 +182,83 @@ class ServePlanner:
             if any(r.rid == rid for r in self._pending):
                 raise ValueError(f"rid {rid!r} already pending")
             self._pending.append(req)
+        self._arrival.set()     # wake the background drain loop, if running
         return req
 
     # ----------------------------------------------------------------- drain
     def drain(self) -> dict[str, ServeRequest]:
-        """Service every pending request; returns ``{rid: request}``."""
+        """Service every pending request; returns ``{rid: request}``.
+
+        Serialized against the background drain loop under ``_wave_mutex``
+        (one wave runs at a time; tracing and the executor's name registry
+        are not re-entrant across threads).  A wave that raises attaches the
+        exception to each of its requests (``req.error``) and keeps draining
+        the rest -- submitters see failures per-request, never a dead drain
+        thread."""
         done: dict[str, ServeRequest] = {}
-        while True:
-            with self._lock:
-                # requests completed by a preemptive nested wave surface here
-                # too, including when nothing is left pending
-                while self._served:
-                    req = self._served.popleft()
+        with self._wave_mutex:
+            while True:
+                with self._lock:
+                    # requests completed by a preemptive nested wave surface
+                    # here too, including when nothing is left pending
+                    while self._served:
+                        req = self._served.popleft()
+                        done[req.rid] = req
+                    if not self._pending:
+                        break
+                    n = len(self._pending) if self.max_wave is None \
+                        else min(self.max_wave, len(self._pending))
+                    wave = [self._pending.popleft() for _ in range(n)]
+                try:
+                    report = self._run_wave(wave)
+                except Exception as e:
+                    for req in wave:
+                        req._finish(e)
+                        done[req.rid] = req
+                    continue
+                self.reports.append(report)
+                for req in wave:
                     done[req.rid] = req
-                if not self._pending:
-                    break
-                n = len(self._pending) if self.max_wave is None \
-                    else min(self.max_wave, len(self._pending))
-                wave = [self._pending.popleft() for _ in range(n)]
-            report = self._run_wave(wave)
-            self.reports.append(report)
-            for req in wave:
-                done[req.rid] = req
         return done
+
+    # ------------------------------------------------------ always-on drain
+    def start(self, poll_s: float = 0.05) -> "ServePlanner":
+        """Start the always-on drain loop: a background thread services
+        arrivals continuously, forming a wave from whatever is queued each
+        time the executor goes idle -- ``submit()`` alone completes requests
+        (block on ``req.wait()``); explicit ``drain()`` keeps working and
+        simply runs the next wave on the caller's thread.  Idempotent."""
+        with self._lock:
+            if self._drain_thread is not None and self._drain_thread.is_alive():
+                return self
+            self._stop_evt.clear()
+            self._drain_thread = threading.Thread(
+                target=self._drain_loop, args=(poll_s,),
+                name="zipflow-serve-drain", daemon=True)
+            self._drain_thread.start()
+        return self
+
+    def stop(self, wait: bool = True) -> None:
+        """Stop the drain loop.  In-flight waves complete; anything submitted
+        before ``stop`` is still serviced (one final sweep), so a clean stop
+        strands no request."""
+        t = self._drain_thread
+        self._stop_evt.set()
+        self._arrival.set()
+        if wait and t is not None and t is not threading.current_thread():
+            t.join(timeout=120.0)
+        self._drain_thread = None
+
+    def _drain_loop(self, poll_s: float = 0.05) -> None:
+        while not self._stop_evt.is_set():
+            self._arrival.wait(timeout=poll_s)
+            self._arrival.clear()
+            if self._stop_evt.is_set():
+                break
+            if self.pending:
+                self.drain()
+        if self.pending:        # final sweep: pre-stop submissions complete
+            self.drain()
 
     # ------------------------------------------------------------ preemption
     def _preempt(self) -> None:
@@ -285,7 +363,7 @@ class ServePlanner:
                 req.latency_s = t_ready - req.submitted_at
                 req.modeled_finish_s = report.modeled_finish_s.get(
                     req.rid, report.shared_makespan_s)
-                req.done = True
+                req._finish()
 
             # launch accounting: a batched group of k columns is ONE launch;
             # cross_batched_saved counts launches a per-query execution would

@@ -115,15 +115,20 @@ class ColumnPipeline:
                  batch_columns: bool = True, chunk_decode: bool = False,
                  policy: str = "chunk-johnson",
                  executor: StreamingExecutor | None = None,
-                 cost_model=None, mesh: int | None = None):
+                 cost_model=None, mesh: int | None = None,
+                 async_dispatch: bool = False):
         self.plans = plans
         # mesh=N enables topology-aware multi-device planning: run_sharded()
         # partitions columns (and group-span shards) over N devices
         self.mesh = mesh
+        # async_dispatch=True moves host->device puts onto a per-link transfer
+        # worker thread (core.executor.DispatchEngine) so issuance overlaps
+        # decode dispatch instead of blocking between launches
         self.executor = executor or StreamingExecutor(
             backend=backend, fuse=fuse, chunk_bytes=chunk_bytes,
             pipeline=pipeline, batch_columns=batch_columns,
-            chunk_decode=chunk_decode, policy=policy, cost_model=cost_model)
+            chunk_decode=chunk_decode, policy=policy, cost_model=cost_model,
+            async_dispatch=async_dispatch)
         # mirror the *effective* config (an explicitly passed executor wins)
         self.backend = self.executor.backend
         self.fuse = self.executor.fuse
@@ -131,6 +136,7 @@ class ColumnPipeline:
         self.chunk_bytes = self.executor.chunk_bytes
         self.chunk_decode = self.executor.chunk_decode
         self.policy = self.executor.policy
+        self.async_dispatch = self.executor.async_dispatch
         self._encoded: dict[str, plan_mod.Encoded] = {}
         self._decoders: dict[str, compiler.Program] = {}
         # lowered fused queries + planned (window, chunk_bytes), keyed by

@@ -37,6 +37,9 @@ class Request:
     max_new: int = 32
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # decode-wave failure for THIS request's compressed prompt: surfaced to
+    # the submitting caller instead of dying in whatever thread drained
+    error: BaseException | None = None
 
 
 class ServeEngine:
@@ -112,12 +115,20 @@ class ServeEngine:
         return req
 
     def _drain_prompts(self):
-        """Decode all queued compressed prompts as one shared planned wave."""
+        """Decode all queued compressed prompts as one shared planned wave.
+        A failed wave marks each of its requests done-with-error (the per-
+        request exception ``ServePlanner`` attaches) rather than raising out
+        of the admission path."""
         if not self.planner.pending:
             return
         for rid, sreq in self.planner.drain().items():
             req = self._awaiting_prompt.pop(int(rid), None)
             if req is None:
+                continue
+            if sreq.error is not None or "prompt" not in sreq.results:
+                req.error = sreq.error or RuntimeError(
+                    f"request {rid}: prompt decode produced no result")
+                req.done = True
                 continue
             req.prompt = np.asarray(
                 sreq.results["prompt"].array).astype(np.int32).reshape(-1)

@@ -1,0 +1,388 @@
+"""Async dispatch engine: per-link transfer workers + overlapped issuance.
+
+In-process tests pin the engine's contracts on the single real CPU device:
+worker-thread issuance must be BITWISE identical to the inline sequential
+path on the same plan (whole-column, element-chunked and group-chunked decode
+all covered), the shared host-staging budget must not deadlock at its tightest
+setting, the ``ProgramCache`` must compile exactly once under a thread hammer,
+``CostModel.observe``/``observe_link`` must stay exact under concurrency and
+persist through save/load, a slowed link must shift planned bytes away, and
+the ``ServePlanner`` background drain loop must complete submissions with no
+explicit ``drain()`` (including a clean ``stop()`` with work in flight).
+
+The multi-device path -- concurrent 4-link issuance through ``run_sharded``
+bitwise against the sequential per-device loop -- needs >1 jax device, so it
+runs in a subprocess with forced host devices (the tests/test_mesh_decode.py
+pattern: XLA's device count locks at first init).
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import plan as P
+from repro.core.compiler import ProgramCache
+from repro.core.costmodel import ColumnProfile, CostModel
+from repro.core.executor import StreamingExecutor
+from repro.core.planner import plan_mesh_execution
+from repro.core.serve_planner import ServePlanner
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _columns():
+    """Mixed-chunkability column set: whole, element-chunked, group-chunked."""
+    rng = np.random.default_rng(11)
+    cols = {
+        "whole": rng.integers(0, 9, 3_000).astype(np.int32),
+        "elem": (np.arange(200_000, dtype=np.int32) % 1000),
+        "grp": np.concatenate([np.zeros(50_000, np.int32),
+                               rng.integers(0, 60, 30_000).astype(np.int32)]),
+        "rle": np.repeat(rng.integers(0, 50, 400),
+                         rng.integers(1, 90, 400)).astype(np.int32),
+    }
+    plans = {"whole": P.Plan("ans", params={"chunk_size": 512}),
+             "elem": P.make_plan("bitpack"),
+             "grp": P.Plan("ans", params={"chunk_size": 512}),
+             "rle": P.make_plan("rle")}
+    return {n: P.encode(plans[n], a) for n, a in cols.items()}, cols
+
+
+# ------------------------------------------------- worker vs inline issuance
+
+def test_worker_issuance_bitwise_identical():
+    """async_dispatch=True must produce byte-for-byte the sequential result
+    on the SAME plan, across whole / element-chunked / group-chunked modes."""
+    encs, cols = _columns()
+    ex = StreamingExecutor(chunk_bytes=1 << 14, chunk_decode=True,
+                           cache=ProgramCache())
+    for n, e in encs.items():
+        ex.compile(n, e)
+    ep = ex.plan(list(encs))
+    seq = ex.run(encs, plan=ep, async_dispatch=False)
+    # the plan must actually cover both decode regimes, or this test would
+    # silently degrade to whole-column-only coverage
+    assert any(r.chunk_decoded for r in seq.values())
+    assert any(not r.chunk_decoded for r in seq.values())
+    asy = ex.run(encs, plan=ep, async_dispatch=True)
+    for n in encs:
+        np.testing.assert_array_equal(np.asarray(asy[n].array),
+                                      np.asarray(seq[n].array), err_msg=n)
+        np.testing.assert_array_equal(np.asarray(asy[n].array), cols[n],
+                                      err_msg=n)
+
+
+def test_worker_issuance_tightest_host_budget_completes():
+    """host_window=1 -- ONE shared staging slot -- must still complete (the
+    per-chunk acquire/release slots guarantee forward progress); output stays
+    bitwise exact."""
+    encs, cols = _columns()
+    ex = StreamingExecutor(chunk_bytes=1 << 14, chunk_decode=True,
+                           cache=ProgramCache())
+    for n, e in encs.items():
+        ex.compile(n, e)
+    ex.cost_model.topology = dataclasses.replace(
+        ex.cost_model.topology, host_window=1)
+    res = ex.run(encs, async_dispatch=True)
+    for n in encs:
+        np.testing.assert_array_equal(np.asarray(res[n].array), cols[n],
+                                      err_msg=n)
+
+
+def test_constructor_knob_and_pipeline_passthrough():
+    """StreamingExecutor(async_dispatch=True) makes run() default to worker
+    issuance; ColumnPipeline forwards the knob."""
+    from repro.data.loader import ColumnPipeline
+
+    encs, cols = _columns()
+    ex = StreamingExecutor(chunk_bytes=1 << 14, chunk_decode=True,
+                           cache=ProgramCache(), async_dispatch=True)
+    assert ex.async_dispatch
+    for n, e in encs.items():
+        ex.compile(n, e)
+    res = ex.run(encs)      # no per-call override: constructor default rules
+    for n in encs:
+        np.testing.assert_array_equal(np.asarray(res[n].array), cols[n],
+                                      err_msg=n)
+    pipe = ColumnPipeline({"a": P.make_plan("bitpack")}, chunk_bytes=4096,
+                          async_dispatch=True)
+    assert pipe.async_dispatch and pipe.executor.async_dispatch
+
+
+# --------------------------------------------------- thread-safety contracts
+
+def test_program_cache_compiles_exactly_once_under_hammer():
+    """N racing threads asking for the same key build it ONCE: the losers of
+    the per-key compile lock re-find the winner's program on the re-lookup
+    (double-checked locking), never duplicating a trace+XLA compile."""
+    cache = ProgramCache()
+    builds = []
+
+    def build():
+        time.sleep(0.05)            # widen the race window
+        builds.append(1)
+        return object()
+
+    n = 8
+    barrier = threading.Barrier(n)
+    progs = [None] * n
+
+    def worker(i):
+        barrier.wait()
+        progs[i] = cache._get(("hammer-key",), build)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    assert len(builds) == 1
+    assert cache.misses == 1 and cache.hits == n - 1
+    assert all(p is progs[0] for p in progs)
+
+    # and through the REAL tracing path: one graph, many threads, one miss
+    graph = P.lower_graph(P.encode(P.make_plan("bitpack"),
+                                   np.arange(4096, dtype=np.int32)))
+    cache2 = ProgramCache()
+    barrier2 = threading.Barrier(n)
+    out = [None] * n
+
+    def tracer(i):
+        barrier2.wait()
+        out[i] = cache2.get(graph)
+
+    threads = [threading.Thread(target=tracer, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert cache2.stats["misses"] == 1, cache2.stats
+    assert all(o is out[0] for o in out)
+
+
+def test_cost_model_observe_concurrent_counts_exact():
+    """observe() is atomic: N threads x M samples lose nothing -- n_observed
+    and the per-signature incremental mean count exactly N*M."""
+    cm = CostModel()
+    cm.register(ColumnProfile(name="x", compressed_nbytes=1 << 20,
+                              plain_nbytes=1 << 22, n_kernels=2,
+                              signature="sig-x"))
+    n_threads, per = 8, 50
+    barrier = threading.Barrier(n_threads)
+
+    def worker():
+        barrier.wait()
+        for _ in range(per):
+            cm.observe("x", 1e-3, 2e-3)
+
+    threads = [threading.Thread(target=worker) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    assert cm.n_observed == n_threads * per
+    assert cm.sig_stats["sig-x"]["n"] == pytest.approx(n_threads * per)
+
+
+# ------------------------------------------- per-link calibration + planning
+
+def test_observe_link_persists_through_save_load(tmp_path):
+    """Per-link EWMA scales land in topology.link_scale and round-trip
+    through CostModel.save/load (the "topology" block)."""
+    cm = CostModel()
+    for _ in range(60):
+        cm.observe_link(1, 3.0)
+    cm.observe_link(1, -1.0)        # invalid samples are ignored, not folded
+    cm.observe_link(1, float("nan"))
+    assert cm.topology.n_links >= 2
+    assert cm.topology.scale(0) == pytest.approx(1.0)
+    assert cm.topology.scale(1) == pytest.approx(3.0, rel=0.05)
+    path = tmp_path / "cm.json"
+    cm.save(str(path))
+    cm2 = CostModel.load(str(path))
+    assert cm2.topology == cm.topology
+    assert cm2.topology.scale(1) == pytest.approx(cm.topology.scale(1))
+
+
+def test_slowed_link_shifts_assignment_bytes_away():
+    """A link whose EWMA scale drifts up (measured 4x slower than predicted)
+    receives strictly fewer bytes from plan_mesh_execution on the re-plan."""
+    rng = np.random.default_rng(0)
+    profiles = {}
+    for i in range(8):
+        nb = int(rng.integers(1 << 16, 1 << 20))
+        profiles[f"c{i}"] = ColumnProfile(
+            name=f"c{i}", compressed_nbytes=nb, plain_nbytes=nb * 3,
+            n_kernels=2, signature=f"s{i}")
+    cm = CostModel()
+    for p in profiles.values():
+        cm.register(p)
+
+    def bytes_on(mp, dev):
+        return sum(profiles[it].compressed_nbytes
+                   for it, d in mp.assignment.items() if d == dev)
+
+    mp0 = plan_mesh_execution(profiles, cm, n_devices=2)
+    before = bytes_on(mp0, 1)
+    assert before > 0               # balanced LPT loads both links
+    for _ in range(60):
+        cm.observe_link(1, 4.0)
+    mp1 = plan_mesh_execution(profiles, cm, n_devices=2)
+    after = bytes_on(mp1, 1)
+    assert after < before, (after, before)
+    # dominance contract survives heterogeneous link scales
+    assert mp1.modeled_makespan_s <= mp1.baselines["round-robin"] + 1e-12
+    assert mp1.modeled_makespan_s <= mp1.baselines["single-device"] + 1e-12
+
+
+# --------------------------------------------------- background drain loop
+
+def test_serve_drain_loop_liveness():
+    """start() + submit() + req.wait() completes requests with NO explicit
+    drain() call from the submitting thread."""
+    encs, cols = _columns()
+    sp = ServePlanner(StreamingExecutor(chunk_bytes="auto", chunk_decode=True,
+                                        cache=ProgramCache())).start()
+    try:
+        reqs = [sp.submit(f"r{i}", {"grp": encs["grp"],
+                                    "whole": encs["whole"]})
+                for i in range(3)]
+        for r in reqs:
+            assert r.wait(timeout=300.0), f"{r.rid} never completed"
+            assert r.error is None
+            np.testing.assert_array_equal(
+                np.asarray(r.results["grp"].array), cols["grp"])
+            np.testing.assert_array_equal(
+                np.asarray(r.results["whole"].array), cols["whole"])
+    finally:
+        sp.stop()
+    assert sp.pending == 0
+    assert sp.reports           # waves actually ran through the loop
+
+
+def test_serve_stop_completes_inflight_work():
+    """stop() right after a burst of submits strands nothing: the final sweep
+    services every pre-stop submission; start() afterwards works again."""
+    encs, cols = _columns()
+    sp = ServePlanner(StreamingExecutor(chunk_bytes="auto", chunk_decode=True,
+                                        cache=ProgramCache())).start()
+    reqs = [sp.submit(f"w{i}", {"rle": encs["rle"]}) for i in range(4)]
+    sp.stop()                       # work in flight; join includes the sweep
+    for r in reqs:
+        assert r.done and r.error is None, r.rid
+        np.testing.assert_array_equal(np.asarray(r.results["rle"].array),
+                                      cols["rle"])
+    assert sp.pending == 0
+    sp.start()                      # clean restart after a stop
+    again = sp.submit("again", {"rle": encs["rle"]})
+    assert again.wait(timeout=120.0) and again.error is None
+    sp.stop()
+
+
+def test_serve_engine_surfaces_wave_errors_per_request():
+    """A decode wave that dies surfaces its exception on the submitting
+    caller's Request (engine admission keeps running; a later healthy
+    request still completes)."""
+    import jax
+
+    from repro.configs import SMOKES
+    from repro.models import get_model
+    from repro.serve.engine import ServeEngine
+
+    cfg = SMOKES["qwen1.5-0.5b"]
+    model = get_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=64, eos=-1)
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab, 4).astype(np.int32)
+    plan = P.make_plan("bitpack")
+
+    boom = RuntimeError("wave exploded")
+    orig = eng.planner._run_wave
+    eng.planner._run_wave = lambda wave: (_ for _ in ()).throw(boom)
+    req = eng.submit_compressed(0, P.encode(plan, toks), max_new=3)
+    done = eng.run_to_completion(max_steps=20)
+    assert req.done and req.error is boom
+    assert req.out == [] and 0 in done
+
+    eng.planner._run_wave = orig
+    req2 = eng.submit_compressed(1, P.encode(plan, toks), max_new=3)
+    done = eng.run_to_completion(max_steps=60)
+    assert req2.error is None and len(done[1]) == 3
+    np.testing.assert_array_equal(req2.prompt, toks)
+
+
+# ------------------------------------------------- multi-device (subprocess)
+
+_SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax
+import numpy as np
+from repro.core import plan as P, planner
+from repro.core.compiler import ProgramCache
+from repro.core.executor import StreamingExecutor
+
+assert jax.device_count() == 4
+
+rng = np.random.default_rng(7)
+cols = {
+    "big": np.concatenate([np.zeros(50_000, np.int32),
+                           rng.integers(0, 60, 30_000).astype(np.int32)]),
+    "rle": np.repeat(rng.integers(0, 50, 400),
+                     rng.integers(1, 90, 400)).astype(np.int32),
+    "small0": rng.integers(0, 9, 5_000).astype(np.int32),
+    "small1": rng.integers(0, 9, 5_000).astype(np.int32),
+}
+plans = {"big": P.Plan("ans", params={"chunk_size": 512}),
+         "rle": P.make_plan("rle"),
+         "small0": P.Plan("ans", params={"chunk_size": 512}),
+         "small1": P.Plan("ans", params={"chunk_size": 512})}
+encs = {n: P.encode(plans[n], a) for n, a in cols.items()}
+
+ex = StreamingExecutor(chunk_bytes="auto", chunk_decode=True,
+                       cache=ProgramCache())
+for n, e in encs.items():
+    ex.compile(n, e)
+profiles = {n: ex.column_profile(n) for n in encs}
+mp = planner.plan_mesh_execution(profiles, ex.cost_model, n_devices=4,
+                                 shard_threshold_bytes=0)
+assert "big" in mp.shards and len(mp.shards["big"]) == 4
+
+# sequential per-device loop is the reference; concurrent engine issuance
+# over all 4 links must match it bitwise (and the raw arrays)
+seq = ex.run_sharded(mp, encs, concurrent=False)
+conc = ex.run_sharded(mp, encs, concurrent=True)
+for n in encs:
+    np.testing.assert_array_equal(np.asarray(seq[n].array), cols[n],
+                                  err_msg=n)
+    np.testing.assert_array_equal(np.asarray(conc[n].array),
+                                  np.asarray(seq[n].array), err_msg=n)
+assert set(conc.device_launches) == set(range(4))
+assert len(set(conc["big"].shard_devices)) > 1
+
+# run_sharded defaults to concurrent when >1 device leg has work
+dflt = ex.run_sharded(mp, encs)
+for n in encs:
+    np.testing.assert_array_equal(np.asarray(dflt[n].array), cols[n],
+                                  err_msg=n)
+
+# the concurrent legs' measured/predicted transfer ratios fed per-link EWMAs
+topo = ex.cost_model.topology
+assert topo.n_links >= 4 and len(topo.link_scale) >= 4
+assert all(s > 0 for s in topo.link_scale)
+print("ASYNC_MESH_OK")
+"""
+
+
+def test_concurrent_sharded_subprocess():
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _SUBPROC], env=env,
+                         capture_output=True, text=True, timeout=420)
+    assert "ASYNC_MESH_OK" in out.stdout, out.stdout + "\n" + out.stderr[-3000:]
