@@ -41,6 +41,21 @@ ap.add_argument("--cost-cache", default="",
                 help="path to a persisted CostModel (JSON): loaded before "
                      "planning so a fresh process plans from calibrated "
                      "history, saved back (updated) on exit")
+ap.add_argument("--mesh", type=int, default=0, metavar="N",
+                help="shard decode over N logical devices via the "
+                     "topology-aware mesh planner (run_sharded); 0 keeps the "
+                     "single-device streaming path.  With >1 visible devices "
+                     "oversized group-chunkable columns split into per-device "
+                     "group-span shards")
+ap.add_argument("--async-dispatch", action="store_true",
+                help="issue host->device transfers from per-link worker "
+                     "threads so multi-device issuance overlaps (mesh path "
+                     "decodes shards concurrently)")
+ap.add_argument("--placement", default=None, choices=["sharded"],
+                help="'sharded' pins shard i of every split column to logical "
+                     "device i; the planner may land shards elsewhere and "
+                     "rebalance over the D2D fabric when that is modeled "
+                     "faster (decode-where-landed)")
 args = ap.parse_args()
 chunk_bytes = "auto" if args.auto_chunks else (args.chunk_kib * 1024 or None)
 
@@ -67,13 +82,26 @@ for q, engine in ((1, q1_engine), (6, q6_engine)):
     pipe = ColumnPipeline({n: TABLE2_PLANS[n] for n in names},
                           chunk_bytes=chunk_bytes,
                           chunk_decode=args.chunk_decode, policy=args.policy,
-                          cost_model=cost_model)
+                          cost_model=cost_model,
+                          mesh=args.mesh or None,
+                          async_dispatch=args.async_dispatch,
+                          placement=args.placement)
     ratios = pipe.compress(qcols)
     comp_bytes = sum(pipe._encoded[n].compressed_nbytes for n in names)
+    mesh_res = None
     t0 = time.perf_counter()
-    results = pipe.run()        # planned streaming: order/chunks/modes from plan
+    if args.mesh and args.mesh > 1:
+        mesh_res = pipe.run_sharded()   # topology-aware per-device windows
+        results = mesh_res.columns
+    else:
+        results = pipe.run()    # planned streaming: order/chunks/modes from plan
     t_move = time.perf_counter() - t0
     device_cols = {n: r.array for n, r in results.items()}
+    if mesh_res is not None:
+        # the mini-engine is single-device: gather the mesh-landed columns
+        # (query-on-mesh stays with the fused per-shard path in core.serve)
+        device_cols = {n: jax.device_put(a, jax.devices()[0])
+                       for n, a in device_cols.items()}
     t0 = time.perf_counter()
     out = jax.block_until_ready(jax.jit(engine)(device_cols))
     t_query = time.perf_counter() - t0
@@ -93,6 +121,21 @@ for q, engine in ((1, q1_engine), (6, q6_engine)):
         print(f"   per-chunk decode: "
               f"{sum(r.chunk_decoded for r in results.values())}/{len(names)} "
               f"columns chunked, launches {launches}")
+    if mesh_res is not None:
+        sharded = [n for n, s in mesh_res.plan.shards.items() if len(s) > 1]
+        print(f"   mesh x{args.mesh}"
+              f"{' (async dispatch)' if args.async_dispatch else ''}: "
+              f"sharded {sharded or 'none'}; per-device launches "
+              f"{dict(sorted(mesh_res.device_launches.items()))}")
+        if mesh_res.d2d_copies:
+            legs = ", ".join(f"{it}: d{src}->d{dst} {s * 1e3:.2f}ms"
+                             for it, (src, dst, s)
+                             in sorted(mesh_res.d2d_copies.items()))
+            print(f"   d2d rebalance ({len(mesh_res.d2d_copies)} legs): {legs}")
+        elif args.placement:
+            print("   d2d rebalance: no legs (decode landed on placement, or "
+                  "no fabric modeled)")
+        continue  # planner/fused-query reporting below is single-device
     # makespans reuse the timings measured during run() -- no re-measurement
     mk_nopipe = pipe.modeled_makespan(pipeline=False)
     mk_pipe = pipe.modeled_makespan(pipeline=True, johnson=True)

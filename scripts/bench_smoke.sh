@@ -22,6 +22,10 @@
 #     multi-device benchmark would pass forever) and the modeled N=4 sharded
 #     makespan must not exceed the single-device baseline -- the mesh
 #     planner's dominance-by-construction invariant;
+#   * the fig21 D2D rebalance rows must be present: the modeled fabric plan
+#     must carry legs and strictly beat decode-in-place on the skewed
+#     topology, and the measured run must be bit-exact, execute every
+#     planned leg, and land shards on their requested placement devices;
 #   * the async dispatch engine rows (fig19 worker-thread issuance, fig21
 #     concurrent 4-device issuance) must be present, bit-exact, and within
 #     a noise tolerance of the sequential path on the same plan, and the
@@ -154,6 +158,34 @@ if "sharded_model_n4" in out:
 if "sharded_measured_n4" in out and out["sharded_measured_n4"].get(
         "bit_exact") != "1":
     failures.append("sharded measured N=4 decode was not bit-exact")
+# D2D rebalance tier: both rows must exist (a silently-skipped fabric
+# benchmark would pass forever); the modeled fabric-rebalanced makespan must
+# carry real legs and STRICTLY beat decode-in-place on the skewed topology;
+# the measured run must stay bit-exact, execute every planned leg, and land
+# shards on the requested placement devices
+if "d2d_rebalance_model" not in out:
+    failures.append("missing fig21 d2d_rebalance_model row")
+else:
+    redist = float(out["d2d_rebalance_model"]["redist_mk"])
+    direct = float(out["d2d_rebalance_model"]["direct_mk"])
+    if int(out["d2d_rebalance_model"]["n_legs"]) < 1:
+        failures.append("d2d_rebalance_model carries no fabric legs")
+    if not redist < direct:
+        failures.append(f"d2d rebalance modeled makespan {redist:.1f}us does "
+                        f"not beat decode-in-place {direct:.1f}us")
+if "d2d_rebalance_measured" not in out:
+    failures.append("missing fig21 d2d_rebalance_measured row")
+else:
+    f21d = out["d2d_rebalance_measured"]
+    if f21d.get("bit_exact") != "1":
+        failures.append("d2d rebalanced decode was not bit-exact")
+    if f21d.get("legs") != f21d.get("planned_legs") or int(
+            f21d.get("legs", "0")) < 1:
+        failures.append(f"d2d executed legs {f21d.get('legs')} != planned "
+                        f"{f21d.get('planned_legs')} (or zero)")
+    if f21d.get("placement_ok") != "1":
+        failures.append("d2d rebalanced shards missed their requested "
+                        "placement devices")
 # async dispatch engine: worker-thread issuance must not regress past the
 # inline sequential path on the same plan (both best-of-N, interleaved; a
 # single-core host cannot show true overlap, so the guard is no-regression
@@ -198,7 +230,8 @@ if failures:
 print("bench-smoke: planned <= FIFO on every row; GP Zc_run recorded; "
       "fused Q6 beats materialize-then-query; serving shared <= naive FIFO "
       "with cross-query batching reducing launches; sharded N=4 modeled "
-      "makespan <= single-device and round-robin; async dispatch within "
+      "makespan <= single-device and round-robin; D2D rebalance beats "
+      "decode-in-place with bit-exact placed shards; async dispatch within "
       "tolerance of sequential on fig19+fig21; background drain loop "
       "completed the open-loop mix")
 EOF

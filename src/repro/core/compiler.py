@@ -345,9 +345,38 @@ def compile_group_chunk_graph(graph: DecodeGraph, g_size: int, pad_elems: int,
             g = jnp.searchsorted(presum, out_idx, side="right").astype(
                 jnp.int32) - 1
             pos = out_idx - presum[g]
-            starts = tuple(
-                (g_start * spec.num) // spec.den if nm in layout.sliced else 0
-                for nm, spec in zip(gst.value_inputs, gst.value_specs))
+            # span-time value grafts: re-evaluate the producer closure at the
+            # span's global group indices over its sliced primary leaf -- the
+            # block then reads exactly like a sliced value input starting at
+            # g_start (bitwise the whole-column intermediate at those indices)
+            for nm, gi in layout.span_graft.items():
+                p = graph.stages[gi]
+                gg = g_start + jnp.arange(g_size, dtype=jnp.int32)
+                p_starts = []
+                for i_nm, i_spec in zip(p.inputs, p.specs):
+                    if i_spec.kind == "full":
+                        p_starts.append(None)
+                    elif i_spec.num_op:
+                        p_starts.append(
+                            (g_start * env[i_spec.num_op][0]) // i_spec.den)
+                    else:
+                        p_starts.append((g_start * i_spec.num) // i_spec.den)
+                env[nm] = p.fn(Ctx(out_idx=gg, starts=tuple(p_starts)),
+                               *[env[i] for i in p.inputs])
+            starts = []
+            for nm, spec in zip(gst.value_inputs, gst.value_specs):
+                if nm in layout.span_graft:
+                    starts.append(g_start)   # local block begins at the span
+                elif nm not in layout.sliced:
+                    starts.append(0)
+                elif spec.num_op:
+                    # operand-driven ratio (bitpack's bit_width): same floor
+                    # formula the schedule builder slices with, traced so one
+                    # program serves every span
+                    starts.append((g_start * env[spec.num_op][0]) // spec.den)
+                else:
+                    starts.append((g_start * spec.num) // spec.den)
+            starts = tuple(starts)
             ctx = Ctx(out_idx=out_idx, starts=starts)
             gval = gst.value_fn(ctx, g, *[env[nm] for nm in gst.value_inputs])
             extras = [env[nm] for nm in gst.extra_inputs]

@@ -89,9 +89,11 @@ def group_bytes_per_group(layout, ops: Mapping[str, np.ndarray]) -> float:
         if layout.axes.get(nm, 0) == 1:
             total += float(arr.shape[0]) * arr.dtype.itemsize
         else:
+            num = (int(np.asarray(ops[spec.num_op])[0]) if spec.num_op
+                   else spec.num)
             row = arr.dtype.itemsize * (int(np.prod(arr.shape[1:]))
                                         if arr.ndim > 1 else 1)
-            total += spec.num / spec.den * row
+            total += num / spec.den * row
     return total
 
 
@@ -117,12 +119,22 @@ class LinkTopology:
     undecoded chunks staged across all links (the shared pinned-host-buffer
     budget ``scheduler.simulate_stream_multi`` models).  Missing entries
     default to (1.0, 0.0): a symmetric topology needs no explicit tables.
+
+    The second tier is the device-to-device fabric (NVLink-class):
+    ``d2d_scale`` multiplies the calibrated host-link transfer time for a
+    device->device copy of the same byte count (an NVLink 5-10x faster than
+    PCIe is ~0.1-0.2), ``d2d_latency_s`` adds a fixed per-copy issue latency.
+    ``d2d_scale=None`` means NO fabric is modeled: the planner never proposes
+    redistribution and the mesh simulator reduces exactly to the
+    single-tier model.
     """
 
     n_links: int = 1
     link_scale: tuple[float, ...] = ()
     link_latency_s: tuple[float, ...] = ()
     host_window: int | None = None
+    d2d_scale: float | None = None
+    d2d_latency_s: float = 0.0
 
     def scale(self, d: int) -> float:
         return float(self.link_scale[d]) if d < len(self.link_scale) else 1.0
@@ -131,9 +143,23 @@ class LinkTopology:
         return (float(self.link_latency_s[d])
                 if d < len(self.link_latency_s) else 0.0)
 
+    @property
+    def has_fabric(self) -> bool:
+        return self.d2d_scale is not None
+
+    def d2d_copy_s(self, h2d_equiv_s: float) -> float:
+        """Modeled device->device copy time for bytes whose host-link
+        transfer would take ``h2d_equiv_s`` (the fabric is priced relative
+        to the calibrated host link).  Infinite when no fabric exists, so a
+        fabric-less topology can never make redistribution look cheap."""
+        if self.d2d_scale is None:
+            return float("inf")
+        return max(0.0, float(h2d_equiv_s)) * float(self.d2d_scale) \
+            + float(self.d2d_latency_s)
+
     def resized(self, n_links: int) -> "LinkTopology":
-        """Same per-link parameters over a different link count (elastic
-        re-planning keeps surviving links' characteristics)."""
+        """Same per-link (and fabric) parameters over a different link count
+        (elastic re-planning keeps surviving links' characteristics)."""
         return dataclasses.replace(self, n_links=max(1, int(n_links)))
 
     def to_json(self) -> dict:
@@ -141,22 +167,28 @@ class LinkTopology:
                 "link_scale": [float(x) for x in self.link_scale],
                 "link_latency_s": [float(x) for x in self.link_latency_s],
                 "host_window": (None if self.host_window is None
-                                else int(self.host_window))}
+                                else int(self.host_window)),
+                "d2d_scale": (None if self.d2d_scale is None
+                              else float(self.d2d_scale)),
+                "d2d_latency_s": float(self.d2d_latency_s)}
 
     @classmethod
     def from_json(cls, data) -> "LinkTopology":
         """Tolerant parse: known keys only, defaults for anything missing --
-        old caches (no topology block) and future caches (extra keys) both
-        load."""
+        old caches (no topology block, no d2d tier) and future caches (extra
+        keys) both load."""
         if not isinstance(data, dict):
             return cls()
         hw = data.get("host_window")
+        d2d = data.get("d2d_scale")
         return cls(
             n_links=max(1, int(data.get("n_links", 1))),
             link_scale=tuple(float(x) for x in data.get("link_scale", ())),
             link_latency_s=tuple(float(x)
                                  for x in data.get("link_latency_s", ())),
-            host_window=None if hw is None else int(hw))
+            host_window=None if hw is None else int(hw),
+            d2d_scale=None if d2d is None else float(d2d),
+            d2d_latency_s=float(data.get("d2d_latency_s", 0.0)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -480,6 +512,36 @@ class CostModel:
             self.topology = dataclasses.replace(
                 topo, n_links=max(topo.n_links, link + 1),
                 link_scale=tuple(scale))
+
+    def h2d_equiv_s(self, nbytes: int) -> float:
+        """Calibrated host-link transfer time for ``nbytes`` -- the reference
+        unit the D2D fabric tier is priced in (both
+        ``LinkTopology.d2d_copy_s``'s argument and the denominator of
+        ``observe_d2d`` samples)."""
+        return (max(0, int(nbytes)) / (self.spec.host_link_gbps * 1e9)
+                * self.transfer_scale)
+
+    def observe_d2d(self, ratio: float) -> None:
+        """Fold one device->device copy's measured/H2D-equivalent time ratio
+        into the fabric EWMA ``topology.d2d_scale``.
+
+        The ratio prices the D2D fabric relative to the calibrated host link
+        for the same byte count: an NVLink-class fabric converges to ~0.1-0.2,
+        a PCIe-P2P fabric to ~1.0.  The first valid sample seeds the scale
+        (turning the fabric tier ON if the topology had none); later samples
+        blend with the usual alpha.  Invalid samples (non-finite, <= 0) are
+        dropped.  The frozen ``LinkTopology`` is replaced atomically under
+        the lock and persists through ``save``'s "topology" block."""
+        ratio = float(ratio)
+        if not (ratio > 0.0) or not np.isfinite(ratio):
+            return
+        with self._lock:
+            topo = self.topology
+            if topo.d2d_scale is None:
+                nxt = ratio
+            else:
+                nxt = topo.d2d_scale + self.alpha * (ratio - topo.d2d_scale)
+            self.topology = dataclasses.replace(topo, d2d_scale=nxt)
 
     # -------------------------------------------------------- candidate ladder
     def chunk_ladder(self, p: ColumnProfile, max_candidates: int = 12

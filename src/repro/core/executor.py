@@ -108,6 +108,9 @@ class ChunkSchedule:
     # its groups actually consume, quantized) instead of all max_words rows
     row_caps: dict[str, tuple[int, ...]] = dataclasses.field(
         default_factory=dict)
+    # host-sourced whole buffers (layout.host_push): staged alongside the
+    # whole leaves but materialized from encoder metadata, not operands
+    host_push: dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
 
     @property
     def n_chunks(self) -> int:
@@ -196,9 +199,10 @@ class _WorkerIssuer:
                  rel: Sequence[bool] | None = None,
                  budget: threading.BoundedSemaphore | None = None,
                  cv: threading.Condition | None = None,
-                 name: str = "zipflow-xfer"):
+                 name: str = "zipflow-xfer", sync: bool = False):
         self._items = items
         self._device = device
+        self._sync = sync
         self.issue_s = issue_s
         self.total = len(items)
         self.committed = 0
@@ -236,6 +240,11 @@ class _WorkerIssuer:
                                 return
                     t = time.perf_counter()
                     buf = jax.device_put(piece, self._device)  # async H2D
+                    if self._sync:
+                        # D2D copy legs block here so issue_s records the
+                        # true copy duration (this worker has nothing else
+                        # to do; the dispatcher keeps launching decodes)
+                        jax.block_until_ready(buf)
                     self.issue_s[name] = (self.issue_s.get(name, 0.0)
                                           + time.perf_counter() - t)
                     dest[slot] = buf
@@ -316,9 +325,11 @@ class DispatchEngine:
     def issuer(self, items: list, device, issue_s: dict[str, float],
                acq: Sequence[bool] | None = None,
                rel: Sequence[bool] | None = None,
-               name: str = "zipflow-xfer") -> _WorkerIssuer:
+               name: str = "zipflow-xfer",
+               sync: bool = False) -> _WorkerIssuer:
         iss = _WorkerIssuer(items, device, issue_s, acq=acq, rel=rel,
-                            budget=self._budget, cv=self._cv, name=name)
+                            budget=self._budget, cv=self._cv, name=name,
+                            sync=sync)
         self._issuers.append(iss)
         return iss
 
@@ -438,12 +449,17 @@ class MeshRunResult:
 
     ``columns`` maps every requested column to its record (sharded columns
     appear once, assembled); ``per_device`` lists the plan items each logical
-    device executed and ``device_launches`` its decode-launch count."""
+    device executed and ``device_launches`` its decode-launch count.
+    ``d2d_copies`` records each executed redistribution leg as
+    ``item -> (src physical device, dst physical device, measured copy
+    seconds)`` -- empty when the plan carried no redistribution."""
 
     columns: dict[str, ColumnExec]
     per_device: dict[int, tuple[str, ...]]
     device_launches: dict[int, int]
     plan: "planner_mod.MeshExecutionPlan"
+    d2d_copies: dict[str, tuple[int, int, float]] = dataclasses.field(
+        default_factory=dict)
 
     def __getitem__(self, name: str) -> ColumnExec:
         return self.columns[name]
@@ -671,16 +687,24 @@ class StreamingExecutor:
             arr = ops[nm]
             axis = layout.axes.get(nm, 0)
             length = int(arr.shape[axis])
+            num = int(ops[spec.num_op][0]) if spec.num_op else int(spec.num)
             per = []
             for s, z in zip(g_starts, g_sizes):
                 if axis == 1:
                     per.append((s, s + z))          # stripe: exact columns
                     continue
-                lo = (s * spec.num) // spec.den
+                lo = (s * num) // spec.den
                 # the final span takes the remaining rows (incl. guard words);
                 # interior boundaries are group-aligned so slices are integral
-                hi = length if s + z >= n_groups \
-                    else ((s + z) * spec.num) // spec.den
+                if s + z >= n_groups:
+                    hi = length
+                elif spec.num_op:
+                    # dynamic ratios (bitpack words) floor at span starts:
+                    # round the end up and keep the cross-word guard the
+                    # decode closure's straddle read touches
+                    hi = min(length, -(-((s + z) * num) // spec.den) + 1)
+                else:
+                    hi = ((s + z) * num) // spec.den
                 per.append((lo, max(hi, lo + 1)))
             slices[nm] = per
         # unpadded ANS stripes: when the encoder emitted per-chunk word counts,
@@ -703,7 +727,8 @@ class StreamingExecutor:
             out_starts=out_starts, out_sizes=out_sizes, slices=slices,
             whole=layout.whole, kind="group", g_starts=g_starts,
             g_sizes=g_sizes, pad_sizes=pad_sizes, axes=dict(layout.axes),
-            row_caps=row_caps)
+            row_caps=row_caps,
+            host_push=dict(getattr(layout, "host_push", None) or {}))
 
     @staticmethod
     def _host_group_words(graph: DecodeGraph, layout) -> np.ndarray | None:
@@ -891,7 +916,9 @@ class StreamingExecutor:
             else:
                 for k in sched.whole:
                     cols[k] = [None]
-                    items.append((name, cols[k], 0, np.asarray(ops[k])))
+                    src = sched.host_push.get(k)
+                    items.append((name, cols[k], 0,
+                                  np.asarray(ops[k]) if src is None else src))
                     acq.append(False)
                     rel.append(False)
                 ends = []
@@ -1174,7 +1201,9 @@ class StreamingExecutor:
         device_col: dict[str, list] = {}
         for nm in sched.whole:
             device_col[nm] = [None]
-            items.append((column, device_col[nm], 0, np.asarray(ops[nm])))
+            src = sched.host_push.get(nm)
+            items.append((column, device_col[nm], 0,
+                          np.asarray(ops[nm]) if src is None else src))
             acq.append(False)
             rel.append(False)
         ends: list[int] = []
@@ -1213,11 +1242,14 @@ class StreamingExecutor:
             rec, name=planner_mod.shard_name(column, spec.index))
 
     def _device_leg(self, leg: _StagedLeg | None, shard_stage: list,
-                    issuer, window: int, on_ready=None):
+                    issuer, window: int, on_ready=None, on_shard=None):
         """Combined decode-driver generator for one mesh device: the whole-
         column leg first (plan order), then each group-span shard -- exactly
         the sequence the sequential path executes per device, over ONE shared
-        issuer queue.  Returns ``(whole_results, shard_recs)``."""
+        issuer queue.  ``on_shard(item, rec)`` fires the moment a shard's
+        decode completes (the hook the D2D redistribution legs hang off, so
+        fabric copies start while later shards still decode).  Returns
+        ``(whole_results, shard_recs)``."""
         whole_res: dict[str, ColumnExec] = {}
         if leg is not None:
             whole_res = yield from self._decode_leg(leg, issuer,
@@ -1226,8 +1258,11 @@ class StreamingExecutor:
         for col, spec, sched, device_col, ends in shard_stage:
             rec = yield from self._run_group_chunked(
                 col, sched, device_col, ends, issuer, window, observe=False)
-            recs.append((col, spec, dataclasses.replace(
-                rec, name=planner_mod.shard_name(col, spec.index))))
+            rec = dataclasses.replace(
+                rec, name=planner_mod.shard_name(col, spec.index))
+            if on_shard is not None:
+                on_shard(rec.name, rec)
+            recs.append((col, spec, rec))
         return whole_res, recs
 
     def _observe_link_actuals(self, dev_id: int, dplan: ExecutionPlan,
@@ -1238,6 +1273,34 @@ class StreamingExecutor:
         meas = sum(r.transfer_s for r in recs)
         if pred > 0.0 and meas > 0.0:
             self.cost_model.observe_link(dev_id, meas / pred)
+
+    def _observe_d2d_actual(self, nbytes: int, copy_s: float) -> None:
+        """Feed one fabric copy's measured time, as a ratio over the
+        calibrated H2D-equivalent for the same byte count, into the
+        ``CostModel.observe_d2d`` EWMA."""
+        ref = self.cost_model.h2d_equiv_s(nbytes)
+        if ref > 0.0 and copy_s > 0.0:
+            self.cost_model.observe_d2d(copy_s / ref)
+
+    def _d2d_target(self, mesh_plan, devices, dst_logical: int):
+        """(physical device id, jax device) for a redistribution leg's
+        destination logical device."""
+        ids = mesh_plan.device_ids
+        dst_id = int(ids[dst_logical % len(ids)]) if ids else int(dst_logical)
+        return dst_id, devices[dst_id % len(devices)]
+
+    def _copy_shard_d2d(self, rec: ColumnExec, dst_logical: int, mesh_plan,
+                        devices) -> tuple[ColumnExec, int, object, float]:
+        """Move one decoded shard to its final device over the D2D fabric
+        (sequential mesh path: timed, blocking ``jax.device_put``); the
+        measured copy feeds the fabric EWMA."""
+        dst_id, dst_dev = self._d2d_target(mesh_plan, devices, dst_logical)
+        t0 = time.perf_counter()
+        arr = jax.device_put(rec.array, dst_dev)
+        jax.block_until_ready(arr)
+        copy_s = time.perf_counter() - t0
+        self._observe_d2d_actual(int(arr.nbytes), copy_s)
+        return dataclasses.replace(rec, array=arr), dst_id, dst_dev, copy_s
 
     def run_sharded(self, mesh_plan, encs: dict[str, plan_mod.Encoded] | None = None,
                     on_ready=None, concurrent: bool | None = None
@@ -1272,6 +1335,9 @@ class StreamingExecutor:
         device_launches: dict[int, int] = {}
         results: dict[str, ColumnExec] = {}
         shard_recs: dict[str, list] = {}
+        redist_dst = {it: dst for it, _src, dst
+                      in getattr(mesh_plan, "redistribution", ())}
+        d2d_done: dict[str, tuple[int, int, float]] = {}
         for li, dplan in enumerate(mesh_plan.plans):
             dev_id = int(mesh_plan.device_ids[li])
             dev = devices[dev_id % len(devices)]
@@ -1302,12 +1368,22 @@ class StreamingExecutor:
                                       dev, dplan.window)
                 launches += rec.decode_launches
                 dev_recs.append(rec)
-                shard_recs.setdefault(col, []).append((spec, rec, dev_id, dev))
+                dst = redist_dst.get(it)
+                if dst is not None and int(dst) != li:
+                    rec, dst_id, dst_dev, copy_s = self._copy_shard_d2d(
+                        rec, int(dst), mesh_plan, devices)
+                    d2d_done[it] = (dev_id, dst_id, copy_s)
+                    shard_recs.setdefault(col, []).append(
+                        (spec, rec, dst_id, dst_dev))
+                else:
+                    shard_recs.setdefault(col, []).append(
+                        (spec, rec, dev_id, dev))
             device_launches[dev_id] = launches
             if d_items:
                 self._observe_link_actuals(dev_id, dplan, dev_recs)
         return self._finish_sharded(results, shard_recs, per_device,
-                                    device_launches, mesh_plan, on_ready)
+                                    device_launches, mesh_plan, on_ready,
+                                    d2d_copies=d2d_done)
 
     def _run_sharded_concurrent(self, mesh_plan, devices,
                                 on_ready=None) -> "MeshRunResult":
@@ -1315,13 +1391,25 @@ class StreamingExecutor:
         one transfer worker per link (shared host-staging budget from the
         plan's topology), and drive all device legs' decode generators from
         THIS thread -- H2D streams overlap each other and every decode launch
-        (all tracing stays here; workers only ``device_put``)."""
+        (all tracing stays here; workers only ``device_put``).
+
+        Redistribution legs ride the SAME engine: each D2D copy gets its own
+        single-item issuer bound to the destination device, filled via the
+        ``on_shard`` hook the moment its shard's decode completes -- the
+        fabric copy then runs on that worker thread, overlapping every other
+        leg's remaining transfers and decodes; its blocking ``issue_s``
+        records the true copy duration for ``observe_d2d``."""
         engine = DispatchEngine(
             host_window=mesh_plan.topology.host_window)
         tasks: dict[int, tuple] = {}
         legmeta: dict[int, tuple] = {}
         per_device: dict[int, tuple[str, ...]] = {}
         device_launches: dict[int, int] = {}
+        redist_dst = {it: dst for it, _src, dst
+                      in getattr(mesh_plan, "redistribution", ())}
+        # item -> mutable D2D leg state (issuer filled at decode completion)
+        d2d_legs: dict[str, dict] = {}
+        d2d_done: dict[str, tuple[int, int, float]] = {}
         try:
             for li, dplan in enumerate(mesh_plan.plans):
                 dev_id = int(mesh_plan.device_ids[li])
@@ -1349,13 +1437,43 @@ class StreamingExecutor:
                         col, spec, dplan.decisions[it].chunk_bytes,
                         items, acq, rel)
                     shard_stage.append((col, spec, sched, device_col, ends))
+                    dst = redist_dst.get(it)
+                    if dst is not None and int(dst) != li:
+                        dst_id, dst_dev = self._d2d_target(mesh_plan, devices,
+                                                           int(dst))
+                        # placeholder item: the worker never reads it until
+                        # on_shard fills the slot and advances the watermark
+                        d_items_list: list = [None]
+                        d_times: dict[str, float] = {}
+                        d2d_legs[it] = {
+                            "items": d_items_list, "dest": [None],
+                            "times": d_times, "src_id": dev_id,
+                            "dst_id": dst_id, "dst_dev": dst_dev,
+                            "filled": False,
+                            "iss": engine.issuer(
+                                d_items_list, dst_dev, d_times,
+                                acq=[False], rel=[False],
+                                name=f"zipflow-d2d-{it}", sync=True)}
+
+                def on_shard(item, rec, _legs=d2d_legs):
+                    ent = _legs.get(item)
+                    if ent is not None:
+                        ent["items"][0] = (item, ent["dest"], 0, rec.array)
+                        ent["filled"] = True
+                        ent["iss"].advance(1)
+
                 iss = engine.issuer(items, dev, {}, acq=acq, rel=rel,
                                     name=f"zipflow-xfer-d{dev_id}")
                 gen = self._device_leg(leg, shard_stage, iss, dplan.window,
-                                       on_ready=on_ready)
+                                       on_ready=on_ready, on_shard=on_shard)
                 tasks[li] = (gen, iss)
                 legmeta[li] = (dev_id, dev, dplan)
             done = engine.drive(tasks)
+            for it, ent in d2d_legs.items():
+                if ent["filled"]:
+                    ent["iss"].wait(1)
+                    d2d_done[it] = (ent["src_id"], ent["dst_id"],
+                                    ent["times"].get(it, 0.0))
         finally:
             engine.close()
         results: dict[str, ColumnExec] = {}
@@ -1372,18 +1490,33 @@ class StreamingExecutor:
                     launches += rec.decode_launches
             for col, spec, rec in recs:
                 launches += rec.decode_launches
-                shard_recs.setdefault(col, []).append((spec, rec, dev_id, dev))
+                ent = d2d_legs.get(rec.name)
+                if ent is not None and ent["filled"]:
+                    copied = ent["dest"][0]
+                    self._observe_d2d_actual(int(copied.nbytes),
+                                             ent["times"].get(rec.name, 0.0))
+                    shard_recs.setdefault(col, []).append(
+                        (spec, dataclasses.replace(rec, array=copied),
+                         ent["dst_id"], ent["dst_dev"]))
+                else:
+                    shard_recs.setdefault(col, []).append(
+                        (spec, rec, dev_id, dev))
             device_launches[dev_id] = launches
             self._observe_link_actuals(
                 dev_id, dplan,
                 list(whole_res.values()) + [r for _, _, r in recs])
         return self._finish_sharded(results, shard_recs, per_device,
-                                    device_launches, mesh_plan, on_ready)
+                                    device_launches, mesh_plan, on_ready,
+                                    d2d_copies=d2d_done)
 
     def _finish_sharded(self, results: dict, shard_recs: dict,
                         per_device: dict, device_launches: dict,
-                        mesh_plan, on_ready=None) -> "MeshRunResult":
-        """Assemble shard outputs (shared by both mesh issue modes)."""
+                        mesh_plan, on_ready=None,
+                        d2d_copies: dict | None = None) -> "MeshRunResult":
+        """Assemble shard outputs (shared by both mesh issue modes).  Shard
+        tuples carry their FINAL device (redistributed shards arrive already
+        copied), so the assembled ``NamedSharding`` reflects the plan's
+        requested placement, not where the bytes landed."""
         for col in sorted(shard_recs):
             lst = sorted(shard_recs[col], key=lambda t: t[0].index)
             recs = [t[1] for t in lst]
@@ -1404,7 +1537,8 @@ class StreamingExecutor:
             if on_ready is not None:
                 on_ready(col)
         return MeshRunResult(columns=results, per_device=per_device,
-                             device_launches=device_launches, plan=mesh_plan)
+                             device_launches=device_launches, plan=mesh_plan,
+                             d2d_copies=dict(d2d_copies or {}))
 
     @staticmethod
     def _assemble_shards(arrs: list, devs: list):

@@ -389,6 +389,18 @@ class GroupChunkLayout:
     resident: tuple[str, ...]     # prologue intermediates span launches consume
     align_groups: int             # group-boundary alignment (lcm of sliced dens)
     group_presum: Any = dataclasses.field(default=None, compare=False)
+    # host-sourced whole buffers: name -> host array staged with the whole
+    # leaves instead of being computed by a prologue (the encoder-emitted
+    # presum table, pushed when the on-device presum scan would force the
+    # value leaf whole-resident -- see the stringdict note in the builder)
+    host_push: dict[str, Any] = dataclasses.field(default_factory=dict,
+                                                  compare=False)
+    # span-time value graft: GP value input -> producer stage index.  The
+    # producer (a gather-capable Fully-Parallel, e.g. bitpack) re-evaluates
+    # inside each span over its SLICED primary leaf instead of materializing
+    # whole in a prologue -- the fusion rule-2 graft, applied late when the
+    # intermediate has a second consumer only the skipped prologue needs
+    span_graft: dict[str, int] = dataclasses.field(default_factory=dict)
 
 
 def _post_stages_ok(graph: DecodeGraph, g_idx: int) -> bool:
@@ -428,11 +440,17 @@ def group_chunk_layout(graph: DecodeGraph) -> GroupChunkLayout | None:
     if cached is not False:
         return cached
     layout = _group_chunk_layout(graph)
+    if layout is None:
+        # second pass: allow span-time value grafts (re-evaluate a gather-
+        # capable producer inside each span) -- only tried when the plain
+        # layout fails, so eligible-today graphs are byte-for-byte unchanged
+        layout = _group_chunk_layout(graph, graft=True)
     graph.__dict__["_group_layout"] = layout
     return layout
 
 
-def _group_chunk_layout(graph: DecodeGraph) -> GroupChunkLayout | None:
+def _group_chunk_layout(graph: DecodeGraph,
+                        graft: bool = False) -> GroupChunkLayout | None:
     stages = graph.stages
     g_idx = -1
     for i, st in enumerate(stages):
@@ -450,6 +468,7 @@ def _group_chunk_layout(graph: DecodeGraph) -> GroupChunkLayout | None:
     axes: dict[str, int] = {}
     align = 1
     resident: list[str] = []
+    span_graft: dict[str, int] = {}
 
     def _resident(name: str) -> None:
         if name in produced_before and name not in resident:
@@ -468,12 +487,56 @@ def _group_chunk_layout(graph: DecodeGraph) -> GroupChunkLayout | None:
         _resident(gst.presum)
         if gst.presum not in produced_before and gst.presum not in leaf_shapes:
             return None          # presum neither computed upstream nor a leaf
+        meta_names = {ms.name for ms in graph.meta_specs}
+        producer = {st.out: i for i, st in enumerate(stages[:g_idx])}
+
+        def _graft_idx(name: str) -> int | None:
+            """Producer stage index when ``name`` can be re-evaluated inside
+            each span over a sliced leaf: a Fully-Parallel at group
+            granularity whose primary input is a 1-D tiled leaf and whose
+            remaining inputs are whole-resident metadata.  FP closures are
+            gather-capable by contract (the same property fusion rule 2
+            relies on), so evaluating one at the span's group indices over an
+            exactly-sliced leaf is bitwise the whole-column value."""
+            gi = producer.get(name)
+            if gi is None:
+                return None
+            p = stages[gi]
+            if not isinstance(p, FullyParallel) or int(p.n_out) != n_groups:
+                return None
+            if (not p.inputs or p.inputs[0] not in leaf_shapes
+                    or len(leaf_shapes[p.inputs[0]]) != 1
+                    or p.specs[0].kind != "tile"):
+                return None
+            if any(sp.kind != "full" for sp in p.specs[1:]):
+                return None
+            if any(i not in leaf_shapes and i not in meta_names
+                   for i in p.inputs[1:]):
+                return None
+            return gi
+
         for name, spec in zip(gst.value_inputs, gst.value_specs):
-            if (name in leaf_shapes and spec.kind == "tile" and not spec.num_op
+            # operand-driven ratios (bitpack's bit_width) slice too: the
+            # schedule builder resolves the operand's value host-side, and
+            # lcm'ing the den into the alignment keeps body-span slices one
+            # shared shape (den=32 word-aligns every 32-group boundary)
+            if (name in leaf_shapes and spec.kind == "tile"
                     and len(leaf_shapes[name]) == 1):
                 sliced[name] = spec
                 axes[name] = 0
                 align = math.lcm(align, int(spec.den))
+                continue
+            gi = None
+            if (graft and spec.kind == "tile" and not spec.num_op
+                    and int(spec.num) == 1 and int(spec.den) == 1):
+                gi = _graft_idx(name)
+            if gi is not None:
+                p = stages[gi]
+                leaf = p.inputs[0]
+                sliced[leaf] = p.specs[0]
+                axes[leaf] = 0
+                align = math.lcm(align, int(p.specs[0].den))
+                span_graft[name] = gi
             else:
                 _resident(name)
         for name in gst.extra_inputs:
@@ -508,8 +571,16 @@ def _group_chunk_layout(graph: DecodeGraph) -> GroupChunkLayout | None:
             return None
     if n_groups <= 1 or not sliced:
         return None
+    # trailing-FP full inputs that are prologue intermediates ride resident too
+    for st in stages[g_idx + 1:]:
+        for name in st.inputs:
+            _resident(name)
     # prologue stages may consume anything EXCEPT a sliced leaf (they run before
-    # chunk 0, over whole buffers); un-slice on conflict
+    # chunk 0, over whole buffers); un-slice on conflict -- UNLESS the prologue
+    # exists only to recompute the presum table the encoder already emitted
+    # host-side (stringdict: the word-length scan reads the index leaf whole to
+    # feed the presum cumsum).  There the host table is pushed with the whole
+    # buffers instead, the prologue never runs, and the leaf stays sliced.
     pro_inputs: set[str] = set()
     for st in stages[:g_idx]:
         if isinstance(st, GroupParallel):
@@ -519,21 +590,33 @@ def _group_chunk_layout(graph: DecodeGraph) -> GroupChunkLayout | None:
                                st.cum_tab))
         else:                    # FullyParallel / Aux
             pro_inputs.update(getattr(st, "inputs", ()))
-    for name in list(sliced):
-        if name in pro_inputs:
+    host_push: dict[str, Any] = {}
+    conflict = [name for name in sliced if name in pro_inputs]
+    if (conflict and isinstance(gst, GroupParallel)
+            and resident == [gst.presum]):
+        prod = next(st for st in stages[:g_idx] if st.out == gst.presum)
+        # cast to the on-device producer's dtype so downstream arithmetic is
+        # bitwise identical to the prologue path it replaces
+        host_push[gst.presum] = np.asarray(presum).astype(
+            np.dtype(prod.out_dtype))
+        resident = []
+    else:
+        for name in conflict:
             del sliced[name]
             axes.pop(name, None)
     if not sliced:
         return None
-    # trailing-FP full inputs that are prologue intermediates ride resident too
-    for st in stages[g_idx + 1:]:
-        for name in st.inputs:
-            _resident(name)
+    # a graft is only sound when its leaf survived conflict resolution and the
+    # intermediate is not ALSO needed resident (a trailing stage consumes it)
+    for nm, gi in span_graft.items():
+        if stages[gi].inputs[0] not in sliced or nm in resident:
+            return None
     whole = tuple([b.name for b in graph.buffers if b.name not in sliced]
-                  + [ms.name for ms in graph.meta_specs])
+                  + [ms.name for ms in graph.meta_specs] + list(host_push))
     return GroupChunkLayout(
         kind="gp" if isinstance(gst, GroupParallel) else "np",
         stage_index=g_idx, n_groups=n_groups, elems_per_group=elems_per_group,
         sliced=dict(sliced), axes=dict(axes), whole=whole,
         resident=tuple(resident), align_groups=align,
-        group_presum=np.asarray(presum, dtype=np.int64))
+        group_presum=np.asarray(presum, dtype=np.int64), host_push=host_push,
+        span_graft=dict(span_graft))

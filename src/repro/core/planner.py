@@ -368,18 +368,39 @@ class MeshExecutionPlan:
     ``scheduler.simulate_stream_multi`` (N links, shared host staging budget)
     and -- mirroring the single-device planner's dominance contract -- is
     <= the naive round-robin AND single-device baselines by construction:
-    both are candidates the assignment search scores."""
+    both are candidates the assignment search scores.
+
+    Two-tier topologies split LANDING from PLACEMENT: ``assignment`` is
+    where each item's bytes stream and decode (minimizing H2D makespan over
+    the measured per-link scales), ``placement`` is where its decoded output
+    must finally reside (the consumer's desired sharding), and
+    ``redistribution`` lists the ``(item, src, dst)`` device->device copy
+    legs that bridge the two over the D2D fabric.  Without a fabric (or
+    without a placement constraint) the three coincide and the plan is
+    exactly the single-tier one."""
 
     n_devices: int
     device_ids: tuple[int, ...]           # logical link -> physical device index
     plans: tuple[ExecutionPlan, ...]      # one per logical device
-    assignment: Mapping[str, int]         # item name -> logical device
+    assignment: Mapping[str, int]         # item name -> LANDING logical device
     shards: Mapping[str, tuple[ShardSpec, ...]]   # column -> its shards
     policy: str                           # winning assignment candidate
     window: int
     modeled_makespan_s: float
     baselines: Mapping[str, float] = dataclasses.field(default_factory=dict)
     topology: LinkTopology = dataclasses.field(default_factory=LinkTopology)
+    # item name -> FINAL logical device (== assignment unless redistributed)
+    placement: Mapping[str, int] = dataclasses.field(default_factory=dict)
+    # (item, src logical, dst logical) D2D copy legs, in plan item order
+    redistribution: tuple[tuple[str, int, int], ...] = ()
+    # the placement constraint the plan was built under (None = unconstrained);
+    # elastic re-planning re-applies it to the suffix
+    placement_policy: str | None = None
+
+    def final_device(self, item: str) -> int:
+        """FINAL logical device of ``item`` (landing device when no
+        redistribution moves it)."""
+        return int(self.placement.get(item, self.assignment.get(item, 0)))
 
     @property
     def items(self) -> tuple[str, ...]:
@@ -400,6 +421,9 @@ class MeshExecutionPlan:
                  f"modeled_makespan={self.modeled_makespan_s * 1e3:.3f}ms"]
         for ref, mk in sorted(self.baselines.items()):
             lines.append(f"  baseline {ref:14s} {mk * 1e3:.3f}ms")
+        for item, src, dst in self.redistribution:
+            lines.append(f"  redistribute {item}: device {src} -> {dst} "
+                         f"(d2d_scale={self.topology.d2d_scale})")
         for d, plan in enumerate(self.plans):
             dev = self.device_ids[d] if d < len(self.device_ids) else d
             lines.append(f"  device {d} (jax device {dev}): "
@@ -471,7 +495,8 @@ def plan_mesh_execution(
         batch_columns: bool = True,
         shard_threshold_bytes: int | None = None,
         device_ids: Sequence[int] | None = None,
-        topology: LinkTopology | None = None) -> MeshExecutionPlan:
+        topology: LinkTopology | None = None,
+        placement: str | None = None) -> MeshExecutionPlan:
     """Assign columns (and group-span shards of oversized columns) to the
     devices of a mesh, minimizing the ``simulate_stream_multi`` makespan.
 
@@ -489,6 +514,19 @@ def plan_mesh_execution(
     round-robin and single-device assignments are ALWAYS scored too, so the
     chosen makespan is <= both baselines by construction -- the same
     dominance contract ``plan_execution`` gives over FIFO/Johnson.
+
+    ``placement="sharded"`` constrains shard ``i`` of every sharded column
+    to FINALLY reside on logical device ``i`` (the canonical layout
+    ``_assemble_shards`` emits as a ``NamedSharding``).  When the topology
+    carries a D2D fabric (``topo.d2d_scale``), the search then decouples
+    landing from placement: free-landing candidates stream each shard over
+    the cheapest host link, decode it where it landed, and pay a modeled
+    fabric copy (priced by ``LinkTopology.d2d_copy_s`` on the shard's
+    DECODED bytes) to reach its required device -- with the pinned
+    decode-in-place assignment ("no-redistribution") always among the
+    scored candidates, so the chosen makespan never exceeds today's plan.
+    Without a fabric the shard items are simply pinned in place and no
+    redistribution is emitted.
     """
     if not isinstance(profiles, Mapping):
         profiles = {p.name: p for p in profiles}
@@ -547,22 +585,58 @@ def plan_mesh_execution(
     if shards:
         item_sets["sharded"] = build_items(True)
 
-    def score(item_set, assign: list[int], serial_issue: bool = False
+    # ------------------------------------------------ placement / redistribution
+    # placement="sharded": shard i of every sharded column must FINALLY sit on
+    # logical device i.  required maps sharded-set job index -> that device;
+    # d2d_equiv prices the shard's DECODED bytes as host-link-equivalent
+    # seconds (the unit LinkTopology.d2d_copy_s converts to fabric time).
+    place_shards = placement == "sharded" and "sharded" in item_sets
+    required: dict[int, int] = {}
+    d2d_equiv: dict[int, float] = {}
+    if place_shards:
+        s_items = item_sets["sharded"][0]
+        specs_by_name = {s.name: s for ss in shards.values() for s in ss}
+        for i, it in enumerate(s_items):
+            spec = specs_by_name.get(it)
+            if spec is None:
+                continue
+            required[i] = spec.index % N
+            p = profiles[spec.column]
+            total_out = int(np.asarray(p.group_out_presum)[-1]) or 1
+            dec_bytes = p.plain_nbytes * spec.n_out / total_out
+            d2d_equiv[i] = (base.decisions[spec.column].est_transfer_s
+                            * dec_bytes / max(p.compressed_nbytes, 1))
+
+    def copies_for(key: str, assign: list[int]) -> list[tuple[int, float]]:
+        """D2D copy jobs an assignment implies: one fabric copy per shard
+        whose landing device differs from its required placement."""
+        if not (place_shards and key == "sharded" and topo.has_fabric):
+            return []
+        return [(i, topo.d2d_copy_s(d2d_equiv[i]))
+                for i, r in required.items() if assign[i] != r]
+
+    def score(key: str, assign: list[int], serial_issue: bool = False
               ) -> float:
-        _, jobs, infos, _ = item_set
+        _, jobs, infos, _ = item_sets[key]
         mk, _ = scheduler.simulate_stream_multi(
             jobs, infos, assign, n_links=N, window=base.window,
             link_scale=topo.link_scale, link_latency_s=topo.link_latency_s,
-            host_window=topo.host_window, serial_issue=serial_issue)
+            host_window=topo.host_window, serial_issue=serial_issue,
+            d2d_copies=copies_for(key, assign))
         return mk
 
-    def lpt(item_set) -> list[int]:
+    def lpt(key: str, pinned: Mapping[int, int] | None = None) -> list[int]:
         """Greedy longest-processing-time-first onto the least-loaded link
-        (loads in link-scaled time so slow links get less work)."""
-        _, jobs, _, _ = item_set
+        (loads in link-scaled time so slow links get less work); ``pinned``
+        items are pre-placed and only contribute load."""
+        _, jobs, _, _ = item_sets[key]
         load = [0.0] * N
         assign = [0] * len(jobs)
-        order = sorted(range(len(jobs)),
+        for i, d in (pinned or {}).items():
+            assign[i] = d
+            load[d] += jobs[i].transfer_s * topo.scale(d) + jobs[i].decompress_s
+        order = sorted((i for i in range(len(jobs))
+                        if not pinned or i not in pinned),
                        key=lambda i: -(jobs[i].transfer_s
                                        + jobs[i].decompress_s))
         for i in order:
@@ -571,30 +645,37 @@ def plan_mesh_execution(
             load[d] += jobs[i].transfer_s * topo.scale(d) + jobs[i].decompress_s
         return assign
 
-    def exchange(item_set, assign: list[int]) -> list[int]:
+    def exchange(key: str, assign: list[int],
+                 frozen: Mapping[int, int] | None = None) -> list[int]:
         """Local move/swap refinement: accept any single-item move or pairwise
-        swap that lowers the simulated makespan; bounded passes."""
+        swap that lowers the simulated makespan; bounded passes.  ``frozen``
+        items never move (pinned decode-in-place shards)."""
         best = list(assign)
-        best_mk = score(item_set, best)
+        best_mk = score(key, best)
         n_items = len(best)
+        fro = frozen or {}
         for _ in range(3):                       # passes; usually converges in 1
             improved = False
             for i in range(n_items):
+                if i in fro:
+                    continue
                 for d in range(N):
                     if d == best[i]:
                         continue
                     cand = list(best)
                     cand[i] = d
-                    mk = score(item_set, cand)
+                    mk = score(key, cand)
                     if mk < best_mk - 1e-15:
                         best, best_mk, improved = cand, mk, True
             for i in range(n_items):
+                if i in fro:
+                    continue
                 for j in range(i + 1, n_items):
-                    if best[i] == best[j]:
+                    if j in fro or best[i] == best[j]:
                         continue
                     cand = list(best)
                     cand[i], cand[j] = cand[j], cand[i]
-                    mk = score(item_set, cand)
+                    mk = score(key, cand)
                     if mk < best_mk - 1e-15:
                         best, best_mk, improved = cand, mk, True
             if not improved:
@@ -606,12 +687,27 @@ def plan_mesh_execution(
     n_whole = len(whole_set[0])
     candidates["round-robin"] = ("whole", [i % N for i in range(n_whole)])
     candidates["single-device"] = ("whole", [0] * n_whole)
-    for key, item_set in item_sets.items():
-        a = lpt(item_set)
-        candidates[f"lpt-{key}"] = (key, a)
-        candidates[f"lpt-{key}+exchange"] = (key, exchange(item_set, a))
+    for key in item_sets:
+        if place_shards and key == "sharded":
+            # decode-in-place baseline: shards pinned to their required
+            # device (exactly today's plan) -- ALWAYS scored, so a
+            # redistribute candidate wins only when its modeled makespan,
+            # fabric copies included, beats it
+            a = lpt(key, pinned=required)
+            candidates["no-redistribution"] = (key, a)
+            candidates["no-redistribution+exchange"] = (
+                key, exchange(key, a, frozen=required))
+            if topo.has_fabric:
+                f = lpt(key)
+                candidates[f"lpt-{key}+redistribute"] = (key, f)
+                candidates[f"lpt-{key}+redistribute+exchange"] = (
+                    key, exchange(key, f))
+        else:
+            a = lpt(key)
+            candidates[f"lpt-{key}"] = (key, a)
+            candidates[f"lpt-{key}+exchange"] = (key, exchange(key, a))
 
-    scored = {label: score(item_sets[key], a)
+    scored = {label: score(key, a)
               for label, (key, a) in candidates.items()}
     chosen = min(scored, key=lambda lbl: (scored[lbl], lbl))
     set_key, assign = candidates[chosen]
@@ -619,10 +715,12 @@ def plan_mesh_execution(
     # overlapped-issue makespan the executor now delivers vs. what the same
     # plan cost when one host thread walked devices sequentially -- recorded
     # as a baseline so fig21's async_overlap rows have a modeled counterpart
-    scored["serial-issue"] = score(item_sets[set_key], assign,
-                                   serial_issue=True)
+    scored["serial-issue"] = score(set_key, assign, serial_issue=True)
     items, jobs, infos, decisions = item_sets[set_key]
     chosen_shards = shards if set_key == "sharded" else {}
+    copies = copies_for(set_key, assign)
+    redistribution = tuple((items[i], int(assign[i]), int(required[i]))
+                           for i, _ in copies)
 
     # ------------------------------------------------------- per-device plans
     assignment = dict(zip(items, assign))
@@ -648,8 +746,13 @@ def plan_mesh_execution(
             modeled_makespan_s=local_mk))
     dev_ids = (tuple(int(x) for x in device_ids) if device_ids is not None
                else tuple(range(N)))
+    placement_map = dict(assignment)
+    for it, _src, dst in redistribution:
+        placement_map[it] = dst
     return MeshExecutionPlan(
         n_devices=N, device_ids=dev_ids, plans=tuple(plans),
         assignment=assignment, shards=chosen_shards, policy=chosen,
         window=base.window, modeled_makespan_s=scored[chosen],
-        baselines=dict(scored), topology=topo)
+        baselines=dict(scored), topology=topo,
+        placement=placement_map, redistribution=redistribution,
+        placement_policy=placement)

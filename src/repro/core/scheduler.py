@@ -269,7 +269,8 @@ def simulate_stream_multi(jobs: Sequence[Job],
                           link_scale: Sequence[float] = (),
                           link_latency_s: Sequence[float] = (),
                           host_window: int | None = None,
-                          serial_issue: bool = False
+                          serial_issue: bool = False,
+                          d2d_copies: Sequence[tuple[int, float]] | None = None
                           ) -> tuple[float, list[float]]:
     """``simulate_stream_finish`` over N independent host->device links.
 
@@ -298,6 +299,17 @@ def simulate_stream_multi(jobs: Sequence[Job],
     time), so the N flow shops degenerate into a chain.  Comparing the two
     modes on the SAME assignment prices exactly what concurrent per-device
     issuance (``run_sharded(concurrent=True)``) buys.
+
+    ``d2d_copies`` models the REBALANCE phase of a two-tier topology: each
+    ``(job_idx, copy_s)`` is a device->device copy of job ``job_idx``'s
+    decoded output over the D2D fabric, ready the moment that job's decode
+    finishes.  The fabric is one serial machine (NVLink-class links are
+    full-duplex but a single engine drives the copies here, matching the
+    executor's one-``device_put``-at-a-time issuance per leg): copies are
+    processed in ready order, each extending that job's finish time, and
+    they OVERLAP all remaining H2D transfers and decodes on other jobs --
+    only the copied job's completion (and hence possibly the makespan)
+    moves.  ``None``/empty reduces exactly to the single-tier model.
     """
     order = list(range(len(jobs))) if order is None else list(order)
     infos = [ChunkInfo()] * len(jobs) if infos is None else list(infos)
@@ -310,6 +322,21 @@ def simulate_stream_multi(jobs: Sequence[Job],
            for d in range(L)]
     w = None if window is None else max(1, int(window))
     hw = None if host_window is None else max(1, int(host_window))
+
+    def rebalance(makespan: float, job_finish: list[float]
+                  ) -> tuple[float, list[float]]:
+        # D2D rebalance phase: one serial fabric machine, copies ready at
+        # their job's decode completion, processed earliest-ready first.
+        if not d2d_copies:
+            return makespan, job_finish
+        pend = sorted(((job_finish[i], k) for k, (i, _) in
+                       enumerate(d2d_copies) if 0 <= i < len(job_finish)))
+        t_fab = 0.0
+        for ready, k in pend:
+            i, copy_s = d2d_copies[k]
+            t_fab = max(t_fab, ready) + max(0.0, float(copy_s))
+            job_finish[i] = max(job_finish[i], t_fab)
+        return max([makespan] + job_finish), job_finish
 
     # expand jobs into per-link chunk queues (transfer_s, decode_s, holds_slot)
     queues: list[list[tuple[int, float, float, bool]]] = [[] for _ in range(L)]
@@ -354,7 +381,7 @@ def simulate_stream_multi(jobs: Sequence[Job],
             dev_done[d] = t_d
             if queues[d]:
                 t_prev = t_d
-        return max(dev_done), job_finish
+        return rebalance(max(dev_done), job_finish)
 
     t_link = [0.0] * L
     t_dev = [0.0] * L
@@ -398,7 +425,7 @@ def simulate_stream_multi(jobs: Sequence[Job],
             if hw is not None:
                 heapq.heappush(held, t_dev[d])
         job_finish[idx] = t_dev[d]
-    return max(t_dev), job_finish
+    return rebalance(max(t_dev), job_finish)
 
 
 # ------------------------------------------------------- scheduling policies

@@ -126,6 +126,10 @@ class WaveReport:
     preempted: int = 0                   # point requests serviced mid-wave
     devices: tuple[int, ...] = ()        # mesh waves: device ids spanned
     device_launches: dict[int, int] = dataclasses.field(default_factory=dict)
+    # mesh waves with a D2D fabric: executed redistribution legs,
+    # item -> (src physical device, dst physical device, copy seconds)
+    d2d_copies: dict[str, tuple[int, int, float]] = dataclasses.field(
+        default_factory=dict)
 
 
 class ServePlanner:
@@ -139,7 +143,7 @@ class ServePlanner:
 
     def __init__(self, executor: StreamingExecutor | None = None,
                  policy: str = "shared", max_wave: int | None = None,
-                 mesh: int | None = None):
+                 mesh: int | None = None, placement: str | None = None):
         if policy not in ("shared", "slo", "fifo-per-query"):
             raise ValueError(f"unknown serve policy {policy!r}; known: "
                              "shared, slo, fifo-per-query")
@@ -148,8 +152,12 @@ class ServePlanner:
         self.max_wave = max_wave
         # mesh=N: waves span N devices -- the union plan re-partitions through
         # plan_mesh_execution and runs via run_sharded (per-device launch
-        # accounting lands in WaveReport.device_launches)
+        # accounting lands in WaveReport.device_launches).  placement="sharded"
+        # additionally pins each column shard's FINAL device, letting the
+        # planner land bytes on fast links and rebalance over the D2D fabric
+        # (executed legs land in WaveReport.d2d_copies)
         self.mesh = mesh
+        self.placement = placement
         self._lock = threading.Lock()
         self._pending: deque[ServeRequest] = deque()
         self._served: deque[ServeRequest] = deque()   # preemptive completions
@@ -335,7 +343,7 @@ class ServePlanner:
                     profiles = {n: ex.column_profile(n) for n in encs}
                     mesh_ep = planner_mod.plan_mesh_execution(
                         profiles, ex.cost_model, n_devices=int(self.mesh),
-                        window=ep.window)
+                        window=ep.window, placement=self.placement)
                     report.chosen = f"mesh:{mesh_ep.policy}"
                     report.candidates["mesh"] = mesh_ep.modeled_makespan_s
                     report.shared_makespan_s = mesh_ep.modeled_makespan_s
@@ -343,6 +351,7 @@ class ServePlanner:
                     mres = ex.run_sharded(mesh_ep, on_ready=on_ready)
                     results = mres.columns
                     report.device_launches = dict(mres.device_launches)
+                    report.d2d_copies = dict(mres.d2d_copies)
                 else:
                     results = ex.run(
                         encs, plan=ep,

@@ -116,11 +116,14 @@ class ColumnPipeline:
                  policy: str = "chunk-johnson",
                  executor: StreamingExecutor | None = None,
                  cost_model=None, mesh: int | None = None,
-                 async_dispatch: bool = False):
+                 async_dispatch: bool = False, placement: str | None = None):
         self.plans = plans
         # mesh=N enables topology-aware multi-device planning: run_sharded()
-        # partitions columns (and group-span shards) over N devices
+        # partitions columns (and group-span shards) over N devices;
+        # placement="sharded" pins each shard's FINAL device so the planner
+        # may land bytes elsewhere and rebalance over the D2D fabric tier
         self.mesh = mesh
+        self.placement = placement
         # async_dispatch=True moves host->device puts onto a per-link transfer
         # worker thread (core.executor.DispatchEngine) so issuance overlaps
         # decode dispatch instead of blocking between launches
@@ -224,6 +227,7 @@ class ColumnPipeline:
                     for name in self._encoded}
         kw.setdefault("chunk_bytes", self.chunk_bytes)
         kw.setdefault("policy", self.policy)
+        kw.setdefault("placement", self.placement)
         return planner_mod.plan_mesh_execution(
             profiles, self.executor.cost_model, n_devices=n, **kw)
 

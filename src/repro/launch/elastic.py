@@ -77,7 +77,10 @@ def replan_suffix(mesh_plan, done, surviving_device_ids, cost_model, profiles,
     ``done`` names the columns already decoded (their shards count as done
     when the parent column is done); everything else re-plans from scratch
     over ``surviving_device_ids`` with the cost model's topology resized to
-    the new link count -- completed work is never moved or repeated.  Returns
+    the new link count -- completed work is never moved or repeated.  The
+    original plan's placement constraint (and with it any D2D rebalance
+    legs) is re-applied to the suffix, so a redistribution-tier plan keeps
+    its landing-vs-placement split across the elasticity event.  Returns
     the new ``MeshExecutionPlan`` over the remaining columns (None when
     nothing is left)."""
     from repro.core import planner as planner_mod
@@ -90,6 +93,8 @@ def replan_suffix(mesh_plan, done, surviving_device_ids, cost_model, profiles,
     if not ids:
         raise RuntimeError("cannot re-plan decode onto zero devices")
     topo = mesh_plan.topology.resized(len(ids))
+    plan_kwargs.setdefault(
+        "placement", getattr(mesh_plan, "placement_policy", None))
     return planner_mod.plan_mesh_execution(
         {c: profiles[c] for c in remaining}, cost_model,
         n_devices=len(ids), device_ids=ids, topology=topo,

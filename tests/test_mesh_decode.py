@@ -3,16 +3,21 @@
 In-process tests need no devices: they pin the ``simulate_stream_multi``
 model (exact reduction to the single-link simulator at N=1), the mesh
 planner's assignment-dominance contract (chosen makespan <= round-robin and
-single-device BY CONSTRUCTION -- both are scored candidates), and the
+single-device BY CONSTRUCTION -- both are scored candidates), the
 ``LinkTopology`` persistence round-trip (unknown keys tolerated, so old JSON
-caches keep loading).
+caches keep loading; pre-D2D topology blocks load with the fabric OFF), the
+``observe_d2d`` fabric EWMA, and the D2D redistribution contract under
+``placement="sharded"`` (decode-in-place always scored, so redistribution
+wins only when its makespan -- fabric copies included -- beats it).
 
 The multi-device execution paths -- bitwise equality of sharded vs
 single-device decode (including a group-span-sharded column), elastic
-re-planning on simulated device loss, and a ``ServePlanner`` wave spanning
-two devices -- need >1 jax device, and XLA's host-device count is locked at
-first init, so they run in a subprocess with forced host devices (the same
-pattern tests/test_elastic.py uses).
+re-planning on simulated device loss, a ``ServePlanner`` wave spanning
+two devices, and fabric-rebalanced execution (D2D legs through the dispatch
+engine, final ``NamedSharding`` on the requested placement) -- need >1 jax
+device, and XLA's host-device count is locked at first init, so they run in
+a subprocess with forced host devices (the same pattern
+tests/test_elastic.py uses).
 """
 import json
 import os
@@ -206,6 +211,114 @@ def test_link_topology_load_ignores_unknown_keys(tmp_path):
     assert resized.n_links == 3 and resized.scale(1) == pytest.approx(2.0)
 
 
+def test_d2d_topology_roundtrip(tmp_path):
+    """Fabric tier persists through save/load; topology blocks written BEFORE
+    the D2D tier existed load with the fabric OFF (d2d_copy_s -> inf, so the
+    planner never proposes redistribution from a stale cache)."""
+    cm = CostModel()
+    cm.topology = LinkTopology(n_links=2, link_scale=(1.0, 2.0),
+                               d2d_scale=0.12, d2d_latency_s=3e-5)
+    path = tmp_path / "cm.json"
+    cm.save(str(path))
+    cm2 = CostModel.load(str(path))
+    assert cm2.topology == cm.topology and cm2.topology.has_fabric
+    assert cm2.topology.d2d_copy_s(1.0) == pytest.approx(0.12 + 3e-5)
+    data = json.loads(path.read_text())
+    for k in ("d2d_scale", "d2d_latency_s"):
+        data["topology"].pop(k, None)
+    path.write_text(json.dumps(data))
+    cm3 = CostModel.load(str(path))
+    assert cm3.topology.d2d_scale is None and not cm3.topology.has_fabric
+    assert cm3.topology.d2d_copy_s(1.0) == float("inf")
+    assert cm3.topology.scale(1) == pytest.approx(2.0)  # link tier survived
+
+
+def test_observe_d2d_updates_fabric_ewma():
+    """Invalid D2D samples are dropped; the first valid one SEEDS the fabric
+    scale (turning the tier on), later ones blend with the EWMA alpha."""
+    cm = CostModel()
+    assert not cm.topology.has_fabric
+    for bad in (float("nan"), float("inf"), -1.0, 0.0):
+        cm.observe_d2d(bad)
+    assert not cm.topology.has_fabric, "invalid samples must not seed"
+    cm.observe_d2d(0.2)
+    assert cm.topology.d2d_scale == pytest.approx(0.2)
+    cm.observe_d2d(0.4)
+    assert cm.topology.d2d_scale == pytest.approx(
+        0.2 + cm.alpha * (0.4 - 0.2))
+    cm.observe_d2d(float("nan"))     # still dropped after seeding
+    assert cm.topology.d2d_scale == pytest.approx(
+        0.2 + cm.alpha * (0.4 - 0.2))
+    # the pricing unit the samples are expressed in: calibrated host-link s
+    assert cm.h2d_equiv_s(10_000_000) > cm.h2d_equiv_s(1_000) > 0.0
+    assert cm.h2d_equiv_s(0) == 0.0
+
+
+@pytest.mark.parametrize("n_devices", [2, 4])
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_redistribute_never_loses_to_decode_in_place(n_devices, seed):
+    """placement="sharded" with a fabric: decode-in-place (shards pinned to
+    their required device) is ALWAYS a scored candidate, so the chosen plan
+    -- fabric copies included -- can only tie or beat it; every proposed leg
+    bridges landing to the required placement."""
+    profiles = _profiles(seed=seed)
+    cm = CostModel()
+    for p in profiles.values():
+        cm.register(p)
+    skew = tuple(4.0 if i == 0 else 1.0 for i in range(n_devices))
+    topo = LinkTopology(n_links=n_devices, link_scale=skew, d2d_scale=0.1)
+    mp = plan_mesh_execution(profiles, cm, n_devices=n_devices,
+                             shard_threshold_bytes=0, topology=topo,
+                             placement="sharded")
+    assert mp.placement_policy == "sharded"
+    assert "no-redistribution" in mp.baselines
+    assert mp.modeled_makespan_s <= mp.baselines["no-redistribution"] + 1e-12
+    assert mp.modeled_makespan_s == pytest.approx(
+        min(mp.baselines[k] for k in mp.baselines if k != "serial-issue"),
+        abs=1e-12)
+    for item, src, dst in mp.redistribution:
+        assert mp.assignment[item] == src and src != dst
+        assert mp.placement[item] == dst == mp.final_device(item)
+        spec = next(s for ss in mp.shards.values() for s in ss
+                    if s.name == item)
+        assert dst == spec.index % n_devices
+    for specs in mp.shards.values():
+        for s in specs:                 # placement honored for EVERY shard
+            assert mp.final_device(s.name) == s.index % n_devices
+    # no fabric -> redistribution never proposed; any sharded item decodes
+    # exactly where it must finally sit
+    mp2 = plan_mesh_execution(
+        profiles, cm, n_devices=n_devices, shard_threshold_bytes=0,
+        topology=LinkTopology(n_links=n_devices, link_scale=skew),
+        placement="sharded")
+    assert not mp2.redistribution
+    for specs in mp2.shards.values():
+        for s in specs:
+            assert mp2.assignment[s.name] == s.index % n_devices
+
+
+def test_skewed_link_with_fabric_prefers_redistribution():
+    """One 6x-slow host link + a cheap fabric: streaming a pinned shard's
+    bytes over the slow link costs more than landing them on a fast link and
+    paying one fabric copy -- the plan must carry D2D legs and model a
+    strictly better makespan than decode-in-place."""
+    profiles = _profiles(n=6, seed=5)
+    cm = CostModel()
+    for p in profiles.values():
+        cm.register(p)
+    topo = LinkTopology(n_links=4, link_scale=(6.0, 1.0, 1.0, 1.0),
+                        d2d_scale=0.05)
+    mp = plan_mesh_execution(profiles, cm, n_devices=4,
+                             shard_threshold_bytes=0, topology=topo,
+                             placement="sharded")
+    assert mp.redistribution, "cheap fabric should beat the 6x link"
+    assert mp.modeled_makespan_s < mp.baselines["no-redistribution"] - 1e-12
+    assert "redistribute" in mp.policy
+    # the legs drain the slow link: no redistributed shard STAYS on link 0
+    for item, src, dst in mp.redistribution:
+        assert mp.assignment[item] == src != dst
+
+
 def test_replan_suffix_repartitions_remaining():
     """Device loss mid-stream: completed columns never move; the suffix
     re-plans over the survivors with the topology resized."""
@@ -249,11 +362,17 @@ cols = {
                            rng.integers(0, 60, 30_000).astype(np.int32)]),
     "rle": np.repeat(rng.integers(0, 50, 400),
                      rng.integers(1, 90, 400)).astype(np.int32),
+    # dictionary-fed presum with a bit-packed index leaf: group-streams via
+    # the host-pushed presum + span-graft layout
+    "sdbp": np.frombuffer(b"the quick brown fox jumps. " * 1500,
+                          dtype=np.uint8).copy(),
     "small0": rng.integers(0, 9, 5_000).astype(np.int32),
     "small1": rng.integers(0, 9, 5_000).astype(np.int32),
 }
 plans = {"big": P.Plan("ans", params={"chunk_size": 512}),
          "rle": P.make_plan("rle"),
+         "sdbp": P.Plan("stringdict",
+                        children={"index": P.make_plan("bitpack")}),
          "small0": P.Plan("ans", params={"chunk_size": 512}),
          "small1": P.Plan("ans", params={"chunk_size": 512})}
 encs = {n: P.encode(plans[n], a) for n, a in cols.items()}
@@ -310,6 +429,42 @@ np.testing.assert_array_equal(np.asarray(served["q2"].arrays["rle"]),
 rep = sp.reports[-1]
 assert rep.chosen.startswith("mesh:"), rep.chosen
 assert len(rep.devices) == 2 and rep.device_launches, rep
+
+# D2D redistribution: slow host link 0 + cheap fabric, shards pinned to their
+# logical device -- decode lands where the links are fast, fabric copies
+# bridge to the requested placement; result stays bitwise identical
+from repro.core.costmodel import LinkTopology
+topo = LinkTopology(n_links=4, link_scale=(6.0, 1.0, 1.0, 1.0),
+                    d2d_scale=0.05)
+mp3 = planner.plan_mesh_execution(profiles, ex.cost_model, n_devices=4,
+                                  shard_threshold_bytes=0, topology=topo,
+                                  placement="sharded")
+assert mp3.redistribution, "skewed link + cheap fabric should rebalance"
+res3 = ex.run_sharded(mp3, encs)
+for n in encs:
+    np.testing.assert_array_equal(np.asarray(res3[n].array), refs[n],
+                                  err_msg=n)
+# every executed leg matches a plan leg, physical src != dst, copy timed
+legs = {it: (src, dst) for it, src, dst in mp3.redistribution}
+assert set(res3.d2d_copies) == set(legs), (res3.d2d_copies, legs)
+for it, (src_id, dst_id, secs) in res3.d2d_copies.items():
+    want_src, want_dst = legs[it]
+    assert src_id == mp3.device_ids[want_src], it
+    assert dst_id == mp3.device_ids[want_dst], it
+    assert src_id != dst_id and secs >= 0.0
+# assembled shards sit on the REQUESTED placement devices, and even-size
+# sharded columns carry the matching NamedSharding over those devices
+devs = jax.devices()
+for col, specs in mp3.shards.items():
+    rec = res3[col]
+    want = tuple(int(mp3.device_ids[mp3.final_device(s.name)])
+                 for s in specs)
+    assert rec.shard_devices == want, (col, rec.shard_devices, want)
+    if len({s.n_out for s in specs}) == 1:
+        mesh_devs = list(rec.array.sharding.mesh.devices.flat)
+        assert [d.id for d in mesh_devs] == list(want), col
+# the measured copies seeded/updated the fabric EWMA
+assert ex.cost_model.topology.has_fabric
 print("MESH_OK")
 """
 

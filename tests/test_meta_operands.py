@@ -115,32 +115,35 @@ def test_non_chunkable_nestings_fall_back(rng):
     """Graphs with neither an element nor a group chunk layout fall back to one
     whole-column launch -- still bitwise-correct.
 
-    rle with bit-packed leaves has nothing group-sliceable (the packed counts
-    feed the presum prologue whole, the packed values ride as an operand-ratio
-    tile), and delta's cumsum is whole-array: both report CHUNK_NONE.  Plain
-    ANS *is* group-chunkable now -- covered in tests/test_group_chunk.py."""
+    delta's cumsum is whole-array: CHUNK_NONE.  rle with bit-packed leaves
+    used to be stuck here too (the packed values ride an operand-ratio tile
+    the layout rejected); operand-ratio slicing now streams it -- pinned as
+    the contrast case.  Plain ANS is covered in tests/test_group_chunk.py."""
+    from repro.core.ir import CHUNK_GROUP as CG
     from repro.core.patterns import GroupParallel
 
-    cases = {
-        "rle": (P.Plan("rle", children={"counts": mp("bitpack"),
-                                        "values": mp("bitpack")}),
-                np.repeat(rng.integers(0, 50, 300), rng.integers(1, 60, 300))
-                .astype(np.int32)),
-        "delta": (P.Plan("delta", children={"deltas": mp("bitpack")}),
-                  np.cumsum(rng.integers(0, 4, 30_000)).astype(np.int32)),
-    }
     ex = StreamingExecutor(chunk_bytes=1024, chunk_decode=True,
                            cache=ProgramCache())
-    for name, (plan, arr) in cases.items():
-        enc = P.encode(plan, arr)
-        ex.compile(name, enc)
-        assert ex.graph(name).chunkability == CHUNK_NONE, name
-        assert ex.chunk_schedule(name) is None, name
-        res = ex.run({name: enc})[name]
-        assert not res.chunk_decoded and res.decode_launches == 1
-        np.testing.assert_array_equal(np.asarray(res.array), arr, err_msg=name)
+    arr_d = np.cumsum(rng.integers(0, 4, 30_000)).astype(np.int32)
+    enc_d = P.encode(P.Plan("delta", children={"deltas": mp("bitpack")}), arr_d)
+    ex.compile("delta", enc_d)
+    assert ex.graph("delta").chunkability == CHUNK_NONE
+    assert ex.chunk_schedule("delta") is None
+    res = ex.run({"delta": enc_d})["delta"]
+    assert not res.chunk_decoded and res.decode_launches == 1
+    np.testing.assert_array_equal(np.asarray(res.array), arr_d)
+
+    arr_r = np.repeat(rng.integers(0, 5000, 2001),
+                      rng.integers(1, 60, 2001)).astype(np.int32)
+    enc_r = P.encode(P.Plan("rle", children={"counts": mp("bitpack"),
+                                             "values": mp("bitpack")}), arr_r)
+    ex.compile("rle", enc_r)
+    assert ex.graph("rle").chunkability == CG
+    res = ex.run({"rle": enc_r})["rle"]
+    assert res.chunk_decoded and res.decode_launches > 1
+    np.testing.assert_array_equal(np.asarray(res.array), arr_r)
     gp = [s for s in ex.graph("rle").stages if isinstance(s, GroupParallel)]
-    assert gp and gp[0].chunkability == CHUNK_GROUP
+    assert gp and gp[0].chunkability == CG
 
 
 def test_chunk_programs_shared_across_columns(rng):
